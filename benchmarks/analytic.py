@@ -1,0 +1,59 @@
+"""Analytic MODEL_FLOPS (the 6ND / 2ND convention) per (arch x shape).
+
+N = parameters that participate in matmuls: total params minus embedding
+tables/positions, plus the LM-head matrix (once — tied or not), with routed
+MoE expert weights scaled by top_k/n_experts (active experts only).
+Attention score/value FLOPs and remat recompute are intentionally excluded —
+the MODEL_FLOPS/HLO_FLOPS ratio in the roofline table surfaces exactly that
+overhead (brief: "how much of compiled compute is useful").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import model as M
+from repro.models.common import pad_vocab
+
+
+def _sizes_by_path(cfg: ModelConfig, max_seq: int):
+    shapes = jax.eval_shape(lambda k: M.init(k, cfg, max_seq),
+                            jax.random.PRNGKey(0))
+    flat, _ = jax.tree.flatten_with_path(shapes)
+    out = []
+    for path, sd in flat:
+        keys = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(("/".join(keys), sd.size))
+    return out
+
+
+def param_counts(cfg: ModelConfig, max_seq: int = 4096):
+    total = emb = routed = 0
+    for path, size in _sizes_by_path(cfg, max_seq):
+        total += size
+        if path.startswith("embed/tok") or path.startswith("embed/pos"):
+            emb += size
+        if "/moe/experts/" in path:
+            routed += size
+    head = pad_vocab(cfg.vocab) * cfg.d_model  # logits matmul params
+    mm_total = total - emb + head
+    active = mm_total
+    if cfg.moe is not None and routed:
+        active = mm_total - routed + routed * cfg.moe.top_k / cfg.moe.n_experts
+    return {"total": total, "matmul": mm_total, "active": active,
+            "routed": routed, "embed": emb}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg) -> float:
+    """Global useful FLOPs for one step of this cell."""
+    n = param_counts(cfg, max_seq=shape.seq_len)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

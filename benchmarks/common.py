@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: profiles, timing, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# quick: CI-friendly (~minutes); paper: the paper's experimental protocol.
+PROFILE = os.environ.get("REPRO_BENCH_PROFILE", "quick")
+
+
+def prof(quick, paper):
+    return paper if PROFILE == "paper" else quick
+
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def mean_sem(xs):
+    xs = np.asarray(xs, dtype=np.float64)
+    sem = xs.std(ddof=1) / np.sqrt(len(xs)) if len(xs) > 1 else 0.0
+    return float(xs.mean()), float(sem)

@@ -1,0 +1,256 @@
+"""Paper-figure benchmarks (one function per paper table/figure).
+
+Each reproduces the corresponding experimental protocol of Section 6 /
+appendices; `REPRO_BENCH_PROFILE=paper` runs the full published sizes, the
+default `quick` profile shrinks horizons/reps (same distributions) for CI.
+Rows: name,us_per_call,derived (derived = accuracies etc.).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies as pol
+from repro.core import solver
+from repro.core.values import Env, derive
+from repro.sim import (
+    DelayConfig,
+    SimConfig,
+    corrupt_precision_recall,
+    env_from_precision_recall,
+    realworld_instance,
+    simulate,
+    uniform_instance,
+)
+from repro.sim.simulator import simulate_delayed
+from benchmarks.common import emit, mean_sem, prof
+
+
+def _run_policy(key, env, policy, cfg, **kw):
+    t0 = time.perf_counter()
+    res = simulate(key, env, policy, cfg, **kw)
+    acc = float(res.accuracy)
+    return acc, (time.perf_counter() - t0) * 1e6
+
+
+def fig2_greedy_vs_lds():
+    """Fig. 2: discrete policies without CIS vs the continuous optimum."""
+    R = 100
+    T = prof(100, 1000)
+    reps = prof(5, 20)
+    for m in prof([100, 300], [100, 200, 300, 500, 1000]):
+        cfg = SimConfig(dt=1.0 / R, n_steps=R * T)
+        accs = {"greedy": [], "lds": [], "baseline": []}
+        us = 0.0
+        for r in range(reps):
+            key = jax.random.PRNGKey(1000 + r)
+            env = uniform_instance(key, m, with_cis=False)
+            sol = solver.solve_continuous_nocis(env, R)
+            accs["baseline"].append(float(sol.objective))
+            a, t = _run_policy(jax.random.fold_in(key, 1), env, pol.GREEDY, cfg)
+            accs["greedy"].append(a)
+            us += t
+            a, _ = _run_policy(jax.random.fold_in(key, 2), env, pol.LDS, cfg,
+                               lds_rates=sol.rate)
+            accs["lds"].append(a)
+        d = ";".join(f"{k}={mean_sem(v)[0]:.4f}+-{mean_sem(v)[1]:.4f}"
+                     for k, v in accs.items())
+        emit(f"fig2/m{m}", us / reps, d)
+
+
+def fig3_partial_cis():
+    """Fig. 3: GREEDY vs GREEDY-CIS under partially observable changes."""
+    R = 100
+    T = prof(100, 1000)
+    reps = prof(5, 20)
+    for m in prof([100, 300], [100, 200, 300, 500, 1000]):
+        cfg = SimConfig(dt=1.0 / R, n_steps=R * T)
+        accs = {"greedy": [], "greedy_cis": [], "baseline_cis": []}
+        us = 0.0
+        for r in range(reps):
+            key = jax.random.PRNGKey(2000 + r)
+            env = uniform_instance(key, m, with_cis=True,
+                                   nu_range=(0.0, 0.0))  # no false positives
+            sol = solver.solve_continuous(env, R)
+            accs["baseline_cis"].append(float(sol.objective))
+            a, t = _run_policy(jax.random.fold_in(key, 1), env, pol.GREEDY, cfg)
+            accs["greedy"].append(a)
+            a, t2 = _run_policy(jax.random.fold_in(key, 2), env,
+                                pol.GREEDY_CIS, cfg)
+            accs["greedy_cis"].append(a)
+            us += t2
+        d = ";".join(f"{k}={mean_sem(v)[0]:.4f}+-{mean_sem(v)[1]:.4f}"
+                     for k, v in accs.items())
+        emit(f"fig3/m{m}", us / reps, d)
+
+
+def fig4_noisy_cis():
+    """Fig. 4: noisy CIS (false positives) — all policies, m sweep."""
+    R = 100
+    T = prof(50, 1000)
+    reps = prof(3, 20)
+    policies = [pol.GREEDY, pol.GREEDY_CIS, pol.GREEDY_NCIS,
+                pol.G_NCIS_APPROX_1, pol.G_NCIS_APPROX_2]
+    for m in prof([100, 300, 1000], [100, 200, 500, 750, 1000, 10000]):
+        cfg = SimConfig(dt=1.0 / R, n_steps=R * T)
+        accs = {p: [] for p in policies}
+        accs["baseline"] = []
+        us = 0.0
+        for r in range(reps):
+            key = jax.random.PRNGKey(3000 + r)
+            env = uniform_instance(key, m)
+            sol = solver.solve_continuous(env, R)
+            accs["baseline"].append(float(sol.objective))
+            for i, p in enumerate(policies):
+                a, t = _run_policy(jax.random.fold_in(key, i), env, p, cfg)
+                accs[p].append(a)
+                if p == pol.GREEDY_NCIS:
+                    us += t
+        d = ";".join(f"{k}={mean_sem(v)[0]:.4f}+-{mean_sem(v)[1]:.4f}"
+                     for k, v in accs.items())
+        emit(f"fig4/m{m}", us / reps, d)
+
+
+def fig5_realworld():
+    """Fig. 5 (Section 6.7): semi-synthetic real-world instance with
+    heavy-tailed precision/recall and corrupted estimates."""
+    m = prof(20_000, 100_000)
+    budget = prof(1000, 5000)
+    steps = 200
+    reps = prof(2, 10)
+    for p_corrupt in [0.0, 0.1, 0.2]:
+        accs = {"greedy": [], "greedy_ncis": [], "greedy_cis_plus": []}
+        us = 0.0
+        for r in range(reps):
+            key = jax.random.PRNGKey(4000 + r)
+            inst = realworld_instance(key, m)
+            cfg = SimConfig(dt=1.0, n_steps=steps, k_per_tick=budget,
+                            count_mode="poisson")
+            # corrupted estimates -> the policy's beliefs
+            cp, cr = corrupt_precision_recall(
+                jax.random.fold_in(key, 9), inst.precision, inst.recall,
+                p_corrupt,
+            )
+            belief = env_from_precision_recall(
+                inst.env.delta, inst.env.mu, cp, cr
+            )
+            qmask = (cp > 0.7) & (cr > 0.6)
+            a, _ = _run_policy(jax.random.fold_in(key, 1), inst.env,
+                               pol.GREEDY, cfg)
+            accs["greedy"].append(a)
+            t0 = time.perf_counter()
+            res = simulate(jax.random.fold_in(key, 2), inst.env,
+                           pol.GREEDY_NCIS, cfg, belief=belief)
+            us += (time.perf_counter() - t0) * 1e6
+            accs["greedy_ncis"].append(float(res.accuracy))
+            res = simulate(jax.random.fold_in(key, 3), inst.env,
+                           pol.GREEDY_CIS_PLUS, cfg, belief=belief,
+                           quality_mask=qmask)
+            accs["greedy_cis_plus"].append(float(res.accuracy))
+        d = ";".join(f"{k}={mean_sem(v)[0]:.4f}+-{mean_sem(v)[1]:.4f}"
+                     for k, v in accs.items())
+        emit(f"fig5/corrupt{p_corrupt}", us / reps, d)
+
+
+def fig8_delayed_cis():
+    """App. C / Fig. 8: delayed CIS and the discard heuristic."""
+    R = 100
+    T = prof(50, 1000)
+    reps = prof(3, 20)
+    delay = DelayConfig(mean_ticks=6.0, max_ticks=32)
+    for m in prof([100, 300], [100, 200, 500, 1000]):
+        cfg = SimConfig(dt=1.0 / R, n_steps=R * T)
+        cfg_d = cfg._replace(t_delay_filter=5.0 / R)
+        accs = {"ncis_nodelay": [], "ncis_delayed": [], "ncis_d_filter": []}
+        us = 0.0
+        for r in range(reps):
+            key = jax.random.PRNGKey(5000 + r)
+            env = uniform_instance(key, m)
+            a, _ = _run_policy(jax.random.fold_in(key, 1), env,
+                               pol.GREEDY_NCIS, cfg)
+            accs["ncis_nodelay"].append(a)
+            t0 = time.perf_counter()
+            res = simulate_delayed(jax.random.fold_in(key, 2), env,
+                                   pol.GREEDY_NCIS, cfg, delay)
+            us += (time.perf_counter() - t0) * 1e6
+            accs["ncis_delayed"].append(float(res.accuracy))
+            res = simulate_delayed(jax.random.fold_in(key, 3), env,
+                                   pol.GREEDY_NCIS, cfg_d, delay)
+            accs["ncis_d_filter"].append(float(res.accuracy))
+        d = ";".join(f"{k}={mean_sem(v)[0]:.4f}+-{mean_sem(v)[1]:.4f}"
+                     for k, v in accs.items())
+        emit(f"fig8/m{m}", us / reps, d)
+
+
+def fig9_elastic_bandwidth():
+    """App. D / Fig. 9: bandwidth 100 -> 150 -> 100 with zero recomputation."""
+    m = prof(300, 1000)
+    R1, R2 = 100, 150
+    T_seg = prof(40, 133)
+    key = jax.random.PRNGKey(6000)
+    env = uniform_instance(key, m)
+    segs = []
+    t0 = time.perf_counter()
+    from repro.core.state import PageState
+    # run three segments, carrying state (the policy itself has no state
+    # beyond (tau, n_cis) — that is the point of App. D)
+    accs = []
+    for i, R in enumerate([R1, R2, R1]):
+        cfg = SimConfig(dt=1.0 / R, n_steps=R * T_seg)
+        res = simulate(jax.random.fold_in(key, i), env, pol.GREEDY, cfg)
+        accs.append(float(jnp.mean(res.trace[res.trace.shape[0] // 2:])))
+    us = (time.perf_counter() - t0) * 1e6
+    # steady-state references
+    ref1 = simulate(jax.random.fold_in(key, 10), env, pol.GREEDY,
+                    SimConfig(dt=1.0 / R1, n_steps=R1 * T_seg))
+    ref2 = simulate(jax.random.fold_in(key, 11), env, pol.GREEDY,
+                    SimConfig(dt=1.0 / R2, n_steps=R2 * T_seg))
+    d = (f"seg100={accs[0]:.4f};seg150={accs[1]:.4f};segback={accs[2]:.4f};"
+         f"ref100={float(ref1.accuracy):.4f};ref150={float(ref2.accuracy):.4f}")
+    emit("fig9/elastic", us, d)
+
+
+def appe_estimation():
+    """App. E: naive vs MLE estimation of CIS precision/recall."""
+    from repro.core.estimation import fit_mle, naive_precision_recall
+
+    reps = prof(20, 200)
+    horizon = prof(20_000, 100_000)
+    rng = np.random.default_rng(0)
+    errs_naive, errs_mle = [], []
+    t0 = time.perf_counter()
+    for r in range(reps):
+        precision = rng.uniform(0.2, 0.95)
+        recall = rng.uniform(0.2, 0.95)
+        delta = 1.0 / rng.uniform(2, 20)
+        crawl_rate = delta * rng.uniform(0.25, 4.0)
+        lam = recall
+        gamma = lam * delta / precision
+        nu = gamma - lam * delta
+        # simulate intervals between crawls ~ Exp(crawl_rate)
+        n_int = max(50, int(horizon * crawl_rate / 10))
+        tau = rng.exponential(1.0 / crawl_rate, n_int)
+        changes = rng.poisson(delta * tau)
+        signaled = rng.binomial(changes, lam)
+        false = rng.poisson(nu * tau)
+        n_cis = signaled + false
+        fresh = (changes == 0).astype(np.int32)
+        p_n, r_n = naive_precision_recall(
+            jnp.asarray(n_cis)[None], jnp.asarray(changes)[None]
+        )
+        errs_naive.append(abs(float(p_n[0]) - precision)
+                          + abs(float(r_n[0]) - recall))
+        q = fit_mle(jnp.asarray(tau, jnp.float32), jnp.asarray(n_cis),
+                    jnp.asarray(fresh), jnp.float32(gamma), steps=300)
+        errs_mle.append(abs(float(q.precision) - precision)
+                        + abs(float(q.recall) - recall))
+    us = (time.perf_counter() - t0) / reps * 1e6
+    emit("appe/estimation", us,
+         f"naive_l1={np.mean(errs_naive):.4f};mle_l1={np.mean(errs_mle):.4f}")
+
+
+ALL = [fig2_greedy_vs_lds, fig3_partial_cis, fig4_noisy_cis, fig5_realworld,
+       fig8_delayed_cis, fig9_elastic_bandwidth, appe_estimation]

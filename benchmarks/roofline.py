@@ -1,0 +1,91 @@
+"""Roofline table from the dry-run JSON (deliverable (g)).
+
+Per (arch x shape x mesh): the three per-chip roofline terms in seconds,
+the dominant bottleneck, MODEL_FLOPS (6ND / 2ND), the useful-compute ratio
+MODEL/HLO, and the roofline fraction = model-compute-time / dominant-term
+(this is the §Perf score). Writes results/roofline.md and prints CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+from repro.configs.base import SHAPES, get_shape
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+from benchmarks.analytic import model_flops
+from benchmarks.common import emit
+
+
+def build_table(path="results/dryrun.json", out_md="results/roofline.md",
+                variants_path="results/variants.json"):
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"no {path}; run the dry-run sweep first")
+        return []
+    with open(path) as f:
+        res = json.load(f)
+    if os.path.exists(variants_path):
+        with open(variants_path) as f:
+            res.update(json.load(f))
+    rows = []
+    for key, rec in sorted(res.items()):
+        parts = key.split("|")
+        if len(parts) < 3:
+            continue
+        arch, shape_name, mesh = parts[0], parts[1], parts[2]
+        if "skipped" in rec:
+            rows.append({"key": key, "skipped": rec["skipped"]})
+            continue
+        if "error" in rec or "roofline_s" not in rec:
+            rows.append({"key": key, "error": rec.get("error", "?")})
+            continue
+        terms = rec["roofline_s"]
+        n_dev = rec.get("n_devices", 256)
+        dom = rec["bottleneck"]
+        dom_t = terms[dom]
+        row = {"key": key, "arch": arch, "shape": shape_name, "mesh": mesh,
+               "terms": terms, "bottleneck": dom, "n_devices": n_dev,
+               "memory_gb": rec.get("memory", {}).get("per_device_total", 0)
+               / 1e9}
+        if arch != "paper-crawl":
+            mf = model_flops(configs.get(arch), get_shape(shape_name))
+            mf_dev = mf / n_dev
+            row["model_flops_dev"] = mf_dev
+            row["useful_ratio"] = (mf_dev / rec["hlo"]["flops"]
+                                   if rec["hlo"]["flops"] else 0.0)
+            row["roofline_frac"] = (mf_dev / PEAK_FLOPS) / dom_t if dom_t else 0.0
+        else:
+            row["roofline_frac"] = terms["compute"] / dom_t if dom_t else 0.0
+            row["useful_ratio"] = 1.0
+        rows.append(row)
+
+    lines = [
+        "| cell | bottleneck | compute s | memory s | collective s | "
+        "mem GB/chip | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "terms" not in r:
+            note = r.get("skipped", r.get("error", ""))
+            lines.append(f"| {r['key']} | — | | | | | | {note} |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['key']} | {r['bottleneck']} | {t['compute']:.4f} | "
+            f"{t['memory']:.4f} | {t['collective']:.4f} | "
+            f"{r['memory_gb']:.2f} | {r.get('useful_ratio', 0):.3f} | "
+            f"{r.get('roofline_frac', 0):.4f} |"
+        )
+    os.makedirs(os.path.dirname(out_md) or ".", exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    for r in rows:
+        if "terms" in r:
+            emit(f"roofline/{r['key']}", 0.0,
+                 f"bottleneck={r['bottleneck']};frac={r.get('roofline_frac', 0):.4f};"
+                 f"useful={r.get('useful_ratio', 0):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    build_table()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one entry per paper table/figure + kernel/scheduler
+microbenchmarks + the roofline table (reads the dry-run JSON).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4] \
+        [REPRO_BENCH_PROFILE=quick|paper]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    from benchmarks import figures, kernel_bench, roofline
+
+    jobs = [(f.__name__, f) for f in figures.ALL]
+    jobs += [("kernel_bench", kernel_bench.kernel_bench),
+             ("sched_bench", kernel_bench.sched_bench),
+             ("roofline", roofline.build_table)]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in jobs:
+        if only and not any(o in name for o in only):
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Production-shaped scheduler demo: a million-page shard, sharded selection,
+tiered lazy evaluation, elastic bandwidth, checkpoint/restore.
+
+    PYTHONPATH=src python examples/crawl_at_scale.py [--pages 1048576]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import derive, tables
+from repro.sched.service import CrawlScheduler
+from repro.sched.tiered import init_tiers, tiered_select
+from repro.sim import uniform_instance
+from repro import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pages", type=int, default=1 << 20)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--budget", type=float, default=4096.0)
+    ap.add_argument("--ckpt", default="/tmp/repro_sched_ckpt")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), args.pages)
+    sched = CrawlScheduler(env, mesh, bandwidth=args.budget, table_grid=64)
+    zero_cis = jnp.zeros((args.pages,), jnp.int32)
+
+    print(f"pages={args.pages}, budget={args.budget}/round, "
+          f"devices={mesh.size}")
+    t0 = time.perf_counter()
+    for r in range(args.rounds):
+        ids, vals = sched.ingest_and_schedule(zero_cis)
+        if r == args.rounds // 2:
+            # elastic bandwidth (paper App. D): no recomputation at all
+            sched.set_bandwidth(args.budget * 1.5)
+            print(f"  round {r}: bandwidth -> {sched.bandwidth} "
+                  "(zero-cost adaptation)")
+    jax.block_until_ready(vals)
+    dt = (time.perf_counter() - t0) / args.rounds
+    print(f"scheduler round: {dt*1e3:.1f} ms "
+          f"({args.pages/dt/1e6:.1f}M pages/s/host)")
+
+    # fault tolerance: snapshot + restore the whole scheduler state
+    ckpt.save(args.ckpt, 1, sched.state_dict())
+    sd, step, _ = ckpt.restore_latest(args.ckpt, sched.state_dict())
+    sched.load_state_dict(sd)
+    print(f"checkpoint roundtrip OK (step {step})")
+
+    # tiered lazy evaluation (paper App. G)
+    d = sched.d
+    table = sched.table
+    tiers = init_tiers(d, block=4096)
+    tau = sched.state.tau_elap
+    n = sched.state.n_cis
+    fracs = []
+    for rnd in range(1, 10):
+        _, ti, tiers, frac = tiered_select(tau, n, d, table, tiers,
+                                           jnp.int32(rnd), 0.05, 1024)
+        tau = tau.at[ti].set(0.0) + 0.05
+        fracs.append(float(frac))
+    print(f"tiered evaluation: {100*(1-np.mean(fracs[2:])):.0f}% of block "
+          "evaluations skipped (steady state)")
+
+
+if __name__ == "__main__":
+    main()

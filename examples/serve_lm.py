@@ -1,0 +1,50 @@
+"""Serving demo: batched generation with KV cache (prefill + jit decode),
+reporting per-phase throughput — any assigned architecture at reduced scale.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
+"""
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models import model as M
+from repro.serve import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(configs.get(args.arch))
+    key = jax.random.PRNGKey(0)
+    s_max = args.prompt_len + args.max_new
+    params = M.init(key, cfg, max_seq=s_max)
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                          0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.n_prefix, cfg.d_model))
+
+    t0 = time.perf_counter()
+    res = generate(cfg, params, batch, max_new=args.max_new,
+                   temperature=0.8, top_k=50, key=key, s_max=s_max)
+    jax.block_until_ready(res.tokens)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name} ({cfg.family}): generated "
+          f"{args.batch}x{args.max_new} tokens in {dt:.2f}s "
+          f"({args.batch*args.max_new/dt:.1f} tok/s incl. compile)")
+    print("sample token ids:", res.tokens[0, args.prompt_len:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.checkpoint.store import (
+    latest_step,
+    restore,
+    restore_latest,
+    save,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,25 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeCfg, get_shape, reduced
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "gemma2-2b": "gemma2_2b",
+    "smollm-135m": "smollm_135m",
+    "granite-8b": "granite_8b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "xlstm-350m": "xlstm_350m",
+    "internvl2-76b": "internvl2_76b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "grok-1-314b": "grok_1_314b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    import importlib
+
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}").CONFIG

@@ -1,0 +1,142 @@
+"""Architecture configuration schema + the assigned input-shape sets.
+
+Every assigned architecture gets one `<id>.py` in this package exporting
+`CONFIG`; `repro.configs.get(name)` resolves them. `reduced()` derives the
+small smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    n_shared: int = 0            # shared (always-on) experts
+    shared_gate: bool = False    # qwen2-moe sigmoid gate on shared output
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    kind: str = ""               # "mamba2" | "xlstm"
+    d_state: int = 64
+    head_dim: int = 64           # mamba2 P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    # xlstm: layers per group pattern, e.g. 3 mLSTM then 1 sLSTM
+    mlstm_per_group: int = 3
+    slstm_head_dim: int = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | encdec | moe | ssm | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    # --- attention flavor ---
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    window: int = 0              # sliding-window size for local layers
+    local_global: bool = False   # gemma2 alternating local/global
+    sandwich_norm: bool = False  # gemma2 pre+post block norms
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU) | gelu_mlp
+    pos: str = "rope"            # rope | learned | sinusoid | none
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # --- encoder-decoder ---
+    n_enc_layers: int = 0
+    enc_seq: int = 1500          # whisper audio frames after conv stub
+    # --- frontend stubs ---
+    frontend: str = "none"       # none | audio_frames | vision_patches
+    n_prefix: int = 0            # vision prefix token count
+    # --- mixtures / ssm ---
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    attn_every: int = 0          # hybrid: shared attn block every k ssm layers
+    lora_rank: int = 0           # zamba2 per-site adapters on the shared block
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    optimizer: str = "adamw"     # adamw | adafactor
+    remat: str = "block"         # none | block
+    train_n_micro: int = 1       # gradient-accumulation microbatches (train_4k)
+    # long-context capability (sub-quadratic decode) — decides long_500k
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeCfg, ...] = (
+    ShapeCfg("train_4k", "train", 4_096, 256),
+    ShapeCfg("prefill_32k", "prefill", 32_768, 32),
+    ShapeCfg("decode_32k", "decode", 32_768, 128),
+    ShapeCfg("long_500k", "decode", 524_288, 1),
+)
+
+
+def get_shape(name: str) -> ShapeCfg:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Small same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.attn_every == 0 else 2 * max(cfg.attn_every, 1)),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2 if cfg.n_kv_heads < cfg.n_heads else 4)),
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        enc_seq=24,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        n_prefix=min(cfg.n_prefix, 8),
+        window=min(cfg.window, 16) if cfg.window else 0,
+        dtype="float32",
+    )
+    if cfg.moe:
+        kw["moe"] = replace(cfg.moe, n_experts=min(cfg.moe.n_experts, 8),
+                            top_k=min(cfg.moe.top_k, 2), expert_d_ff=64,
+                            n_shared=min(cfg.moe.n_shared, 1))
+    if cfg.ssm:
+        kw["ssm"] = replace(cfg.ssm, d_state=16, head_dim=16, chunk=16,
+                            slstm_head_dim=32)
+    if cfg.attn_every:
+        kw["attn_every"] = 2
+        kw["n_layers"] = 4
+    if cfg.lora_rank:
+        kw["lora_rank"] = 4
+    return replace(cfg, **kw)

@@ -1,0 +1,23 @@
+"""gemma2-2b [arXiv:2408.00118]: alternating local(4096)/global attention,
+attention + final logit softcaps, GeGLU, sandwich (pre+post) RMSNorm, GQA kv=4."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=9216,
+    vocab=256000,
+    head_dim=256,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    window=4096,
+    local_global=True,
+    sandwich_norm=True,
+    act="gelu",
+    tie_embeddings=True,
+    optimizer="adamw",
+)

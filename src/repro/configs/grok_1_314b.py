@@ -1,0 +1,20 @@
+"""grok-1-314b [hf:xai-org/grok-1]: 314B MoE, 8 experts top-2, GQA kv=8,
+attention logit softcap 30 (tanh), 64 layers."""
+from repro.configs.base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    attn_softcap=30.0,
+    final_softcap=30.0,
+    moe=MoECfg(n_experts=8, top_k=2, expert_d_ff=32768, n_shared=0),
+    tie_embeddings=True,
+    train_n_micro=4,
+    optimizer="adafactor",        # 314B: factored second moment
+)

@@ -1,0 +1,19 @@
+"""internvl2-76b [arXiv:2404.16821]: InternViT frontend (stub: precomputed
+patch embeddings) + InternLM2/llama-70B-class backbone, GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    frontend="vision_patches",
+    n_prefix=256,
+    tie_embeddings=False,
+    train_n_micro=2,
+    optimizer="adafactor",        # 76B: bound per-chip optimizer state
+)

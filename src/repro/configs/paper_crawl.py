@@ -1,0 +1,5 @@
+"""The paper's own 'architecture': the production crawl-scheduler workload —
+page-sharded value evaluation + global top-k on the full mesh (Section 5.2)."""
+PAGES_PER_CHIP = 2 ** 21          # 2M pages/chip -> 1B pages on 512 chips
+TABLE_GRID = 64
+SCHED_K = 8192                    # crawls per scheduling round

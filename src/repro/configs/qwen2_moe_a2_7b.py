@@ -1,0 +1,20 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B]: 60 routed experts top-4 +
+4 shared experts (gated), fine-grained expert d_ff=1408."""
+from repro.configs.base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,                    # per-expert width (routed)
+    vocab=151936,
+    qkv_bias=True,
+    moe=MoECfg(n_experts=60, top_k=4, expert_d_ff=1408, n_shared=4,
+               shared_gate=True),
+    tie_embeddings=True,
+    train_n_micro=4,
+    optimizer="adamw",
+)

@@ -1,0 +1,24 @@
+"""whisper-large-v3 [arXiv:2212.04356]: enc-dec audio; conv frontend is a stub
+(input_specs supplies precomputed 1500-frame embeddings). 32 encoder + 32
+decoder layers, MHA (kv=20 == heads), GELU MLP, LayerNorm, learned positions."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    qkv_bias=True,
+    norm="layernorm",
+    act="gelu_mlp",
+    pos="learned",
+    frontend="audio_frames",
+    enc_seq=1500,
+    tie_embeddings=True,
+    optimizer="adamw",
+)

@@ -1,0 +1,18 @@
+"""xlstm-350m [arXiv:2405.04517]: sLSTM + mLSTM blocks (3 mLSTM : 1 sLSTM per
+group), matrix-memory recurrence => O(1)-state decode (sub-quadratic)."""
+from repro.configs.base import ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                       # xLSTM blocks carry their own up-projection
+    vocab=50304,
+    ssm=SSMCfg(kind="xlstm", mlstm_per_group=3, slstm_head_dim=256, chunk=256),
+    subquadratic=True,
+    tie_embeddings=True,
+    optimizer="adamw",
+)

@@ -1,0 +1,20 @@
+"""zamba2-2.7b [arXiv:2411.15242]: Mamba-2 backbone + a *shared* attention+MLP
+block applied every 6 layers with per-site LoRA adapters; ssm_state=64."""
+from repro.configs.base import ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    ssm=SSMCfg(kind="mamba2", d_state=64, head_dim=64, expand=2, chunk=256),
+    attn_every=6,
+    lora_rank=64,
+    subquadratic=True,            # decode state is SSM + sparse shared-attn KV
+    tie_embeddings=True,
+    optimizer="adamw",
+)

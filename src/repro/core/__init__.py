@@ -1,0 +1,52 @@
+"""Core library: the paper's contribution — crawl values, policies, solver."""
+from repro.core.residuals import residual, residual_derivative, residual_naive
+from repro.core.values import (
+    BIG,
+    DerivedEnv,
+    Env,
+    G,
+    accuracy_of_thresholds,
+    derive,
+    freq,
+    psi,
+    tau_eff,
+    value_asymptote,
+    value_cis,
+    value_greedy,
+    value_ncis,
+    w,
+)
+from repro.core.solver import (
+    ContinuousSolution,
+    iota_for_lambda,
+    solve_continuous,
+    solve_continuous_nocis,
+    total_rate,
+)
+from repro.core.state import (
+    PageState,
+    advance,
+    advance_with_delay_filter,
+    crawl_reset,
+    init_state,
+)
+from repro.core.policies import (
+    ALL_VALUE_POLICIES,
+    G_NCIS_APPROX_1,
+    G_NCIS_APPROX_2,
+    GREEDY,
+    GREEDY_CIS,
+    GREEDY_CIS_PLUS,
+    GREEDY_NCIS,
+    LDS,
+    crawl_values,
+    make_policy,
+    quality_mask_from_env,
+)
+from repro.core.estimation import (
+    CISQuality,
+    fit_mle,
+    naive_precision_recall,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

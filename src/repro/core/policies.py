@@ -1,0 +1,97 @@
+"""Discrete crawl policies (Algorithm 1 with the Section 5.1 value functions).
+
+A policy is a pure function mapping scheduler state -> per-page crawl values;
+the scheduler crawls the arg-top-k. Each policy may hold *beliefs* about the
+environment that differ from the truth (e.g. GREEDY ignores CIS; GREEDY_CIS
+assumes noiseless CIS) — that is exactly how the paper's experiments stress
+robustness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import PageState
+from repro.core.values import (
+    DerivedEnv,
+    Env,
+    derive,
+    tau_eff,
+    value_cis,
+    value_greedy,
+    value_ncis,
+)
+
+PolicyFn = Callable[[PageState, DerivedEnv], jax.Array]
+
+GREEDY = "greedy"
+GREEDY_CIS = "greedy_cis"
+GREEDY_NCIS = "greedy_ncis"
+G_NCIS_APPROX_1 = "g_ncis_approx_1"
+G_NCIS_APPROX_2 = "g_ncis_approx_2"
+GREEDY_CIS_PLUS = "greedy_cis_plus"
+LDS = "lds"  # handled by the simulator's deadline path, not a value function
+
+ALL_VALUE_POLICIES = (
+    GREEDY,
+    GREEDY_CIS,
+    GREEDY_NCIS,
+    G_NCIS_APPROX_1,
+    G_NCIS_APPROX_2,
+    GREEDY_CIS_PLUS,
+)
+
+
+def crawl_values(
+    kind: str,
+    state: PageState,
+    d: DerivedEnv,
+    n_terms: int = 8,
+    quality_mask: jax.Array | None = None,
+) -> jax.Array:
+    """Per-page crawl value under the given policy's beliefs.
+
+    quality_mask (bool, per page) is only used by GREEDY_CIS_PLUS: True marks
+    "high quality" CIS pages (paper Section 6.7: precision > 0.7, recall > 0.6).
+    """
+    if kind == GREEDY:
+        # Believes there are no signals: alpha = delta, ignores n_cis.
+        return value_greedy(state.tau_elap, d)
+    if kind == GREEDY_CIS:
+        return value_cis(state.tau_elap, state.n_cis, d)
+    if kind == GREEDY_NCIS:
+        t = tau_eff(state.tau_elap, state.n_cis, d)
+        return value_ncis(t, d, n_terms=n_terms)
+    if kind == G_NCIS_APPROX_1:
+        t = tau_eff(state.tau_elap, state.n_cis, d)
+        return value_ncis(t, d, n_terms=1)
+    if kind == G_NCIS_APPROX_2:
+        t = tau_eff(state.tau_elap, state.n_cis, d)
+        return value_ncis(t, d, n_terms=2)
+    if kind == GREEDY_CIS_PLUS:
+        if quality_mask is None:
+            raise ValueError("GREEDY_CIS_PLUS requires a quality_mask")
+        v_cis = value_cis(state.tau_elap, state.n_cis, d)
+        v_greedy = value_greedy(state.tau_elap, d)
+        return jnp.where(quality_mask, v_cis, v_greedy)
+    raise ValueError(f"unknown policy kind: {kind!r}")
+
+
+def make_policy(kind: str, n_terms: int = 8,
+                quality_mask: jax.Array | None = None) -> PolicyFn:
+    return functools.partial(
+        crawl_values, kind, n_terms=n_terms, quality_mask=quality_mask
+    )
+
+
+def quality_mask_from_env(env: Env, precision_thresh: float = 0.7,
+                          recall_thresh: float = 0.6) -> jax.Array:
+    """Section 6.7's high-quality page selector for GREEDY_CIS_PLUS."""
+    d = derive(env)
+    precision = jnp.where(
+        d.gamma > 0, env.lam * env.delta / jnp.maximum(d.gamma, 1e-12), 0.0
+    )
+    return (precision > precision_thresh) & (env.lam > recall_thresh)

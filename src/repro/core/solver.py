@@ -1,0 +1,109 @@
+"""Continuous-policy solver (Theorem 1): find the Lagrange multiplier Lambda and
+per-page thresholds iota* with V(iota_i*) = Lambda and sum_i f(iota_i*) = R.
+
+Both levels are monotone (Lemma 2: V increasing in iota, f decreasing in iota,
+hence total rate decreasing in Lambda), so nested bisection converges
+geometrically. Everything is vectorized over pages and jit-compatible
+(fixed-iteration lax.fori_loop), and runs in f64 when enabled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import (
+    BIG,
+    DerivedEnv,
+    Env,
+    derive,
+    freq,
+    psi,
+    value_asymptote,
+    value_ncis,
+    w,
+)
+
+_IOTA_LO = 1e-7
+
+
+class ContinuousSolution(NamedTuple):
+    iota: jax.Array        # per-page optimal threshold (BIG => never crawl)
+    rate: jax.Array        # per-page crawl frequency f(iota*)
+    lam_mult: jax.Array    # the Lagrange multiplier Lambda
+    objective: jax.Array   # optimal expected accuracy sum mu_t * w * f
+
+
+def iota_for_lambda(
+    lam_mult: jax.Array,
+    d: DerivedEnv,
+    n_terms: int = 8,
+    iters: int = 60,
+    iota_max: float = 1e7,
+) -> jax.Array:
+    """Per-page bisection: smallest iota with V(iota) >= Lambda.
+
+    Pages whose asymptotic value stays below Lambda get iota = BIG (never
+    crawled, Theorem 1's second branch).
+    """
+    v_hi = value_ncis(jnp.full_like(d.delta, iota_max), d, n_terms)
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        v = value_ncis(mid, d, n_terms)
+        go_right = v < lam_mult
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo0 = jnp.full_like(d.delta, _IOTA_LO)
+    hi0 = jnp.full_like(d.delta, iota_max)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    iota = 0.5 * (lo + hi)
+    return jnp.where(v_hi < lam_mult, BIG, iota)
+
+
+def total_rate(
+    lam_mult: jax.Array, d: DerivedEnv, n_terms: int = 8, iters: int = 60
+) -> jax.Array:
+    iota = iota_for_lambda(lam_mult, d, n_terms, iters)
+    f = jnp.where(iota >= BIG, 0.0, freq(iota, d, n_terms))
+    return jnp.sum(f)
+
+
+def solve_continuous(
+    env: Env,
+    bandwidth: float,
+    n_terms: int = 8,
+    outer_iters: int = 60,
+    inner_iters: int = 60,
+) -> ContinuousSolution:
+    """Nested bisection for the optimal continuous policy under budget R."""
+    d = derive(env)
+    v_max = jnp.max(value_asymptote(d))
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        rate = total_rate(mid, d, n_terms, inner_iters)
+        # rate decreasing in Lambda: rate > R -> need larger Lambda.
+        too_fast = rate > bandwidth
+        return jnp.where(too_fast, mid, lo), jnp.where(too_fast, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(
+        0, outer_iters, body, (jnp.zeros_like(v_max) + 1e-12, v_max)
+    )
+    lam_mult = 0.5 * (lo + hi)
+    iota = iota_for_lambda(lam_mult, d, n_terms, inner_iters)
+    f = jnp.where(iota >= BIG, 0.0, freq(iota, d, n_terms))
+    o = jnp.where(iota >= BIG, 0.0, d.mu_t * w(iota, d, n_terms) * f)
+    return ContinuousSolution(iota=iota, rate=f, lam_mult=lam_mult,
+                              objective=jnp.sum(o))
+
+
+def solve_continuous_nocis(env: Env, bandwidth: float, **kw) -> ContinuousSolution:
+    """Baseline of Eq. (5): the Azar/Cho setting — identical machinery with the
+    CIS channel disabled (lam = nu = 0)."""
+    blind = Env(delta=env.delta, mu=env.mu, lam=jnp.zeros_like(env.lam),
+                nu=jnp.zeros_like(env.nu))
+    return solve_continuous(blind, bandwidth, **kw)

@@ -1,0 +1,53 @@
+"""Per-page scheduler state and transitions.
+
+The paper's key scalability property: the full scheduler state per page is the
+pair (tau^ELAP, n_CIS) — O(1) memory, updated locally, checkpointable as two
+flat arrays. All transitions here are pure and shard-local.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PageState(NamedTuple):
+    tau_elap: jax.Array  # f32: time since last crawl
+    n_cis: jax.Array     # i32: CIS received since last crawl
+
+
+def init_state(m: int, dtype=jnp.float32) -> PageState:
+    return PageState(tau_elap=jnp.zeros((m,), dtype), n_cis=jnp.zeros((m,), jnp.int32))
+
+
+def advance(state: PageState, dt: jax.Array | float, new_cis: jax.Array) -> PageState:
+    """Advance time by dt and register newly arrived CIS counts."""
+    return PageState(
+        tau_elap=state.tau_elap + dt,
+        n_cis=state.n_cis + new_cis.astype(jnp.int32),
+    )
+
+
+def advance_with_delay_filter(
+    state: PageState,
+    dt: jax.Array | float,
+    new_cis: jax.Array,
+    t_delay: jax.Array | float,
+) -> PageState:
+    """Appendix C heuristic: discard CIS that arrive within t_delay of the last
+    crawl (they most likely describe a change already captured by that crawl).
+    A signal arriving during this tick is kept iff tau_elap (at tick start)
+    >= t_delay."""
+    keep = state.tau_elap >= t_delay
+    kept = jnp.where(keep, new_cis.astype(jnp.int32), 0)
+    return PageState(tau_elap=state.tau_elap + dt, n_cis=state.n_cis + kept)
+
+
+def crawl_reset(state: PageState, crawled: jax.Array) -> PageState:
+    """Reset the pages selected for crawling (boolean mask)."""
+    z = jnp.zeros_like(state.tau_elap)
+    return PageState(
+        tau_elap=jnp.where(crawled, z, state.tau_elap),
+        n_cis=jnp.where(crawled, 0, state.n_cis),
+    )

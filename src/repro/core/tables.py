@@ -1,0 +1,73 @@
+"""Per-page crawl-value interpolation tables.
+
+Production systems cannot afford to re-evaluate the full K-term NCIS value for
+every page at every tick (paper App. G uses value tiers + lazy recompute). Our
+vector-hardware adaptation: V_NCIS is a smooth monotone function of the scalar
+*exposure* u = alpha * tau^ELAP + b * n_CIS (so P[fresh] = e^{-u}), so we
+precompute V on a quadratically-spaced u-grid per page once per parameter
+refresh and evaluate with a gather + lerp per tick (~10 flops/page instead of
+~2 K^2 flops + 2K exps). dV/du = mu_t * e^{-u} * psi(u/alpha) decays like
+u e^{-u}, so the table is exact to ~1e-7 beyond u_max = 40 and the
+interpolation error on the quadratic grid is < 1e-6 relative (tested).
+
+Edge cases fall out of the u-parameterization automatically:
+  * nu = 0 (noiseless): b = BIG, any signal => u >= u_max => asymptote mu_t/delta;
+  * lam = 1 (alpha = 0): u = b*n, no signal => u = 0 => V = 0 (never crawl).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import BIG, DerivedEnv, value_ncis
+
+_EPS = 1e-12
+
+
+class ValueTable(NamedTuple):
+    vals: jax.Array    # (m, n_grid) value at u_j = u_max * (j/(n-1))^2
+    u_max: jax.Array   # scalar
+
+
+def build_ncis_table(
+    d: DerivedEnv,
+    n_terms: int = 8,
+    n_grid: int = 128,
+    u_max: float = 40.0,
+    method: str = "series",
+) -> ValueTable:
+    """Tabulate V_NCIS(u) per page. Cost: m * n_grid * n_terms, paid once."""
+    j = jnp.arange(n_grid, dtype=jnp.float32)
+    u = u_max * (j / (n_grid - 1)) ** 2                       # (J,)
+    alpha = d.alpha[..., None]
+    # iota = u / alpha; alpha == 0 pages only ever query u in {0, BIG}:
+    # u = 0 -> V = 0 (exact: first grid point evaluates V(iota=0) = 0).
+    iota = jnp.where(alpha > 1e-20, u / jnp.maximum(alpha, 1e-20), BIG)
+    iota = jnp.where(u == 0.0, 0.0, iota)
+    d_e = DerivedEnv(*[x[..., None] for x in d])
+    vals = value_ncis(iota, d_e, n_terms=n_terms, method=method)  # (m, J)
+    return ValueTable(vals=vals, u_max=jnp.float32(u_max))
+
+
+def exposure(tau_elap: jax.Array, n_cis: jax.Array, d: DerivedEnv) -> jax.Array:
+    """u = alpha * tau^ELAP + b * n_CIS = -log P[fresh] (no beta division)."""
+    u = d.alpha * tau_elap + jnp.minimum(d.b * n_cis.astype(tau_elap.dtype), BIG)
+    return jnp.minimum(u, BIG)
+
+
+def lookup(table: ValueTable, u: jax.Array) -> jax.Array:
+    """Piecewise-linear interpolation of V at exposure u (per page)."""
+    n_grid = table.vals.shape[-1]
+    pos = jnp.sqrt(jnp.clip(u, 0.0, table.u_max) / table.u_max) * (n_grid - 1)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n_grid - 2)
+    frac = pos - lo.astype(pos.dtype)
+    v_lo = jnp.take_along_axis(table.vals, lo[..., None], axis=-1)[..., 0]
+    v_hi = jnp.take_along_axis(table.vals, (lo + 1)[..., None], axis=-1)[..., 0]
+    return v_lo + frac * (v_hi - v_lo)
+
+
+def lookup_state(table: ValueTable, d: DerivedEnv,
+                 tau_elap: jax.Array, n_cis: jax.Array) -> jax.Array:
+    return lookup(table, exposure(tau_elap, n_cis, d))

@@ -1,0 +1,233 @@
+"""Crawl value functions V, expected interval length psi, cumulative freshness w,
+and crawl frequency f — Theorem 1 / Section 5.1 of the paper.
+
+All functions are vectorized over pages and branch-free (fixed K-term masked
+sums), so the same code runs on CPU hosts, inside `shard_map` shards, and as
+the oracle for the Pallas kernel. The K-term truncation *is* the paper's
+APPROX-K policy (Appendix A.1); K >= ceil(iota/beta) recovers the exact value.
+
+Environment parameterization (per page):
+    delta: true change rate             mu: raw importance (request rate)
+    lam:   P[change emits a CIS]        nu: false-positive CIS rate
+derived:
+    gamma = lam*delta + nu        (observed CIS rate)
+    alpha = (1-lam)*delta         (unsignalled change rate)
+    b     = -log(nu/gamma) >= 0   (log information content of one CIS)
+    beta  = b/alpha               (time-equivalent of one CIS)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.residuals import residual, residual_ladder
+
+# A value representing "practically infinite" threshold/time. Chosen so that
+# i*BIG for i < 64 does not overflow f32.
+BIG = 1e30
+_EPS = 1e-12
+
+
+class Env(NamedTuple):
+    """Raw per-page environment parameters (arrays of identical shape)."""
+
+    delta: jax.Array  # change rate
+    mu: jax.Array     # importance / request rate (unnormalized)
+    lam: jax.Array    # CIS recall in [0, 1]
+    nu: jax.Array     # false CIS rate >= 0
+
+    @property
+    def m(self) -> int:
+        return self.delta.shape[-1]
+
+
+class DerivedEnv(NamedTuple):
+    """Derived quantities consumed by the value functions."""
+
+    delta: jax.Array
+    mu_t: jax.Array    # normalized importance mu / sum(mu)
+    lam: jax.Array
+    nu: jax.Array
+    gamma: jax.Array   # observed CIS rate
+    alpha: jax.Array   # unsignalled change rate
+    b: jax.Array       # alpha * beta = -log(nu/gamma)
+    beta: jax.Array    # time value of one CIS (BIG when nu == 0)
+
+
+def derive(env: Env, mu_total: jax.Array | float | None = None) -> DerivedEnv:
+    """Compute derived parameters with all the edge-case guards.
+
+    mu_total lets distributed callers pass the *global* importance sum so that
+    per-shard normalization is consistent across shards.
+    """
+    delta = jnp.asarray(env.delta)
+    mu = jnp.asarray(env.mu)
+    lam = jnp.clip(jnp.asarray(env.lam), 0.0, 1.0)
+    nu = jnp.maximum(jnp.asarray(env.nu), 0.0)
+    if mu_total is None:
+        mu_total = jnp.sum(mu)
+    mu_t = mu / jnp.maximum(mu_total, _EPS)
+
+    gamma = lam * delta + nu
+    alpha = (1.0 - lam) * delta
+    # b = -log(nu/gamma); nu == 0 (but gamma > 0)  => b = inf -> BIG (noiseless)
+    #                     gamma == 0               => no CIS at all; b unused -> 0
+    ratio = jnp.where(gamma > 0, nu / jnp.maximum(gamma, _EPS), 1.0)
+    b = jnp.where(
+        (gamma > 0) & (nu > 0),
+        -jnp.log(jnp.clip(ratio, _EPS, 1.0)),
+        jnp.where(gamma > 0, BIG, 0.0),
+    )
+    b = jnp.minimum(b, BIG)
+    beta = jnp.where(alpha > 0, b / jnp.maximum(alpha, _EPS), BIG)
+    beta = jnp.minimum(beta, BIG)
+    # gamma == 0: signals never arrive; beta irrelevant but must be finite-safe.
+    beta = jnp.where(gamma > 0, beta, BIG)
+    return DerivedEnv(delta=delta, mu_t=mu_t, lam=lam, nu=nu, gamma=gamma,
+                      alpha=alpha, b=b, beta=beta)
+
+
+def tau_eff(tau_elap: jax.Array, n_cis: jax.Array, d: DerivedEnv) -> jax.Array:
+    """Effective elapsed time tau^EFF = tau^ELAP + beta * n_CIS (clipped to BIG)."""
+    t = tau_elap + jnp.minimum(d.beta * n_cis.astype(tau_elap.dtype), BIG)
+    return jnp.minimum(t, BIG)
+
+
+def _masked_terms(iota: jax.Array, d: DerivedEnv, n_terms: int):
+    """Shared machinery: per-term (i < K) masked arguments.
+
+    Returns (mask, x_psi, x_w, i) with shapes (..., K): term i is active iff
+    i*beta <= iota; x_psi = gamma*(iota-i*beta), x_w = (alpha+gamma)*(iota-i*beta).
+    """
+    i = jnp.arange(n_terms, dtype=iota.dtype)
+    shape = iota.shape + (n_terms,)
+    iota_e = iota[..., None]
+    beta_e = jnp.broadcast_to(d.beta[..., None], shape)
+    # i * beta with beta possibly BIG: i=0 must give exactly 0.
+    ib = jnp.where(i == 0, 0.0, i * jnp.minimum(beta_e, BIG))
+    rem = jnp.maximum(iota_e - ib, 0.0)           # (iota - i*beta)_+
+    mask = ib <= iota_e                            # i <= floor(iota/beta)
+    x_psi = d.gamma[..., None] * rem
+    x_w = (d.alpha + d.gamma)[..., None] * rem
+    return mask, x_psi, x_w, i, rem
+
+
+def _residual_terms(x: jax.Array, method: str) -> jax.Array:
+    """R^i(x[..., i]) via igamma ("gamma", exact) or Taylor series ("series",
+    kernel-friendly; used by the simulator and the Pallas kernel)."""
+    if method == "series":
+        return residual_ladder(x)
+    i = jnp.arange(x.shape[-1], dtype=x.dtype)
+    return residual(i, x)
+
+
+def psi(iota: jax.Array, d: DerivedEnv, n_terms: int = 8,
+        method: str = "gamma") -> jax.Array:
+    """Expected interval length between crawls under threshold iota (Lemma 4)."""
+    mask, x_psi, _, i, rem = _masked_terms(iota, d, n_terms)
+    g = d.gamma[..., None]
+    # term_i = R^i(gamma * rem) / gamma, with the gamma -> 0 limit:
+    #   i = 0: (1 - e^{-g r})/g -> r ;  i >= 1: -> 0.
+    r_i = _residual_terms(x_psi, method)
+    small = g < 1e-8
+    t0 = jnp.where(small, rem, -jnp.expm1(-x_psi) / jnp.maximum(g, _EPS))
+    ti = jnp.where(small, 0.0, r_i / jnp.maximum(g, _EPS))
+    terms = jnp.where(i == 0, t0, ti)
+    return jnp.sum(jnp.where(mask, terms, 0.0), axis=-1)
+
+
+def w(iota: jax.Array, d: DerivedEnv, n_terms: int = 8,
+      method: str = "gamma") -> jax.Array:
+    """Expected cumulative freshness of one crawl interval (Lemma 4)."""
+    mask, _, x_w, i, rem = _masked_terms(iota, d, n_terms)
+    dn = (d.delta + d.nu)[..., None]
+    nu = d.nu[..., None]
+    ag = (d.alpha + d.gamma)[..., None]
+    # coeff_i = nu^i / (delta+nu)^{i+1}; log-space for stability at larger i.
+    log_nu = jnp.log(jnp.maximum(nu, _EPS))
+    log_dn = jnp.log(jnp.maximum(dn, _EPS))
+    coeff = jnp.where(
+        (nu <= 0.0) & (i > 0), 0.0, jnp.exp(i * log_nu - (i + 1.0) * log_dn)
+    )
+    coeff = jnp.where(i == 0, 1.0 / jnp.maximum(dn, _EPS), coeff)
+    r_i = _residual_terms(x_w, method)
+    # delta + nu == 0 would mean the page never changes and never signals;
+    # then freshness is 1 and w(iota) = iota (handled via the i=0 limit below).
+    small = ag < 1e-8
+    t0 = jnp.where(small, rem, coeff * r_i)
+    terms = jnp.where(i == 0, t0, coeff * r_i)
+    return jnp.sum(jnp.where(mask, terms, 0.0), axis=-1)
+
+
+def freq(iota: jax.Array, d: DerivedEnv, n_terms: int = 8,
+         method: str = "gamma") -> jax.Array:
+    """Crawl frequency f(iota) = 1/psi(iota)."""
+    return 1.0 / jnp.maximum(psi(iota, d, n_terms, method), _EPS)
+
+
+def value_ncis(iota: jax.Array, d: DerivedEnv, n_terms: int = 8,
+               method: str = "gamma") -> jax.Array:
+    """General crawl value V_GREEDY_NCIS (Theorem 1):
+
+        V(iota) = mu_t * (w(iota) - exp(-alpha*iota) * psi(iota)).
+
+    n_terms = j gives the paper's V_G_NCIS_APPROX_j; n_terms >= max floor(i/b)
+    gives the exact value. iota >= BIG returns the asymptote mu_t/delta.
+    """
+    p = psi(iota, d, n_terms, method)
+    ww = w(iota, d, n_terms, method)
+    decay = jnp.exp(-jnp.minimum(d.alpha * iota, 80.0))
+    v = d.mu_t * (ww - decay * p)
+    v_inf = d.mu_t / jnp.maximum(d.delta, _EPS)
+    return jnp.where(iota >= BIG, v_inf, v)
+
+
+def value_greedy(tau_elap: jax.Array, d: DerivedEnv) -> jax.Array:
+    """V_GREEDY: no CIS knowledge. V = (mu_t/delta) * R^1(delta * tau)."""
+    return d.mu_t / jnp.maximum(d.delta, _EPS) * residual(1, d.delta * tau_elap)
+
+
+def value_cis(tau_elap: jax.Array, n_cis: jax.Array, d: DerivedEnv) -> jax.Array:
+    """V_GREEDY_CIS: believes signals are noiseless (nu = 0).
+
+    Under that belief alpha_b = (1-lam)*delta, gamma_b = lam*delta; a received
+    CIS means the page is certainly stale -> value jumps to the asymptote
+    mu_t/delta. Otherwise
+        V = mu_t * ( R^0((a+g) t)/(a+g) - R^0(g t) / (g e^{a t}) ).
+    The gamma_b -> 0 limit recovers V_GREEDY.
+    """
+    a = (1.0 - d.lam) * d.delta
+    g = d.lam * d.delta
+    t = tau_elap
+    ag = a + g
+    small_ag = ag < 1e-8
+    term1 = jnp.where(small_ag, t, -jnp.expm1(-ag * t) / jnp.maximum(ag, _EPS))
+    small_g = g < 1e-8
+    r0_over_g = jnp.where(small_g, t, -jnp.expm1(-g * t) / jnp.maximum(g, _EPS))
+    decay = jnp.exp(-jnp.minimum(a * t, 80.0))
+    v = d.mu_t * (term1 - r0_over_g * decay)
+    v_signaled = d.mu_t / jnp.maximum(d.delta, _EPS)
+    return jnp.where(n_cis > 0, v_signaled, v)
+
+
+def value_asymptote(d: DerivedEnv) -> jax.Array:
+    """V(iota -> inf) = mu_t / delta — the per-page value upper bound."""
+    return d.mu_t / jnp.maximum(d.delta, _EPS)
+
+
+def accuracy_of_thresholds(iota: jax.Array, d: DerivedEnv, n_terms: int = 8) -> jax.Array:
+    """Expected objective O = sum_i mu_t * w(iota_i) * f(iota_i) of a threshold
+    policy (the continuous optimum's accuracy when fed iota*)."""
+    o = d.mu_t * w(iota, d, n_terms) * freq(iota, d, n_terms)
+    o = jnp.where(iota >= BIG, 0.0, o)  # never-crawled pages serve stale copies
+    return jnp.sum(o, axis=-1)
+
+
+def G(xi: jax.Array, mu_t: jax.Array, delta: jax.Array) -> jax.Array:
+    """No-CIS objective per page at crawl rate xi (Eq. (5)):
+    G(xi) = (mu_t/delta) * xi * (1 - exp(-delta/xi))."""
+    safe_xi = jnp.maximum(xi, _EPS)
+    val = mu_t / jnp.maximum(delta, _EPS) * safe_xi * -jnp.expm1(-delta / safe_xi)
+    return jnp.where(xi > 0, val, 0.0)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLMData
+from repro.data.refresh import CrawlRefreshedCorpus
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,37 @@
+"""Deterministic synthetic LM data (host-side pipeline).
+
+Zipf-distributed unigrams mixed with short deterministic motifs so that a
+~100M model shows a real, reproducible loss curve within a few hundred steps.
+Each (seed, step, host) triple maps to a unique batch — restart-safe and
+shardable across data-loader hosts without coordination.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticLMData:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, n_hosts: int = 1, host_id: int = 0):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = global_batch // n_hosts
+        self.seed = seed
+        self.host_id = host_id
+        ranks = np.arange(1, vocab + 1)
+        p = 1.0 / ranks ** 1.1
+        self.p = p / p.sum()
+
+    def batch_at(self, step: int):
+        rng = np.random.Generator(
+            np.random.Philox(key=self.seed, counter=[step, self.host_id, 0, 0])
+        )
+        b, s = self.batch, self.seq_len
+        toks = rng.choice(self.vocab, size=(b, s + 1), p=self.p).astype(np.int32)
+        # motif structure: periodic copy of a short window -> learnable signal
+        motif = toks[:, : s // 8]
+        reps = int(np.ceil((s + 1) / motif.shape[1]))
+        pattern = np.tile(motif, (1, reps))[:, : s + 1]
+        mix = rng.random((b, 1)) < 0.5
+        toks = np.where(mix, pattern, toks)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}

@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: fused crawl-value evaluation with tiered block skip.
+
+This is the per-tick hot spot of the paper's production deployment: evaluating
+V_GREEDY_NCIS for ~10^9 pages per shard per scheduling round. The kernel fuses
+
+    tau^EFF = tau^ELAP + beta * n_CIS
+    V       = mu_t * ( w(tau^EFF) - e^{-alpha tau^EFF} psi(tau^EFF) )
+
+with the K-term Taylor-residual ladder (Section 5.1 / App. A.1) evaluated
+in-register — exp + K^2/2 FMAs per page, no special functions, pure VPU work —
+plus two production features:
+
+  * per-block *tiered skip* (paper App. G): each grid block carries an
+    optimistic value bound; blocks whose bound is below the current selection
+    threshold skip all compute and emit -inf (`pl.when`), saving ~the tier
+    fraction of the round's FLOPs;
+  * fused per-block lane-maxima output, feeding the scheduler's top-k without
+    a second pass over HBM.
+
+Memory layout: pages are tiled (BLOCK_ROWS, 128) — 8 f32 input fields + 1
+output per page; with BLOCK_ROWS = 256 a block's working set is
+9 * 256 * 128 * 4 B = 1.2 MiB, comfortably inside VMEM with double buffering.
+All tile dims are (8,128)-aligned for the VPU; there is no MXU work here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+_BIG_CUT = 1e29  # iota beyond this => asymptote branch
+DEFAULT_BLOCK_ROWS = 256
+LANES = 128
+
+
+def _ladder_sum(x, k_max):
+    """R^i(x[i]) for the unrolled i = 0..k_max-1 ladder; x is a list of tiles."""
+    outs = []
+    for i in range(k_max):
+        xi = x[i]
+        if i == 0:
+            outs.append(-jnp.expm1(-xi))
+        else:
+            s = jnp.ones_like(xi)
+            term = jnp.ones_like(xi)
+            for j in range(1, i + 1):
+                term = term * (xi * (1.0 / j))
+                s = s + term
+            outs.append(1.0 - jnp.exp(-xi) * s)
+    return outs
+
+
+def crawl_value_kernel(
+    thresh_ref,
+    bound_ref,
+    tau_ref,
+    n_ref,
+    delta_ref,
+    mu_ref,
+    nu_ref,
+    gamma_ref,
+    alpha_ref,
+    b_ref,
+    vals_ref,
+    blkmax_ref,
+    *,
+    n_terms: int,
+):
+    bound = bound_ref[0, 0]
+    thresh = thresh_ref[0, 0]
+
+    @pl.when(bound >= thresh)
+    def _compute():
+        tau = tau_ref[...]
+        n = n_ref[...]
+        delta = delta_ref[...]
+        mu_t = mu_ref[...]
+        nu = nu_ref[...]
+        gamma = gamma_ref[...]
+        alpha = alpha_ref[...]
+        b = b_ref[...]
+
+        eps = 1e-12
+        beta = jnp.where(alpha > 1e-20, b / jnp.maximum(alpha, 1e-20), BIG)
+        beta = jnp.minimum(beta, BIG)
+        # gamma == 0: signals never arrive; mirror derive()'s beta -> BIG so a
+        # (physically unreachable) n_cis > 0 maps to the asymptote branch.
+        beta = jnp.where(gamma > 0.0, beta, BIG)
+        iota = jnp.minimum(tau + jnp.minimum(beta * n, BIG), BIG)
+
+        ag = alpha + gamma
+        inv_g = 1.0 / jnp.maximum(gamma, eps)
+        inv_dn = 1.0 / jnp.maximum(delta + nu, eps)
+        small_g = gamma < 1e-8
+
+        psi = jnp.zeros_like(tau)
+        ww = jnp.zeros_like(tau)
+        # coeff_i = nu^i / (delta+nu)^{i+1}, built incrementally.
+        coeff = inv_dn
+        nu_ratio = nu * inv_dn
+        for i in range(n_terms):
+            ib = 0.0 if i == 0 else jnp.minimum(i * beta, BIG)
+            rem = jnp.maximum(iota - ib, 0.0)
+            active = (ib <= iota) & (rem > 0.0)
+            # Saturation clamp (see core.residuals.residual_ladder): beyond
+            # cut_i the residual is 1 to ~1e-11 and the clamp prevents f32
+            # overflow of the series terms.
+            cut = i + 10.0 * (i + 1.0) ** 0.5 + 20.0
+            x_psi = jnp.minimum(gamma * rem, cut)
+            x_w = jnp.minimum(ag * rem, cut)
+            # --- R^i ladder, inline (series form; i static) ---
+            if i == 0:
+                r_psi = -jnp.expm1(-x_psi)
+                r_w = -jnp.expm1(-x_w)
+            else:
+                s_p = jnp.ones_like(x_psi)
+                t_p = jnp.ones_like(x_psi)
+                s_w = jnp.ones_like(x_w)
+                t_w = jnp.ones_like(x_w)
+                for j in range(1, i + 1):
+                    inv_j = 1.0 / j
+                    t_p = t_p * (x_psi * inv_j)
+                    s_p = s_p + t_p
+                    t_w = t_w * (x_w * inv_j)
+                    s_w = s_w + t_w
+                r_psi = 1.0 - jnp.exp(-x_psi) * s_p
+                r_w = 1.0 - jnp.exp(-x_w) * s_w
+                # small-x: complementary tail series (no cancellation) —
+                # see core.residuals.residual_ladder.
+                tp_t = t_p * (x_psi / (i + 1))
+                tw_t = t_w * (x_w / (i + 1))
+                tail_p, tail_w = tp_t, tw_t
+                for j in range(i + 2, i + 5):
+                    tp_t = tp_t * (x_psi / j)
+                    tw_t = tw_t * (x_w / j)
+                    tail_p = tail_p + tp_t
+                    tail_w = tail_w + tw_t
+                r_psi = jnp.where(x_psi < 0.5, jnp.exp(-x_psi) * tail_p, r_psi)
+                r_w = jnp.where(x_w < 0.5, jnp.exp(-x_w) * tail_w, r_w)
+            # psi term with gamma->0 limit (only i = 0 survives).
+            if i == 0:
+                p_term = jnp.where(small_g, rem, r_psi * inv_g)
+                w_term = coeff * r_w
+                w_term = jnp.where(ag < 1e-8, rem, w_term)
+            else:
+                p_term = jnp.where(small_g, 0.0, r_psi * inv_g)
+                w_term = coeff * r_w
+            psi = psi + jnp.where(active, p_term, 0.0)
+            ww = ww + jnp.where(active, w_term, 0.0)
+            coeff = coeff * nu_ratio
+
+        decay = jnp.exp(-jnp.minimum(alpha * iota, 80.0))
+        v = mu_t * (ww - decay * psi)
+        v_inf = mu_t / jnp.maximum(delta, eps)
+        v = jnp.where(iota >= _BIG_CUT, v_inf, v)
+        vals_ref[...] = v
+        blkmax_ref[...] = jnp.max(v, axis=0, keepdims=True)
+
+    @pl.when(bound < thresh)
+    def _skip():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, vals_ref.dtype)
+        blkmax_ref[...] = jnp.full(blkmax_ref.shape, -jnp.inf, blkmax_ref.dtype)
+
+
+def crawl_value_pallas(
+    tau2d: jax.Array,
+    n2d: jax.Array,
+    fields2d: tuple,
+    bounds: jax.Array,
+    thresh: jax.Array,
+    n_terms: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Launch the kernel over a (rows, 128) page tiling.
+
+    tau2d/n2d/fields2d: (rows, 128) f32; fields2d = (delta, mu_t, nu, gamma,
+    alpha, b). bounds: (n_blocks, 1) per-block value bounds; thresh: (1, 1).
+    Returns (vals (rows,128), block_lane_max (n_blocks, 128)).
+    """
+    rows = tau2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    n_blocks = rows // block_rows
+    grid = (n_blocks,)
+
+    page_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    bound_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    blkmax_spec = pl.BlockSpec((1, LANES), lambda i: (i, 0))
+
+    kernel = functools.partial(crawl_value_kernel, n_terms=n_terms)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scalar_spec, bound_spec] + [page_spec] * 8,
+        out_specs=[page_spec, blkmax_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(thresh, bounds, tau2d, n2d, *fields2d)

@@ -1,0 +1,107 @@
+"""jit'd public wrappers around the Pallas kernels: padding, 2-D page tiling,
+bound plumbing, and the interpret-mode switch (CPU validates the kernel body;
+TPU is the deployment target)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import DerivedEnv
+from repro.kernels.crawl_value import (
+    DEFAULT_BLOCK_ROWS,
+    LANES,
+    crawl_value_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_terms", "block_rows", "interpret")
+)
+def crawl_value(
+    tau_elap: jax.Array,
+    n_cis: jax.Array,
+    d: DerivedEnv,
+    n_terms: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused V_GREEDY_NCIS for a flat page shard (no tiering: all blocks on)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m = tau_elap.shape[0]
+    block_pages = block_rows * LANES
+    m_pad = -(-m // block_pages) * block_pages
+    n_blocks = m_pad // block_pages
+
+    # Padding pages: delta=1, mu=0 -> value 0, never selected.
+    tau2d = _pad_to(tau_elap.astype(jnp.float32), m_pad, 0.0).reshape(-1, LANES)
+    n2d = _pad_to(n_cis.astype(jnp.float32), m_pad, 0.0).reshape(-1, LANES)
+    fields = tuple(
+        _pad_to(x.astype(jnp.float32), m_pad, fill).reshape(-1, LANES)
+        for x, fill in (
+            (d.delta, 1.0),
+            (d.mu_t, 0.0),
+            (d.nu, 0.0),
+            (d.gamma, 0.0),
+            (d.alpha, 1.0),
+            (d.b, 0.0),
+        )
+    )
+    bounds = jnp.ones((n_blocks, 1), jnp.float32)
+    thresh = jnp.zeros((1, 1), jnp.float32)
+    vals, _ = crawl_value_pallas(
+        tau2d, n2d, fields, bounds, thresh, n_terms, block_rows, interpret
+    )
+    return vals.reshape(-1)[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_terms", "block_rows", "interpret")
+)
+def crawl_value_tiered(
+    tau_elap: jax.Array,
+    n_cis: jax.Array,
+    d: DerivedEnv,
+    bounds: jax.Array,
+    thresh: jax.Array,
+    n_terms: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Tiered variant (paper App. G): per-block bounds + selection threshold;
+    returns (values with -inf for skipped blocks, per-block maxima)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m = tau_elap.shape[0]
+    block_pages = block_rows * LANES
+    assert m % block_pages == 0, "tiered path expects block-aligned shards"
+    tau2d = tau_elap.astype(jnp.float32).reshape(-1, LANES)
+    n2d = n_cis.astype(jnp.float32).reshape(-1, LANES)
+    fields = tuple(
+        x.astype(jnp.float32).reshape(-1, LANES)
+        for x in (d.delta, d.mu_t, d.nu, d.gamma, d.alpha, d.b)
+    )
+    vals, blkmax = crawl_value_pallas(
+        tau2d,
+        n2d,
+        fields,
+        bounds.reshape(-1, 1).astype(jnp.float32),
+        thresh.reshape(1, 1).astype(jnp.float32),
+        n_terms,
+        block_rows,
+        interpret,
+    )
+    return vals.reshape(-1), blkmax.max(axis=-1)

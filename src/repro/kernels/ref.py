@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import DerivedEnv, tau_eff, value_ncis
+
+
+def crawl_value_ref(
+    tau: jax.Array,
+    n_cis: jax.Array,
+    d: DerivedEnv,
+    n_terms: int = 8,
+    method: str = "gamma",
+) -> jax.Array:
+    """Reference: V_GREEDY_NCIS(tau^EFF) per page, any shape."""
+    t = tau_eff(tau, n_cis.astype(tau.dtype), d)
+    return value_ncis(t, d, n_terms=n_terms, method=method)
+
+
+def tiered_crawl_value_ref(
+    tau: jax.Array,
+    n_cis: jax.Array,
+    d: DerivedEnv,
+    bounds: jax.Array,
+    thresh: jax.Array,
+    block_pages: int,
+    n_terms: int = 8,
+) -> jax.Array:
+    """Reference including the block-skip semantics: blocks with
+    bound < thresh yield -inf for every page."""
+    v = crawl_value_ref(tau, n_cis, d, n_terms)
+    keep = jnp.repeat(bounds.reshape(-1) >= thresh.reshape(()), block_pages)
+    return jnp.where(keep, v, -jnp.inf)

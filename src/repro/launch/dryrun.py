@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation), record memory analysis,
+cost analysis, and the HLO-derived roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single --out results/dryrun.json
+
+The two os lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 host devices.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, get_shape
+from repro.launch import specs as S
+from repro.launch.hlo_cost import parse_hlo_cost
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e roofline constants (per chip).
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (brief)
+
+
+def mesh_for(name: str):
+    return make_production_mesh(multi_pod=(name == "multi"))
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "full-attention arch: long_500k requires sub-quadratic decode"
+    return None
+
+
+def analyze(compiled, n_devices: int, seconds: float) -> dict:
+    rec = {"compile_s": round(seconds, 1), "n_devices": n_devices}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_raw"] = {
+            "flops": ca.get("flops"),
+            "bytes": ca.get("bytes accessed"),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_raw"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(ma, k)
+        }
+        rec["memory"]["per_device_total"] = (
+            rec["memory"].get("argument_size_in_bytes", 0)
+            + rec["memory"].get("temp_size_in_bytes", 0)
+            + rec["memory"].get("output_size_in_bytes", 0)
+            - rec["memory"].get("alias_size_in_bytes", 0)
+        )
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    hlo = parse_hlo_cost(compiled.as_text(), n_devices)
+    rec["hlo"] = {
+        "flops": hlo["flops"],
+        "bytes": hlo["bytes"],
+        "collective_bytes": hlo["collective_bytes"],
+        "collective_by_type": hlo["collective_by_type"],
+    }
+    rec["roofline_s"] = {
+        "compute": hlo["flops"] / PEAK_FLOPS,
+        "memory": hlo["bytes"] / HBM_BW,
+        "collective": hlo["collective_bytes"] / ICI_BW,
+    }
+    dom = max(rec["roofline_s"], key=rec["roofline_s"].get)
+    rec["bottleneck"] = dom
+    return rec
+
+
+def apply_variant(cfg, variant: str):
+    """§Perf experiment variants (beyond-paper optimizations)."""
+    import dataclasses
+    from repro.models.common import set_sharding_profile
+
+    set_sharding_profile("default")
+    if not variant:
+        return cfg
+    for v in variant.split("+"):
+        if v == "tp0":
+            set_sharding_profile("dp_only")
+        elif v.startswith("chunk"):
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, chunk=int(v[5:])))
+        elif v == "rmi":
+            cfg = dataclasses.replace(cfg, remat="inner")
+        elif v.startswith("micro"):
+            cfg = dataclasses.replace(cfg, train_n_micro=int(v[5:]))
+        elif v in ("sched-lean", "sched-series", "sched-lean-series"):
+            pass  # handled in run_sched_cell
+        else:
+            raise ValueError(f"unknown variant {v!r}")
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, impl: str = "triangle",
+             n_micro: int = 1, variant: str = "") -> dict:
+    mesh = mesh_for(mesh_name)
+    if arch == "paper-crawl":
+        return run_sched_cell(mesh, mesh_name, variant)
+    cfg = configs.get(arch)
+    cfg = apply_variant(cfg, variant)
+    shape = get_shape(shape_name)
+    skip = should_skip(cfg, shape)
+    if skip:
+        return {"skipped": skip}
+    t0 = time.time()
+    if shape.kind == "train":
+        n_micro = max(n_micro, cfg.train_n_micro)
+        kw = {"impl": impl, "n_micro": n_micro}
+    elif shape.kind == "prefill":
+        kw = {"impl": impl}
+    else:
+        kw = {}
+    fn, args = S.make_cell(cfg, shape, mesh, **kw)
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    rec = analyze(compiled, mesh.size, time.time() - t0)
+    rec["mesh"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+          f"compile {rec['compile_s']}s, bottleneck {rec['bottleneck']}, "
+          f"terms {rec['roofline_s']}")
+    mem = rec.get("memory", {})
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis:   {rec['cost_raw']}")
+    return rec
+
+
+def run_sched_cell(mesh, mesh_name: str, variant: str = "") -> dict:
+    """The paper's own production workload: billion-page scheduler round."""
+    from repro.configs import paper_crawl as pc
+    from repro.sched.distributed import sched_input_specs, sharded_crawl_step
+
+    lean = "lean" in variant
+    series = "series" in variant
+    table_grid = None if series else pc.TABLE_GRID
+    k_local = (8 * max(1, pc.SCHED_K // mesh.size)) if lean else None
+    m = pc.PAGES_PER_CHIP * mesh.size
+    state, new_cis, d, table = sched_input_specs(m, mesh, table_grid)
+    t0 = time.time()
+    fn = lambda st, nc, dd, tb: sharded_crawl_step(
+        st, nc, dd, tb, mesh, pc.SCHED_K, 1.0, k_local=k_local
+    )
+    lowered = jax.jit(fn).lower(state, new_cis, d, table)
+    compiled = lowered.compile()
+    rec = analyze(compiled, mesh.size, time.time() - t0)
+    rec["mesh"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rec["pages"] = m
+    print(f"[dryrun] paper-crawl ({m/1e6:.0f}M pages) x {mesh_name}: "
+          f"compile {rec['compile_s']}s, bottleneck {rec['bottleneck']}, "
+          f"terms {rec['roofline_s']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'paper-crawl', or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--impl", default="triangle", choices=["triangle", "masked"])
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--variant", default="",
+                    help="perf variant: tp0|chunkN|microN|sched-lean[-series]")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCH_NAMES) + ["paper-crawl"] \
+        if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in (["sched"] if arch == "paper-crawl" else shapes):
+            for mesh_name in meshes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if args.impl != "triangle" or args.n_micro != 1:
+                    key += f"|{args.impl}|m{args.n_micro}"
+                if args.variant:
+                    key += f"|{args.variant}"
+                try:
+                    rec = run_cell(arch, shape, mesh_name, args.impl,
+                                   args.n_micro, args.variant)
+                except Exception as e:  # record failures, keep going
+                    rec = {"error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] {key} FAILED: {rec['error']}")
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, sort_keys=True)
+    print(f"[dryrun] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Mini HLO cost model over `compiled.as_text()`.
+
+Why: `compiled.cost_analysis()` visits each while-loop body once, so any
+scan-over-layers program undercounts FLOPs/bytes/collectives by the trip
+count (verified: an 8-step lax.scan of matmuls reports 1/8 of the unrolled
+FLOPs). This walker parses the optimized HLO, accumulates per-computation
+costs bottom-up, and multiplies while bodies by their
+`backend_config known_trip_count`.
+
+Cost model (per executed instruction):
+  dot            flops = 2 * |result| * |contracted dims|;  bytes = operands + result
+  fusion/most    bytes = operands + result (XLA's own fusion traffic model);
+                 flops = |result| (elementwise estimate; dots dominate)
+  gather/slice   bytes = result only (operand-bytes would massively overcount
+                 embedding lookups)
+  collectives    wire bytes per chip with ring formulas:
+                 all-gather (n-1)/n * |result|; all-reduce 2(n-1)/n * |result|;
+                 reduce-scatter (n-1) * |result|; all-to-all (n-1)/n * |result|;
+                 collective-permute |result|.
+
+All values are per device (the compiled module is the SPMD-partitioned,
+per-device program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?([%\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?([%\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "all-gather-start",
+    "all-reduce-start", "collective-permute-start",
+}
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "reshape",
+    "broadcast", "transpose",  # usually layout no-ops or fused on TPU
+}
+_RESULT_ONLY_OPS = {"gather", "dynamic-slice", "slice", "pad", "concatenate",
+                    "copy", "dynamic-update-slice"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_type: dict = field(default_factory=lambda: defaultdict(float))
+    # sub-calls: (computation_name, multiplier)
+    calls: list = field(default_factory=list)
+
+
+def _operand_names(line: str, start: int) -> list[str]:
+    # operands of the top-level op call: text within (...) opening at `start`
+    depth = 0
+    buf = ""
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        if ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            buf += ch
+    return [t.lstrip("%") for t in re.findall(r"[%\w.\-]+", buf)]
+
+
+def parse_hlo_cost(text: str, n_partitions: int) -> dict:
+    comps: dict[str, CompCost] = {}
+    shapes: dict[str, str] = {}
+    cur = None
+    entry = None
+
+    for line in text.splitlines():
+        # Computation headers sit at column 0 (instructions are indented);
+        # the header's type tuple may contain /*index=N*/ comments, so no
+        # '='-based filtering.
+        mc = _COMP_RE.match(line) if not line.startswith(" ") else None
+        if mc:
+            cur = mc.group(1).lstrip("%")
+            comps[cur] = CompCost()
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi or cur is None:
+            continue
+        name, rtype, op = mi.group(1).lstrip("%"), mi.group(2), mi.group(3)
+        shapes[name] = rtype
+        c = comps[cur]
+        opstart = mi.end() - 1
+
+        if op == "while":
+            m = _TRIP_RE.search(line)
+            trips = int(m.group(1)) if m else 1
+            mb = re.search(r"body=([%\w.\-]+)", line)
+            mcond = re.search(r"condition=([%\w.\-]+)", line)
+            if mb:
+                c.calls.append((mb.group(1).lstrip("%"), trips))
+            if mcond:
+                c.calls.append((mcond.group(1).lstrip("%"), trips + 1))
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for m in re.finditer(r"(?:to_apply|calls)=([%\w.\-]+)", line):
+                c.calls.append((m.group(1).lstrip("%"), 1))
+            continue
+        if op == "fusion":
+            m = re.search(r"calls=([%\w.\-]+)", line)
+            if m:
+                c.calls.append((m.group(1).lstrip("%"), 1))
+            ops_b = sum(_shape_bytes(shapes.get(o, "")) for o in
+                        _operand_names(line, opstart))
+            c.bytes += _shape_bytes(rtype) + ops_b
+            continue
+        if op in _FREE_OPS:
+            continue
+        if op in _COLLECTIVES:
+            n = _group_size(line, n_partitions)
+            sz = _shape_bytes(rtype)
+            kind = op.replace("-start", "")
+            if kind == "all-gather":
+                wire = sz * (n - 1) / max(n, 1)
+            elif kind == "all-reduce":
+                wire = 2 * sz * (n - 1) / max(n, 1)
+            elif kind == "reduce-scatter":
+                wire = sz * (n - 1)
+            elif kind == "all-to-all":
+                wire = sz * (n - 1) / max(n, 1)
+            else:
+                wire = sz
+            c.coll_bytes += wire
+            c.coll_by_type[kind] += wire
+            c.bytes += sz
+            continue
+        if op == "dot":
+            operands = _operand_names(line, opstart)
+            lhs = shapes.get(operands[0], "") if operands else ""
+            mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            contract = 1
+            if mdims and lhs:
+                dims_str = _SHAPE_RE.search(lhs)
+                if dims_str:
+                    lhs_dims = [int(d) for d in dims_str.group(2).split(",") if d]
+                    for di in mdims.group(1).split(","):
+                        if di:
+                            contract *= lhs_dims[int(di)]
+            c.flops += 2.0 * _shape_elems(rtype) * contract
+            c.bytes += _shape_bytes(rtype) + sum(
+                _shape_bytes(shapes.get(o, "")) for o in operands[:2]
+            )
+            continue
+        if op in _RESULT_ONLY_OPS:
+            c.bytes += _shape_bytes(rtype)
+            c.flops += 0.0
+            continue
+        if op == "scatter":
+            operands = _operand_names(line, opstart)
+            c.bytes += _shape_bytes(rtype) + sum(
+                _shape_bytes(shapes.get(o, "")) for o in operands[1:]
+            )
+            continue
+        # default: elementwise-ish
+        c.flops += _shape_elems(rtype)
+        ops_b = sum(_shape_bytes(shapes.get(o, "")) for o in
+                    _operand_names(line, opstart))
+        c.bytes += _shape_bytes(rtype) + ops_b
+
+    # bottom-up accumulation with memoization (call graph is a DAG)
+    memo: dict[str, tuple] = {}
+
+    def total(name: str):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, 0.0, {})
+        f, b, cb = c.flops, c.bytes, c.coll_bytes
+        ct = dict(c.coll_by_type)
+        for callee, mult in c.calls:
+            sf, sb, scb, sct = total(callee)
+            f += mult * sf
+            b += mult * sb
+            cb += mult * scb
+            for k, v in sct.items():
+                ct[k] = ct.get(k, 0.0) + mult * v
+        memo[name] = (f, b, cb, ct)
+        return memo[name]
+
+    f, b, cb, ct = total(entry)
+    return {
+        "flops": f,
+        "bytes": b,
+        "collective_bytes": cb,
+        "collective_by_type": ct,
+        "entry": entry,
+        "n_computations": len(comps),
+    }

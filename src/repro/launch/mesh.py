@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips (data=FSDP+batch, model=tensor).
+Multi-pod:  2x16x16 = 512 chips; the extra leading "pod" axis is pure data
+parallelism (batch + gradient all-reduce) so the only traffic that crosses the
+pod boundary is one gradient reduction per step — weight/optimizer FSDP shards
+stay inside a pod (see models.common.LOGICAL_RULES).
+
+Defined as functions so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever this host has — used by tests and CPU examples."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,221 @@
+"""Abstract inputs (ShapeDtypeStruct + NamedSharding) and step callables for
+every (architecture x input-shape x mesh) dry-run cell.
+
+Sharding policy (see DESIGN.md §4):
+  batch dims   -> ("pod", "data")                 (when divisible)
+  KV caches    -> kv-heads over "model" when divisible, else KV sequence over
+                  "model" (flash-decoding-style partial softmax via SPMD);
+                  long_500k (batch=1) shards KV seq over ("data", "model").
+  SSM states   -> batch over data; the widest inner dim over "model".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import model as M
+from repro.models.common import pad_vocab
+from repro.optim import make_optimizer
+from repro.train.step import TrainState, train_step
+
+
+def _axes(mesh: Mesh, *names):
+    out = tuple(a for a in names if a in mesh.axis_names)
+    return out or None
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_spec_dim(mesh: Mesh, b: int):
+    ax = _axes(mesh, "pod", "data")
+    return ax if (ax and b % _size(mesh, ax) == 0) else None
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                   with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    bs = batch_spec_dim(mesh, b)
+    out = {"tokens": sds((b, s), jnp.int32, mesh, P(bs, None))}
+    if with_labels:
+        out["labels"] = sds((b, s), jnp.int32, mesh, P(bs, None))
+    if cfg.frontend == "audio_frames":
+        out["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16, mesh,
+                            P(bs, None, None))
+    if cfg.frontend == "vision_patches":
+        out["patches"] = sds((b, cfg.n_prefix, cfg.d_model), jnp.bfloat16,
+                             mesh, P(bs, None, None))
+    return out
+
+
+def abstract_params(cfg: ModelConfig, max_seq: int, mesh: Mesh):
+    pspecs = M.specs(cfg, max_seq, mesh)
+    shapes = jax.eval_shape(lambda k: M.init(k, cfg, max_seq),
+                            jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda sd, sp: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        shapes, pspecs,
+    ), pspecs
+
+
+def _drop_dim(spec: P, dim: int, ndim: int) -> P:
+    t = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return P(*(t[:dim] + t[dim + 1:]))
+
+
+def abstract_opt_state(optimizer_name: str, params_abs, pspecs, mesh: Mesh):
+    opt = make_optimizer(optimizer_name)
+    shapes = jax.eval_shape(opt.init, params_abs)
+    if optimizer_name == "adamw":
+        sspecs = {"m": pspecs, "v": pspecs}
+    else:  # adafactor: factored states drop one of the two trailing dims
+        def st_spec(sd, sp):
+            if sd.ndim < 2:
+                return {"v": sp}
+            return {"vr": _drop_dim(sp, sd.ndim - 1, sd.ndim),
+                    "vc": _drop_dim(sp, sd.ndim - 2, sd.ndim)}
+
+        sspecs = {"s": jax.tree.map(st_spec, params_abs, pspecs)}
+    return jax.tree.map(
+        lambda sd, sp: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        shapes, sspecs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode cache shardings
+
+
+def _kv_spec(cfg: ModelConfig, mesh: Mesh, b: int, s: int, lead: int):
+    """Spec for (lead..., B, S, Hkv, hd)."""
+    model = mesh.shape.get("model", 1)
+    bs = batch_spec_dim(mesh, b)
+    lead_dims = (None,) * lead
+    if cfg.n_kv_heads % model == 0 and cfg.n_kv_heads >= model:
+        return P(*lead_dims, bs, None, _axes(mesh, "model"), None)
+    if bs is None:  # batch=1 long-context: shard seq over everything
+        both = _axes(mesh, "data", "model")
+        if both and s % _size(mesh, both) == 0:
+            return P(*lead_dims, None, both, None, None)
+    if s % model == 0:
+        return P(*lead_dims, bs, _axes(mesh, "model"), None, None)
+    return P(*lead_dims, bs, None, None, None)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh):
+    b, s_max = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(M.init_cache, cfg, b, s_max)
+    )
+    model = mesh.shape.get("model", 1)
+    bs = batch_spec_dim(mesh, b)
+
+    def spec_of(path, sd):
+        name = path[0].name if hasattr(path[0], "name") else str(path[0])
+        if name in ("k", "v", "xk", "xv"):
+            lead = sd.ndim - 4
+            return _kv_spec(cfg, mesh, b, sd.shape[-3], lead)
+        if name == "pos":
+            return P()
+        # ssm states: (lead..., B, inner...) — batch over data, widest inner
+        # dim over model when divisible.
+        dims = [None] * sd.ndim
+        for i, n in enumerate(sd.shape):
+            if n == b and bs is not None:
+                dims[i] = bs
+                break
+        best, best_i = 0, None
+        for i in range(sd.ndim - 1, -1, -1):
+            if dims[i] is None and sd.shape[i] % model == 0 and sd.shape[i] >= model:
+                if sd.shape[i] > best:
+                    best, best_i = sd.shape[i], i
+        if best_i is not None:
+            dims[best_i] = _axes(mesh, "model")
+        return P(*dims)
+
+    flat, treedef = jax.tree.flatten_with_path(cache)
+    out = [
+        jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=NamedSharding(mesh, spec_of(path, sd)),
+        )
+        for path, sd in flat
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# dry-run cells
+
+
+def make_train_cell(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                    impl: str = "triangle", n_micro: int = 1):
+    params_abs, pspecs = abstract_params(cfg, shape.seq_len, mesh)
+    opt_abs = abstract_opt_state(cfg.optimizer, params_abs, pspecs, mesh)
+    state_abs = TrainState(params=params_abs, opt_state=opt_abs,
+                           step=jax.ShapeDtypeStruct(
+                               (), jnp.int32,
+                               sharding=NamedSharding(mesh, P())))
+    batch_abs = abstract_batch(cfg, shape, mesh, with_labels=True)
+    opt = make_optimizer(cfg.optimizer)
+
+    def fn(state, batch):
+        return train_step(cfg, opt, state, batch, mesh=mesh, impl=impl,
+                          n_micro=n_micro)
+
+    return jax.jit(fn, donate_argnums=(0,)), (state_abs, batch_abs)
+
+
+def make_prefill_cell(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                      impl: str = "triangle"):
+    params_abs, _ = abstract_params(cfg, shape.seq_len, mesh)
+    batch_abs = abstract_batch(cfg, shape, mesh, with_labels=False)
+
+    def fn(params, batch):
+        return M.prefill(cfg, params, batch, s_max=shape.seq_len, mesh=mesh,
+                         impl=impl)
+
+    return jax.jit(fn), (params_abs, batch_abs)
+
+
+def make_decode_cell(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh):
+    b = shape.global_batch
+    params_abs, _ = abstract_params(cfg, shape.seq_len, mesh)
+    cache_abs = abstract_cache(cfg, shape, mesh)
+    bs = batch_spec_dim(mesh, b)
+    token_abs = sds((b, 1), jnp.int32, mesh, P(bs, None))
+    pos_abs = sds((), jnp.int32, mesh, P())
+
+    def fn(params, token, pos, cache):
+        return M.decode_step(cfg, params, token, pos, cache, mesh=mesh)
+
+    return jax.jit(fn, donate_argnums=(3,)), (params_abs, token_abs, pos_abs,
+                                              cache_abs)
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh, **kw):
+    if shape.kind == "train":
+        return make_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_cell(cfg, shape, mesh, **kw)
+    return make_decode_cell(cfg, shape, mesh)

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Local (CPU/1-host) runs execute reduced or full configs on whatever devices
+exist; on a real fleet the same entrypoint builds the production mesh and
+shards per DESIGN.md §4. Auto-resumes from the newest checkpoint (fault
+tolerance: preempt/restart-safe).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --reduced --mesh local
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro import configs
+from repro.configs.base import reduced
+from repro.data import CrawlRefreshedCorpus, SyntheticLMData
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import cosine_schedule, make_optimizer
+from repro.train.step import TrainState, train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--data", choices=["synthetic", "crawl"], default="crawl")
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = (make_local_mesh() if args.mesh == "local"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+
+    if args.data == "crawl":
+        data = CrawlRefreshedCorpus(m=2048, vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch)
+        get_batch = lambda i: data.batch_at(i)[0]
+    else:
+        data = SyntheticLMData(cfg.vocab, args.seq, args.batch)
+        get_batch = data.batch_at
+
+    params = M.init(jax.random.PRNGKey(0), cfg, max_seq=args.seq)
+    opt = make_optimizer(cfg.optimizer,
+                         cosine_schedule(args.lr, 20, args.steps))
+    state = TrainState(params=params, opt_state=opt.init(params),
+                       step=jnp.int32(0))
+    if args.ckpt_dir:
+        restored, step0, _ = ckpt.restore_latest(args.ckpt_dir, state)
+        if restored is not None:
+            state = restored
+            print(f"[train] resumed from step {step0}")
+
+    step_fn = jax.jit(functools.partial(train_step, cfg, opt, mesh=mesh))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n/1e6:.1f}M params on {mesh.size} device(s)")
+    t0 = time.perf_counter()
+    for i in range(int(state.step), args.steps):
+        state, metrics = step_fn(state, get_batch(i))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"[train] step {i:4d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['gnorm']):.2f}")
+        if args.ckpt_dir and i and i % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i, state)
+    print(f"[train] {args.steps} steps in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Model zoo: composable JAX definitions for the assigned architectures."""
+from repro.models import model
+from repro.models.model import (
+    DecodeCache,
+    decode_step,
+    forward_train,
+    init,
+    init_cache,
+    param_defs,
+    prefill,
+    specs,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,215 @@
+"""Shared model infrastructure: parameter definitions with logical sharding
+axes, initialization, norms, rotary embeddings, and dtype policy.
+
+Parameters are plain nested dicts of arrays. Each model builds a parallel tree
+of `ParamDef`s (shape + logical axes + init); `init_params` materializes it and
+`param_specs` lowers logical axes to mesh `PartitionSpec`s with automatic
+divisibility fallback (a dim that does not divide the assigned mesh axes is
+left unsharded rather than relying on GSPMD padding).
+
+Logical axes:
+    fsdp    weight dim sharded over the data axis (ZeRO-3 storage)
+    tensor  weight dim sharded over the model axis (TP)
+    layers / None   unsharded (layer-stacked leading dims etc.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    logical: tuple          # per-dim logical axis name (or None)
+    init: str = "normal"    # normal | zeros | ones | embed
+    scale: float = 1.0      # stddev multiplier (normal) — fan-in handled here
+
+
+def dense_def(d_in: int, d_out: int, *, axes=("fsdp", "tensor"),
+              scale: float = 1.0) -> ParamDef:
+    return ParamDef((d_in, d_out), axes, "normal", scale)
+
+
+def stack(n: int, tree):
+    """Prepend a stacked-layers dim to every ParamDef in the tree."""
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, (None,) + p.logical, p.init, p.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def init_params(key: jax.Array, defs, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            # fan-in scaled normal; for stacked defs the fan-in dim is shape[-2]
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            std = p.scale / math.sqrt(max(fan_in, 1))
+            if p.init == "embed":
+                std = p.scale
+            out.append(std * jax.random.normal(k, p.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# Logical-axis -> mesh-axis assignment. The pod axis is pure data parallelism
+# (batch only): FSDP weight shards stay within a pod so the per-layer weight
+# all-gathers ride the intra-pod ICI, not the cross-pod links.
+LOGICAL_RULES = {
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "heads": ("model",),
+}
+
+_DEFAULT_RULES = dict(LOGICAL_RULES)
+
+
+def set_sharding_profile(profile: str) -> None:
+    """Switch the logical->mesh assignment (a §Perf lever, applied before
+    tracing). Profiles:
+      default   FSDP(data) x TP(model)
+      dp_only   no tensor parallelism: "model" becomes a second FSDP/DP axis —
+                right for small-d models where 16-way TP is all overhead.
+    """
+    LOGICAL_RULES.clear()
+    LOGICAL_RULES.update(_DEFAULT_RULES)
+    if profile == "dp_only":
+        LOGICAL_RULES.update({
+            "fsdp": ("data", "model"),
+            "tensor": (),
+            "batch": ("pod", "data", "model"),
+            "seq": (),
+            "heads": (),
+        })
+    elif profile != "default":
+        raise ValueError(profile)
+
+
+def _mesh_axes(mesh: Mesh, logical: str | None):
+    if logical is None:
+        return None
+    axes = tuple(a for a in LOGICAL_RULES.get(logical, ()) if a in mesh.axis_names)
+    return axes or None
+
+
+def spec_for(p: ParamDef, mesh: Mesh) -> P:
+    dims = []
+    for size, logical in zip(p.shape, p.logical):
+        axes = _mesh_axes(mesh, logical)
+        if axes is None:
+            dims.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        dims.append(axes if size % total == 0 else None)
+    return P(*dims)
+
+
+def param_specs(defs, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: spec_for(p, mesh),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def constrain(x: jax.Array, mesh: Mesh | None, *logical):
+    """with_sharding_constraint via logical dims, with divisibility fallback."""
+    if mesh is None:
+        return x
+    dims = []
+    for size, l in zip(x.shape, logical):
+        axes = _mesh_axes(mesh, l)
+        if axes is None:
+            dims.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        dims.append(axes if size % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*dims))
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_defs(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDef((d,), (None,), "ones"),
+                "bias": ParamDef((d,), (None,), "zeros")}
+    return {"scale": ParamDef((d,), (None,), "zeros")}  # rmsnorm: (1+scale)
+
+
+def apply_norm(cfg, p, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoid_pos(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple

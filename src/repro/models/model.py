@@ -1,0 +1,508 @@
+"""Model registry: parameter definitions, train forward, prefill and decode for
+every assigned architecture family.
+
+API (all pure functions of (cfg, params, ...)):
+    param_defs(cfg, max_seq)            -> ParamDef tree
+    init(key, cfg, max_seq)             -> params
+    forward_train(cfg, params, batch)   -> (logits f32, aux loss)
+    init_cache(cfg, batch, s_max)       -> cache pytree (decode state)
+    prefill(cfg, params, batch, s_max)  -> (last logits, cache, pos)
+    decode_step(cfg, params, token, pos, cache) -> (logits, cache)
+
+batch: {"tokens": (B,S) i32, "labels": (B,S) i32,
+        "frames": (B,enc_seq,d) [audio], "patches": (B,n_prefix,d) [vlm]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xl
+from repro.models.common import (
+    ParamDef,
+    apply_norm,
+    constrain,
+    init_params as _init,
+    norm_defs,
+    param_specs as _specs,
+    sinusoid_pos,
+    stack,
+)
+from repro.models import transformer as tfm
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+
+
+def param_defs(cfg: ModelConfig, max_seq: int):
+    d = {"embed": tfm.embed_defs(cfg, max_seq)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        d["blocks"] = tfm.dense_stack_defs(cfg)
+    elif fam == "encdec":
+        d["blocks"] = stack(cfg.n_layers, tfm.block_defs(cfg, cross=True))
+        d["enc"] = {
+            "blocks": stack(cfg.n_enc_layers, tfm.block_defs(cfg)),
+            "ln_post": norm_defs(cfg, cfg.d_model),
+        }
+    elif fam == "ssm":  # xLSTM
+        per = cfg.ssm.mlstm_per_group
+        n_groups = cfg.n_layers // (per + 1)
+        d["groups"] = stack(
+            n_groups,
+            {
+                "m": stack(per, {"ln": norm_defs(cfg, cfg.d_model),
+                                 "cell": xl.mlstm_defs(cfg)}),
+                "s": {
+                    "ln": norm_defs(cfg, cfg.d_model),
+                    "cell": xl.slstm_defs(cfg),
+                    "ln2": norm_defs(cfg, cfg.d_model),
+                },
+            },
+        )
+    elif fam == "hybrid":  # zamba2
+        n_groups = cfg.n_layers // cfg.attn_every
+        d["groups"] = stack(
+            n_groups,
+            {"m": stack(cfg.attn_every, {"ln": norm_defs(cfg, cfg.d_model),
+                                         "mix": ssm_mod.mamba_defs(cfg)})},
+        )
+        d["shared"] = tfm.block_defs(cfg)
+        d["shared_in"] = ParamDef((2 * cfg.d_model, cfg.d_model),
+                                  ("fsdp", "tensor"))
+        if cfg.lora_rank:
+            d["lora"] = stack(n_groups, _lora_only_defs(cfg))
+    else:
+        raise ValueError(fam)
+    return d
+
+
+def _lora_only_defs(cfg):
+    full = tfm.block_defs(cfg, lora_rank=cfg.lora_rank)
+    return {"attn": {k: v for k, v in full["attn"].items() if "lora" in k},
+            "mlp": {k: v for k, v in full["mlp"].items() if "lora" in k}}
+
+
+def init(key, cfg: ModelConfig, max_seq: int, dtype=jnp.float32):
+    return _init(key, param_defs(cfg, max_seq), dtype)
+
+
+def specs(cfg: ModelConfig, max_seq: int, mesh):
+    return _specs(param_defs(cfg, max_seq), mesh)
+
+
+def _merge_lora(shared, lora_site):
+    return {
+        **shared,
+        "attn": {**shared["attn"], **lora_site["attn"]},
+        "mlp": {**shared["mlp"], **lora_site["mlp"]},
+    }
+
+
+# ---------------------------------------------------------------------------
+# train forward
+
+
+def _embed_in(cfg, params, batch, dtype):
+    tokens = batch["tokens"]
+    x = tfm.embed_apply(cfg, params["embed"], tokens, dtype)
+    if cfg.family == "vlm":
+        x = jax.lax.dynamic_update_slice(
+            x, batch["patches"].astype(dtype), (0, 0, 0)
+        )
+    if cfg.pos == "learned":
+        s = tokens.shape[1]
+        x = x + params["embed"]["pos"][:s].astype(dtype)
+    return x
+
+
+def _encoder(cfg, params, frames, mesh, impl):
+    dtype = frames.dtype
+    x = frames + sinusoid_pos(frames.shape[1], cfg.d_model, dtype)
+    enc = params["enc"]
+
+    def body(carry, p):
+        h, _ = carry
+        h, a = tfm.block_apply(cfg, p, h, jnp.arange(h.shape[1]), mesh,
+                               causal=False, impl="masked")
+        return (h, a), None
+
+    (x, _), _ = jax.lax.scan(
+        tfm._maybe_remat(cfg, body), (x, jnp.float32(0.0)), enc["blocks"]
+    )
+    return apply_norm(cfg, enc["ln_post"], x)
+
+
+def forward_hidden(cfg: ModelConfig, params, batch, mesh=None, impl="triangle"):
+    """Run the stack, return (final hidden states, aux loss) — the training
+    loss computes logits chunk-by-chunk from these (never materializing the
+    full (B, S, V) f32 tensor)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_in(cfg, params, batch, dtype)
+    x = constrain(x, mesh, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, aux = tfm.dense_stack_apply(cfg, params["blocks"], x, positions,
+                                       mesh, impl=impl)
+    elif cfg.family == "encdec":
+        enc_out = _encoder(cfg, params, batch["frames"].astype(dtype), mesh, impl)
+        x, aux = tfm.dense_stack_apply(cfg, params["blocks"], x, positions,
+                                       mesh, impl=impl, enc_out=enc_out)
+    elif cfg.family == "ssm":
+        x = _xlstm_stack(cfg, params, x, mesh)
+    elif cfg.family == "hybrid":
+        x = _zamba_stack(cfg, params, x, positions, mesh, impl)
+    return x, aux
+
+
+def forward_train(cfg: ModelConfig, params, batch, mesh=None, impl="triangle"):
+    x, aux = forward_hidden(cfg, params, batch, mesh, impl)
+    return tfm.logits_apply(cfg, params["embed"], x), aux
+
+
+def _xlstm_stack(cfg, params, x, mesh):
+    def group(carry, gp):
+        h = carry
+
+        def mbody(hh, mp):
+            y = xl.mlstm_apply(cfg, mp["cell"], apply_norm(cfg, mp["ln"], hh))
+            return hh + y, None
+
+        if cfg.remat == "inner":
+            mbody = jax.checkpoint(mbody, prevent_cse=False)
+        h, _ = jax.lax.scan(mbody, h, gp["m"])
+        sp = gp["s"]
+        h = h + xl.slstm_apply(cfg, sp["cell"], apply_norm(cfg, sp["ln"], h))
+        h = h + xl.slstm_ffn(cfg, sp["cell"], apply_norm(cfg, sp["ln2"], h))
+        h = constrain(h, mesh, "batch", "seq", None)
+        return h, None
+
+    x, _ = jax.lax.scan(tfm._maybe_remat(cfg, group), x, params["groups"])
+    return x
+
+
+def _zamba_stack(cfg, params, x, positions, mesh, impl):
+    e0 = x  # original embeddings, concatenated into every shared-block input
+    shared = params["shared"]
+    w_in = params["shared_in"]
+    has_lora = cfg.lora_rank > 0
+
+    def group(carry, gp):
+        h = carry
+
+        def mbody(hh, mp):
+            y = ssm_mod.mamba_apply(cfg, mp["mix"], apply_norm(cfg, mp["ln"], hh))
+            return hh + y, None
+
+        if cfg.remat == "inner":
+            mbody = jax.checkpoint(mbody, prevent_cse=False)
+        h, _ = jax.lax.scan(mbody, h, gp["m"])
+        p_blk = _merge_lora(shared, gp["lora"]) if has_lora else shared
+        inp = jnp.einsum(
+            "bsd,dt->bst", jnp.concatenate([h, e0], axis=-1),
+            w_in.astype(h.dtype),
+        )
+        y, _ = tfm.block_apply(cfg, p_blk, inp, positions, mesh, causal=True,
+                               impl=impl, lora=has_lora)
+        h = h + y - inp  # block returns inp+delta; keep only the delta path
+        h = constrain(h, mesh, "batch", "seq", None)
+        return h, None
+
+    xs = params["groups"] if not has_lora else (
+        {"m": params["groups"]["m"], "lora": params["lora"]}
+    )
+    x, _ = jax.lax.scan(tfm._maybe_remat(cfg, group), x, xs)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+class DecodeCache(NamedTuple):
+    k: Any = None
+    v: Any = None
+    xk: Any = None   # enc-dec cross keys
+    xv: Any = None
+    ssm: Any = None  # mamba / xlstm states
+    pos: Any = None
+
+
+def _kv_shape(cfg, b, s_max):
+    if cfg.local_global:
+        return (cfg.n_layers // 2, 2, b, s_max, cfg.n_kv_heads, cfg.hd)
+    return (cfg.n_layers, b, s_max, cfg.n_kv_heads, cfg.hd)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        sh = _kv_shape(cfg, batch, s_max)
+        return DecodeCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype),
+                           pos=jnp.int32(0))
+    if fam == "encdec":
+        sh = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.hd)
+        xsh = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd)
+        return DecodeCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype),
+                           xk=jnp.zeros(xsh, dtype), xv=jnp.zeros(xsh, dtype),
+                           pos=jnp.int32(0))
+    if fam == "ssm":
+        per = cfg.ssm.mlstm_per_group
+        g = cfg.n_layers // (per + 1)
+        m_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g, per) + x.shape),
+            xl.init_mlstm_state(cfg, batch),
+        )
+        s_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g,) + x.shape),
+            xl.init_slstm_state(cfg, batch),
+        )
+        return DecodeCache(ssm={"m": m_state, "s": s_state}, pos=jnp.int32(0))
+    if fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        m_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g, cfg.attn_every) + x.shape),
+            ssm_mod.init_mamba_state(cfg, batch),
+        )
+        sh = (g, batch, s_max, cfg.n_kv_heads, cfg.hd)
+        return DecodeCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype),
+                           ssm=m_state, pos=jnp.int32(0))
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+
+
+def prefill(cfg: ModelConfig, params, batch, s_max: int, mesh=None,
+            impl="triangle", cache_dtype=jnp.bfloat16):
+    """Run the prompt, return (last-token logits, filled cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_in(cfg, params, batch, dtype)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    fam = cfg.family
+
+    def pad_seq(arr):  # (..., s, h, d) -> (..., s_max, h, d)
+        pad = s_max - arr.shape[-3]
+        if pad == 0:
+            return arr.astype(cache_dtype)
+        cfgp = [(0, 0)] * arr.ndim
+        cfgp[-3] = (0, pad)
+        return jnp.pad(arr.astype(cache_dtype), cfgp)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, p):
+            h, aux = carry
+            if cfg.local_global:
+                ks, vs = [], []
+                for nm, win in (("local", cfg.window), ("global", 0)):
+                    hn = apply_norm(cfg, p[nm]["ln1"], h)
+                    _, k, v = tfm.qkv(cfg, p[nm]["attn"], hn, hn, positions)
+                    ks.append(k); vs.append(v)
+                    h, a = tfm.block_apply(cfg, p[nm], h, positions, mesh,
+                                           causal=True, window=win, impl=impl)
+                    aux = aux + a
+                return (h, aux), (jnp.stack(ks), jnp.stack(vs))
+            hn = apply_norm(cfg, p["ln1"], h)
+            _, k, v = tfm.qkv(cfg, p["attn"], hn, hn, positions)
+            h, a = tfm.block_apply(cfg, p, h, positions, mesh, causal=True,
+                                   window=cfg.window, impl=impl)
+            return (h, aux + a), (k, v)
+
+        (x, _), (ks, vs) = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), params["blocks"]
+        )
+        cache = DecodeCache(k=pad_seq(ks), v=pad_seq(vs), pos=jnp.int32(s))
+    elif fam == "encdec":
+        enc_out = _encoder(cfg, params, batch["frames"].astype(dtype), mesh, impl)
+
+        def body(carry, p):
+            h, aux = carry
+            hn = apply_norm(cfg, p["ln1"], h)
+            _, k, v = tfm.qkv(cfg, p["attn"], hn, hn, positions)
+            xk, xv = tfm.cross_kv(cfg, p["xattn"], enc_out)
+            h, a = tfm.block_apply(cfg, p, h, positions, mesh, causal=True,
+                                   impl=impl, enc_out=enc_out)
+            return (h, aux + a), (k, v, xk, xv)
+
+        (x, _), (ks, vs, xks, xvs) = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), params["blocks"]
+        )
+        cache = DecodeCache(k=pad_seq(ks), v=pad_seq(vs),
+                            xk=xks.astype(cache_dtype),
+                            xv=xvs.astype(cache_dtype), pos=jnp.int32(s))
+    elif fam == "ssm":
+        # Chunk-parallel prompt processing, collecting the recurrent states.
+        def group(carry, gp):
+            h = carry
+
+            def mbody(hh, mp):
+                y, st = xl.mlstm_apply(cfg, mp["cell"],
+                                       apply_norm(cfg, mp["ln"], hh),
+                                       return_state=True)
+                return hh + y, st
+
+            h, mst = jax.lax.scan(mbody, h, gp["m"])
+            sp = gp["s"]
+            y, sst = xl.slstm_apply(cfg, sp["cell"],
+                                    apply_norm(cfg, sp["ln"], h),
+                                    return_state=True)
+            h = h + y
+            h = h + xl.slstm_ffn(cfg, sp["cell"], apply_norm(cfg, sp["ln2"], h))
+            return h, (mst, sst)
+
+        x, (m_state, s_state) = jax.lax.scan(group, x, params["groups"])
+        cache = DecodeCache(ssm={"m": m_state, "s": s_state}, pos=jnp.int32(s))
+    elif fam == "hybrid":
+        e0 = x
+        shared = params["shared"]
+        w_in = params["shared_in"]
+        has_lora = cfg.lora_rank > 0
+
+        def group(carry, xs):
+            h = carry
+            gp = xs
+            lora_site = None
+            if has_lora:
+                gp, lora_site = xs
+
+            def mbody(hh, mp):
+                y, st = ssm_mod.mamba_apply(cfg, mp["mix"],
+                                            apply_norm(cfg, mp["ln"], hh),
+                                            return_state=True)
+                return hh + y, st
+
+            h, mst = jax.lax.scan(mbody, h, gp["m"])
+            p_blk = _merge_lora(shared, lora_site) if has_lora else shared
+            inp = jnp.einsum("bsd,dt->bst", jnp.concatenate([h, e0], -1),
+                             w_in.astype(h.dtype))
+            hn = apply_norm(cfg, p_blk["ln1"], inp)
+            _, k, v = tfm.qkv(cfg, p_blk["attn"], hn, hn, positions,
+                              lora=has_lora)
+            y, _ = tfm.block_apply(cfg, p_blk, inp, positions, mesh,
+                                   causal=True, impl=impl, lora=has_lora)
+            h = h + y - inp
+            return h, (mst, k, v)
+
+        xs = (params["groups"], params["lora"]) if has_lora else params["groups"]
+        x, (m_state, ks, vs) = jax.lax.scan(group, x, xs)
+        cache = DecodeCache(k=pad_seq(ks), v=pad_seq(vs), ssm=m_state,
+                            pos=jnp.int32(s))
+    else:
+        raise ValueError(fam)
+
+    logits = tfm.logits_apply(cfg, params["embed"], x[:, -1:])
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, cache: DecodeCache,
+                mesh=None, patches=None):
+    """token: (B, 1) i32; pos: scalar i32 (position being generated).
+    Returns (logits (B, vocab_padded) f32, new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = tfm.embed_apply(cfg, params["embed"], token, dtype)
+    if cfg.pos == "learned":
+        x = x + params["embed"]["pos"][pos][None, None].astype(dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.local_global:
+            def body(h, xs):
+                p, kc, vc = xs
+                h, k1, v1 = tfm.block_decode(cfg, p["local"], h, pos, kc[0],
+                                             vc[0], window=cfg.window)
+                h, k2, v2 = tfm.block_decode(cfg, p["global"], h, pos, kc[1],
+                                             vc[1], window=0)
+                return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        else:
+            def body(h, xs):
+                p, kc, vc = xs
+                h, kc, vc = tfm.block_decode(cfg, p, h, pos, kc, vc,
+                                             window=cfg.window)
+                return h, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+        cache = cache._replace(k=k, v=v, pos=pos + 1)
+    elif fam == "encdec":
+        def body(h, xs):
+            p, kc, vc, xk, xv = xs
+            h, kc, vc = tfm.block_decode(cfg, p, h, pos, kc, vc,
+                                         enc_kv=(xk, xv))
+            return h, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["blocks"], cache.k, cache.v, cache.xk, cache.xv)
+        )
+        cache = cache._replace(k=k, v=v, pos=pos + 1)
+    elif fam == "ssm":
+        def group(h, xs):
+            gp, mst, sst = xs
+
+            def mbody(hh, xs2):
+                mp, st = xs2
+                y, st = xl.mlstm_decode(cfg, mp["cell"],
+                                        apply_norm(cfg, mp["ln"], hh), st)
+                return hh + y, st
+
+            h, mst = jax.lax.scan(mbody, h, (gp["m"], mst))
+            sp = gp["s"]
+            y, sst = xl.slstm_decode(cfg, sp["cell"],
+                                     apply_norm(cfg, sp["ln"], h), sst)
+            h = h + y
+            h = h + xl.slstm_ffn(cfg, sp["cell"], apply_norm(cfg, sp["ln2"], h))
+            return h, (mst, sst)
+
+        x, (m_new, s_new) = jax.lax.scan(
+            group, x, (params["groups"], cache.ssm["m"], cache.ssm["s"])
+        )
+        cache = cache._replace(ssm={"m": m_new, "s": s_new}, pos=pos + 1)
+    elif fam == "hybrid":
+        e0 = x
+        shared = params["shared"]
+        w_in = params["shared_in"]
+        has_lora = cfg.lora_rank > 0
+
+        def group(h, xs):
+            if has_lora:
+                gp, mst, kc, vc, lora_site = xs
+                p_blk = _merge_lora(shared, lora_site)
+            else:
+                gp, mst, kc, vc = xs
+                p_blk = shared
+
+            def mbody(hh, xs2):
+                mp, st = xs2
+                y, st = ssm_mod.mamba_decode(cfg, mp["mix"],
+                                             apply_norm(cfg, mp["ln"], hh), st)
+                return hh + y, st
+
+            h, mst = jax.lax.scan(mbody, h, (gp["m"], mst))
+            inp = jnp.einsum("bsd,dt->bst", jnp.concatenate([h, e0], -1),
+                             w_in.astype(h.dtype))
+            y, kc, vc = tfm.block_decode(cfg, p_blk, inp, pos, kc, vc,
+                                         lora=has_lora)
+            h = h + y - inp
+            return h, (mst, kc, vc)
+
+        xs = ((params["groups"], cache.ssm, cache.k, cache.v, params["lora"])
+              if has_lora else (params["groups"], cache.ssm, cache.k, cache.v))
+        x, (m_new, k, v) = jax.lax.scan(group, x, xs)
+        cache = cache._replace(ssm=m_new, k=k, v=v, pos=pos + 1)
+    else:
+        raise ValueError(fam)
+
+    logits = tfm.logits_apply(cfg, params["embed"], x)
+    return logits[:, 0], cache

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD) mixer — chunked scan for train/prefill, O(1) state decode.
+
+State-space dual form: per head h with state (P x N),
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t ⊗ x_t),   y_t = C_t · h_t + D x_t.
+
+Train evaluates chunks of Q tokens: a masked intra-chunk quadratic term plus an
+inter-chunk state recurrence (lax.scan over chunks keeps the Q x Q decay matrix
+transient at (B, H, Q, Q) instead of materializing all chunks at once).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, apply_norm, rmsnorm
+
+
+def mamba_defs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    n = s.d_state
+    h = d_in // s.head_dim
+    d_conv = d_in + 2 * n
+    total = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((d, total), ("fsdp", "tensor")),
+        "conv_w": ParamDef((s.conv_width, d_conv), (None, "tensor"), "normal", 0.5),
+        "conv_b": ParamDef((d_conv,), ("tensor",), "zeros"),
+        "a_log": ParamDef((h,), (None,), "ones"),
+        "d_skip": ParamDef((h,), (None,), "ones"),
+        "dt_bias": ParamDef((h,), (None,), "zeros"),
+        "norm": {"scale": ParamDef((d_in,), (None,), "zeros")},
+        "out_proj": ParamDef((d_in, d), ("tensor", "fsdp")),
+    }
+
+
+def _pick_chunk(sq: int, chunk: int) -> int:
+    """Largest divisor of sq that is <= chunk (production shapes are aligned;
+    odd smoke/prompt lengths fall back to smaller chunks, worst case 1)."""
+    c = min(chunk, sq)
+    while sq % c:
+        c -= 1
+    return c
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, W-1, d_conv) trailing conv inputs
+    ssd: jax.Array   # (B, H, P, N) state
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n = s.d_state
+    h = d_in // s.head_dim
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_width - 1, d_in + 2 * n), dtype),
+        ssd=jnp.zeros((batch, h, s.head_dim, n), dtype),
+    )
+
+
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n = s.d_state
+    h = d_in // s.head_dim
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _conv(cfg, p, xbc, prepend=None):
+    """Causal depthwise conv over time. xbc: (B, S, Dc)."""
+    w = p["conv_w"].astype(xbc.dtype)          # (W, Dc)
+    width = w.shape[0]
+    if prepend is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = prepend.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i:i + xbc.shape[1]] * w[i] for i in range(width)
+    ) + p["conv_b"].astype(xbc.dtype)
+    return jax.nn.silu(out), xp[:, -(width - 1):]
+
+
+def _heads(cfg, x_in, b_in, c_in, dt, p):
+    s = cfg.ssm
+    h = x_in.shape[-1] // s.head_dim
+    bsz, sq = x_in.shape[0], x_in.shape[1]
+    xh = x_in.reshape(bsz, sq, h, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (H,) negative
+    return xh, b_in, c_in, dt, a
+
+
+def mamba_apply(cfg, p, x, return_state=False):
+    """x: (B, S, d) -> (B, S, d) (or (y, MambaState) with return_state).
+    S must be a multiple of ssm.chunk (or less)."""
+    s = cfg.ssm
+    bsz, sq, _ = x.shape
+    q = _pick_chunk(sq, s.chunk)
+    nc = sq // q
+
+    zxbcdt = jnp.einsum("bsd,dt->bst", x, p["in_proj"].astype(x.dtype))
+    z, xbc0, dt = _split(cfg, zxbcdt)
+    xbc, conv_tail = _conv(cfg, p, xbc0)
+    d_in = s.expand * cfg.d_model
+    n = s.d_state
+    x_in, b_in, c_in = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                        xbc[..., d_in + n:])
+    xh, b_in, c_in, dt, a = _heads(cfg, x_in, b_in, c_in, dt, p)
+
+    f32 = jnp.float32
+    xh_c = xh.reshape(bsz, nc, q, -1, s.head_dim).astype(f32)
+    b_c = b_in.reshape(bsz, nc, q, n).astype(f32)
+    c_c = c_in.reshape(bsz, nc, q, n).astype(f32)
+    dt_c = dt.reshape(bsz, nc, q, -1)
+    da_c = dt_c * a  # (B, nc, Q, H)
+
+    def chunk_step(h_state, inp):
+        xq, bq, cq, dtq, daq = inp  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        cum = jnp.cumsum(daq, axis=1)               # (B,Q,H)
+        total = cum[:, -1]                          # (B,H)
+        # intra-chunk: L_ij = exp(cum_i - cum_j) for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        l_mat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)        # (B,Q,Q)
+        w_ij = scores[..., None] * l_mat * dtq[:, None]    # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_ij, xq)
+        # inter-chunk: y_i += C_i . (exp(cum_i) h_prev)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, h_state, jnp.exp(cum))
+        # state update: h = exp(total) h + sum_j exp(total - cum_j) dt_j B_j x_j
+        decay_j = jnp.exp(total[:, None] - cum) * dtq      # (B,Q,H)
+        h_new = h_state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", decay_j, bq, xq
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((bsz, xh.shape[2], s.head_dim, n), f32)
+    inputs = (
+        xh_c.transpose(1, 0, 2, 3, 4),
+        b_c.transpose(1, 0, 2, 3),
+        c_c.transpose(1, 0, 2, 3),
+        dt_c.transpose(1, 0, 2, 3),
+        da_c.transpose(1, 0, 2, 3),
+    )
+    h_fin, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, sq, -1, s.head_dim)
+    y = y + xh.astype(f32) * p["d_skip"].astype(f32)[:, None]
+    y = y.reshape(bsz, sq, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bst,td->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, MambaState(conv=conv_tail, ssd=h_fin.astype(x.dtype))
+    return out
+
+
+def mamba_decode(cfg, p, x, state: MambaState):
+    """x: (B, 1, d) -> (y, new_state). Exact single-step recurrence."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    d_in = s.expand * cfg.d_model
+    n = s.d_state
+
+    zxbcdt = jnp.einsum("bsd,dt->bst", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split(cfg, zxbcdt)
+    xbc, conv_tail = _conv(cfg, p, xbc, prepend=state.conv)
+    x_in, b_in, c_in = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                        xbc[..., d_in + n:])
+    xh, b_in, c_in, dt, a = _heads(cfg, x_in, b_in, c_in, dt, p)
+
+    f32 = jnp.float32
+    xq = xh[:, 0].astype(f32)         # (B,H,P)
+    bq = b_in[:, 0].astype(f32)       # (B,N)
+    cq = c_in[:, 0].astype(f32)
+    dtq = dt[:, 0]                    # (B,H)
+    decay = jnp.exp(dtq * a)          # (B,H)
+    h_new = state.ssd * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtq, bq, xq
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cq, h_new)
+    y = y + xq * p["d_skip"].astype(f32)[:, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bst,td->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(conv=conv_tail, ssd=h_new)

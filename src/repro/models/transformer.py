@@ -1,0 +1,360 @@
+"""Transformer blocks and scanned stacks (dense / enc-dec / MoE / VLM-prefix).
+
+Layer parameters are stacked along a leading dim and consumed by `lax.scan`
+(small HLO, fast multi-hundred-layer compiles); activation checkpointing wraps
+the scan body. The residual stream is sequence-sharded between blocks
+("seq" -> model axis) so per-chip activation memory is S/|model| even at
+global-batch 256 x 4k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import (
+    ParamDef,
+    apply_norm,
+    constrain,
+    dense_def,
+    norm_defs,
+    pad_vocab,
+    rope,
+    sinusoid_pos,
+    softcap,
+    stack,
+)
+
+
+# ---------------------------------------------------------------------------
+# attention sublayer
+
+
+def attn_defs(cfg: ModelConfig, lora_rank: int = 0):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "wq": dense_def(d, hq * hd),
+        "wk": dense_def(d, hkv * hd),
+        "wv": dense_def(d, hkv * hd),
+        "wo": ParamDef((hq * hd, d), ("tensor", "fsdp"), "normal", 1.0),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((hq * hd,), ("tensor",), "zeros")
+        out["bk"] = ParamDef((hkv * hd,), ("tensor",), "zeros")
+        out["bv"] = ParamDef((hkv * hd,), ("tensor",), "zeros")
+    if lora_rank:
+        for nm, do in (("q", hq * hd), ("k", hkv * hd), ("v", hkv * hd)):
+            out[f"lora_a_{nm}"] = ParamDef((d, lora_rank), ("fsdp", None))
+            out[f"lora_b_{nm}"] = ParamDef((lora_rank, do), (None, "tensor"), "zeros")
+    return out
+
+
+def _proj(p, x, name, bias_name=None, lora=None):
+    y = jnp.einsum("bsd,df->bsf", x, p[name].astype(x.dtype))
+    if bias_name and bias_name in p:
+        y = y + p[bias_name].astype(x.dtype)
+    if lora is not None and f"lora_a_{lora}" in p:
+        y = y + jnp.einsum(
+            "bsd,dr,rf->bsf",
+            x,
+            p[f"lora_a_{lora}"].astype(x.dtype),
+            p[f"lora_b_{lora}"].astype(x.dtype),
+        )
+    return y
+
+
+def qkv(cfg, p, x, kv_x, positions, *, use_rope=True, lora=False, mesh=None):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    lq = "q" if lora else None
+    q = _proj(p, x, "wq", "bq", lq).reshape(b, s, hq, hd)
+    k = _proj(p, kv_x, "wk", "bk", "k" if lora else None)
+    v = _proj(p, kv_x, "wv", "bv", "v" if lora else None)
+    skv = kv_x.shape[1]
+    k = k.reshape(b, skv, hkv, hd)
+    v = v.reshape(b, skv, hkv, hd)
+    if use_rope and cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        kv_positions = positions if kv_x is x else jnp.arange(skv)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    # Keep attention activations head-sharded (TP); without the constraint
+    # GSPMD tends to replicate q/k/v after rope's transposes.
+    q = constrain(q, mesh, "batch", None, "heads", None)
+    k = constrain(k, mesh, "batch", None, "heads", None)
+    v = constrain(v, mesh, "batch", None, "heads", None)
+    return q, k, v
+
+
+def self_attn(cfg, p, x, positions, mesh, *, causal=True, window=0,
+              impl="triangle", q_offset=0, lora=False):
+    q, k, v = qkv(cfg, p, x, x, positions, lora=lora, mesh=mesh)
+    o = flash_attention(
+        q, k, v, causal=causal, window=window, cap=cfg.attn_softcap,
+        q_offset=q_offset, impl=impl,
+    )
+    b, s, _, _ = o.shape
+    o = constrain(o, mesh, "batch", None, "heads", None)
+    return jnp.einsum(
+        "bsf,fd->bsd", o.reshape(b, s, -1), p["wo"].astype(x.dtype)
+    )
+
+
+def self_attn_decode(cfg, p, x, pos, k_cache, v_cache, *, window=0, lora=False):
+    """x: (B, 1, d). Returns (out, k_cache, v_cache) with the new KV written."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    lq = "q" if lora else None
+    q = _proj(p, x, "wq", "bq", lq).reshape(b, 1, hq, hd)
+    k = _proj(p, x, "wk", "bk", "k" if lora else None).reshape(b, 1, hkv, hd)
+    v = _proj(p, x, "wv", "bv", "v" if lora else None).reshape(b, 1, hkv, hd)
+    if cfg.pos == "rope":
+        pos_arr = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1
+    )
+    o = decode_attention(q, k_cache, v_cache, pos, window=window,
+                         cap=cfg.attn_softcap)
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1), p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
+def cross_attn(cfg, p, x, enc_kv, mesh):
+    """enc_kv: precomputed (k, v) each (B, S_enc, Hkv, D) (cached at prefill)."""
+    b, s, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.hd
+    q = _proj(p, x, "wq", "bq").reshape(b, s, hq, hd)
+    k, v = enc_kv
+    o = flash_attention(q, k, v, causal=False, impl="masked",
+                        cap=cfg.attn_softcap)
+    return jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1), p["wo"].astype(x.dtype))
+
+
+def cross_kv(cfg, p, enc_out):
+    b, s, _ = enc_out.shape
+    k = _proj(p, enc_out, "wk", "bk").reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = _proj(p, enc_out, "wv", "bv").reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP sublayer
+
+
+def mlp_defs(cfg: ModelConfig, d: int, f: int, lora_rank: int = 0):
+    if cfg.act == "gelu_mlp":
+        out = {"w_in": dense_def(d, f), "w_out": ParamDef((f, d), ("tensor", "fsdp"))}
+        if cfg.qkv_bias:
+            out["b_in"] = ParamDef((f,), ("tensor",), "zeros")
+            out["b_out"] = ParamDef((d,), (None,), "zeros")
+        return out
+    out = {
+        "w_gate": dense_def(d, f),
+        "w_up": dense_def(d, f),
+        "w_down": ParamDef((f, d), ("tensor", "fsdp")),
+    }
+    if lora_rank:
+        out["lora_a_g"] = ParamDef((d, lora_rank), ("fsdp", None))
+        out["lora_b_g"] = ParamDef((lora_rank, f), (None, "tensor"), "zeros")
+    return out
+
+
+def mlp_apply(cfg, p, x, lora=False):
+    dt = x.dtype
+    if cfg.act == "gelu_mlp":
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt))
+        if "b_in" in p:
+            h = h + p["b_in"].astype(dt)
+        h = jax.nn.gelu(h)
+        y = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(dt))
+        if "b_out" in p:
+            y = y + p["b_out"].astype(dt)
+        return y
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    if lora and "lora_a_g" in p:
+        g = g + jnp.einsum("bsd,dr,rf->bsf", x, p["lora_a_g"].astype(dt),
+                           p["lora_b_g"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", act * u, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# block
+
+
+def block_defs(cfg: ModelConfig, *, cross: bool = False, lora_rank: int = 0):
+    d = cfg.d_model
+    out = {
+        "ln1": norm_defs(cfg, d),
+        "attn": attn_defs(cfg, lora_rank),
+        "ln2": norm_defs(cfg, d),
+    }
+    if cfg.moe is not None:
+        out["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        out["mlp"] = mlp_defs(cfg, d, cfg.d_ff, lora_rank)
+    if cfg.sandwich_norm:
+        out["ln1_post"] = norm_defs(cfg, d)
+        out["ln2_post"] = norm_defs(cfg, d)
+    if cross:
+        out["lnx"] = norm_defs(cfg, d)
+        out["xattn"] = attn_defs(cfg)
+    return out
+
+
+def block_apply(cfg, p, x, positions, mesh, *, causal=True, window=0,
+                impl="triangle", q_offset=0, enc_out=None, lora=False):
+    """Returns (x, aux_loss). enc_out: encoder output for cross-attention
+    (per-layer K/V projections are computed in-block, inside the layer scan)."""
+    x = constrain(x, mesh, "batch", "seq", None)
+    h = apply_norm(cfg, p["ln1"], x)
+    a = self_attn(cfg, p["attn"], h, positions, mesh, causal=causal,
+                  window=window, impl=impl, q_offset=q_offset, lora=lora)
+    if cfg.sandwich_norm:
+        a = apply_norm(cfg, p["ln1_post"], a)
+    x = x + a
+    if enc_out is not None:
+        h = apply_norm(cfg, p["lnx"], x)
+        kv = cross_kv(cfg, p["xattn"], enc_out)
+        x = x + cross_attn(cfg, p["xattn"], h, kv, mesh)
+    x = constrain(x, mesh, "batch", "seq", None)
+    h = apply_norm(cfg, p["ln2"], x)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_apply(cfg, p["moe"], h, mesh)
+    else:
+        f = mlp_apply(cfg, p["mlp"], h, lora=lora)
+    if cfg.sandwich_norm:
+        f = apply_norm(cfg, p["ln2_post"], f)
+    return x + f, aux
+
+
+def block_decode(cfg, p, x, pos, k_cache, v_cache, *, window=0, enc_kv=None,
+                 lora=False):
+    h = apply_norm(cfg, p["ln1"], x)
+    a, k_cache, v_cache = self_attn_decode(
+        cfg, p["attn"], h, pos, k_cache, v_cache, window=window, lora=lora
+    )
+    if cfg.sandwich_norm:
+        a = apply_norm(cfg, p["ln1_post"], a)
+    x = x + a
+    if enc_kv is not None:
+        h = apply_norm(cfg, p["lnx"], x)
+        x = x + cross_attn(cfg, p["xattn"], h, enc_kv, None)
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        f, _ = moe_mod.moe_apply(cfg, p["moe"], h, None)
+    else:
+        f = mlp_apply(cfg, p["mlp"], h, lora=lora)
+    if cfg.sandwich_norm:
+        f = apply_norm(cfg, p["ln2_post"], f)
+    return x + f, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# scanned stacks
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat in ("block", "inner"):
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def dense_stack_defs(cfg: ModelConfig, *, cross: bool = False):
+    """Decoder stack. gemma2-style local/global alternation packs layer pairs."""
+    if cfg.local_global:
+        assert cfg.n_layers % 2 == 0
+        pair = {"local": block_defs(cfg, cross=cross),
+                "global": block_defs(cfg, cross=cross)}
+        return stack(cfg.n_layers // 2, pair)
+    return stack(cfg.n_layers, block_defs(cfg, cross=cross))
+
+
+def dense_stack_apply(cfg, stacked, x, positions, mesh, *, causal=True,
+                      impl="triangle", q_offset=0, enc_out=None):
+    """Scan the stacked blocks; returns (x, total_aux)."""
+
+    if cfg.local_global:
+        def body(carry, p):
+            h, aux = carry
+            h, a1 = block_apply(cfg, p["local"], h, positions, mesh,
+                                causal=causal, window=cfg.window, impl=impl,
+                                q_offset=q_offset, enc_out=enc_out)
+            h, a2 = block_apply(cfg, p["global"], h, positions, mesh,
+                                causal=causal, window=0, impl=impl,
+                                q_offset=q_offset, enc_out=enc_out)
+            return (h, aux + a1 + a2), None
+    else:
+        def body(carry, p):
+            h, aux = carry
+            h, a = block_apply(cfg, p, h, positions, mesh, causal=causal,
+                               window=cfg.window, impl=impl,
+                               q_offset=q_offset, enc_out=enc_out)
+            return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body), (x, jnp.float32(0.0)),
+                               stacked)
+    return x, aux
+
+
+def dense_stack_decode(cfg, stacked, x, pos, cache_k, cache_v, *, enc_kv=None):
+    """cache_k/v: (L, B, S_max, Hkv, D) (or (L/2, 2, ...) packed for gemma2 —
+    handled by treating the pair dim as part of the scan xs)."""
+
+    if cfg.local_global:
+        def body(h, xs):
+            p, kc, vc = xs
+            h, k1, v1 = block_decode(cfg, p["local"], h, pos, kc[0], vc[0],
+                                     window=cfg.window, enc_kv=enc_kv)
+            h, k2, v2 = block_decode(cfg, p["global"], h, pos, kc[1], vc[1],
+                                     window=0, enc_kv=enc_kv)
+            return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+    else:
+        def body(h, xs):
+            p, kc, vc = xs
+            h, kc, vc = block_decode(cfg, p, h, pos, kc, vc,
+                                     window=cfg.window, enc_kv=enc_kv)
+            return h, (kc, vc)
+
+    x, (cache_k, cache_v) = jax.lax.scan(body, x, (stacked, cache_k, cache_v))
+    return x, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+
+
+def embed_defs(cfg: ModelConfig, max_seq: int):
+    vp = pad_vocab(cfg.vocab)
+    out = {"tok": ParamDef((vp, cfg.d_model), ("tensor", "fsdp"), "embed", 0.02)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef((cfg.d_model, vp), ("fsdp", "tensor"), "normal")
+    if cfg.pos == "learned":
+        out["pos"] = ParamDef((max_seq, cfg.d_model), (None, "fsdp"), "embed", 0.02)
+    out["ln_f"] = norm_defs(cfg, cfg.d_model)
+    return out
+
+
+def embed_apply(cfg, p, tokens, dtype):
+    e = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        e = e * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return e
+
+
+def logits_apply(cfg, p, x):
+    head = p["lm_head"] if "lm_head" in p else p["tok"].T
+    x = apply_norm(cfg, p["ln_f"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

@@ -1,0 +1,287 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel
+train, O(1)-state decode) and sLSTM (scalar memory with recurrent gate weights,
+lax.scan train — inherently sequential, which is exactly why xLSTM pairs a few
+of them with many mLSTM blocks).
+
+mLSTM cell (per head, stabilized exponential gating):
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = e^{log f + m_{t-1} - m_t} C_{t-1} + e^{log i - m_t} k_t v_t^T
+    n_t = (same decays) n_{t-1} + e^{log i - m_t} k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+
+The chunkwise form carries (C, n, m) across Q-token chunks and evaluates the
+intra-chunk part as a masked quadratic with per-pair decays — validated against
+the step recurrence (tests/test_models.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, apply_norm, dense_def, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def mlstm_defs(cfg):
+    d = cfg.d_model
+    d_in = 2 * d
+    h = cfg.n_heads
+    return {
+        "up": dense_def(d, 2 * d_in),            # [x_m, z]
+        "conv_w": ParamDef((4, d_in), (None, "tensor"), "normal", 0.5),
+        "conv_b": ParamDef((d_in,), ("tensor",), "zeros"),
+        "wq": dense_def(d_in, d_in),
+        "wk": dense_def(d_in, d_in),
+        "wv": dense_def(d_in, d_in),
+        "w_if": ParamDef((d_in, 2 * h), ("fsdp", None), "normal"),
+        "b_if": ParamDef((2 * h,), (None,), "zeros"),
+        "norm": {"scale": ParamDef((d_in,), (None,), "zeros")},
+        "down": ParamDef((d_in, d), ("tensor", "fsdp")),
+    }
+
+
+def _pick_chunk(sq: int, chunk: int) -> int:
+    """Largest divisor of sq that is <= chunk (production shapes are aligned;
+    odd smoke/prompt lengths fall back to smaller chunks, worst case 1)."""
+    c = min(chunk, sq)
+    while sq % c:
+        c -= 1
+    return c
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, Dk, Dv)
+    n: jax.Array     # (B, H, Dk)
+    m: jax.Array     # (B, H)
+    conv: jax.Array  # (B, 3, d_in)
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.float32) -> MLSTMState:
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = d_in // h
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), dtype),
+        n=jnp.zeros((batch, h, hd), dtype),
+        m=jnp.full((batch, h), -1e30, dtype),
+        conv=jnp.zeros((batch, 3, d_in), dtype),
+    )
+
+
+def _mlstm_qkv_gates(cfg, p, x, conv_state=None):
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    up = jnp.einsum("bsd,dt->bst", x, p["up"].astype(x.dtype))
+    x_m, z = up[..., :d_in], up[..., d_in:]
+    w = p["conv_w"].astype(x.dtype)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, d_in), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x_m], axis=1)
+    xc = sum(xp[:, i:i + x_m.shape[1]] * w[i] for i in range(width))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    b, s, _ = x.shape
+    hd = d_in // h
+    q = jnp.einsum("bst,tu->bsu", xc, p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bst,tu->bsu", xc, p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = jnp.einsum("bst,tu->bsu", x_m, p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = k / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    gates = jnp.einsum("bst,tg->bsg", xc, p["w_if"].astype(x.dtype)) + p[
+        "b_if"
+    ].astype(x.dtype)
+    log_i = gates[..., :h].astype(jnp.float32)
+    log_f = -jax.nn.softplus(-gates[..., h:].astype(jnp.float32))  # log sigmoid
+    return q, k, v, z, log_i, log_f, xp[:, -(width - 1):]
+
+
+def mlstm_apply(cfg, p, x, return_state=False):
+    """Chunkwise-parallel mLSTM. x: (B, S, d)."""
+    s_cfg = cfg.ssm
+    b, sq, d = x.shape
+    qun = _pick_chunk(sq, s_cfg.chunk)
+    nc = sq // qun
+    h = cfg.n_heads
+    q, k, v, z, log_i, log_f, conv_tail = _mlstm_qkv_gates(cfg, p, x)
+    hd = q.shape[-1]
+    f32 = jnp.float32
+
+    def resh(t):
+        return t.reshape(b, nc, qun, h, -1).transpose(1, 0, 3, 2, 4).astype(f32)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)               # (nc, B, H, Q, hd)
+    li = log_i.reshape(b, nc, qun, h).transpose(1, 0, 3, 2)   # (nc, B, H, Q)
+    lf = log_f.reshape(b, nc, qun, h).transpose(1, 0, 3, 2)
+
+    neg = jnp.float32(-1e30)
+    tri = jnp.tril(jnp.ones((qun, qun), bool))
+
+    def chunk(carry, inp):
+        c_st, n_st, m_st = carry
+        qq, kk, vv, lii, lff = inp
+        fcum = jnp.cumsum(lff, axis=-1)                  # (B,H,Q)
+        total = fcum[..., -1:]                           # (B,H,1)
+        # log decay D_ij = fcum_i - fcum_j + li_j  (j <= i)
+        dmat = fcum[..., :, None] - fcum[..., None, :] + lii[..., None, :]
+        dmat = jnp.where(tri, dmat, neg)
+        # inter path log scale: fcum_i + m_prev
+        inter_log = fcum + m_st[..., None]               # (B,H,Q)
+        m_i = jnp.maximum(jnp.max(dmat, axis=-1), inter_log)
+        m_i = jnp.maximum(m_i, -m_i * 0 - 80.0)          # floor for stability
+        w_intra = jnp.exp(dmat - m_i[..., None])          # (B,H,Q,Q)
+        w_inter = jnp.exp(inter_log - m_i)               # (B,H,Q)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) * w_intra
+        num = jnp.einsum("bhqk,bhkd->bhqd", scores, vv) + jnp.einsum(
+            "bhqd,bhde,bhq->bhqe", qq, c_st, w_inter
+        )
+        den = jnp.einsum("bhqk->bhq", scores) + jnp.einsum(
+            "bhqd,bhd,bhq->bhq", qq, n_st, w_inter
+        )
+        hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # carry update
+        m_new = jnp.maximum(m_st + total[..., 0],
+                            jnp.max(total - fcum + lii, axis=-1))
+        sc_prev = jnp.exp(m_st + total[..., 0] - m_new)   # (B,H)
+        sc_j = jnp.exp(total - fcum + lii - m_new[..., None])  # (B,H,Q)
+        c_new = c_st * sc_prev[..., None, None] + jnp.einsum(
+            "bhq,bhqd,bhqe->bhde", sc_j, kk, vv
+        )
+        n_new = n_st * sc_prev[..., None] + jnp.einsum("bhq,bhqd->bhd", sc_j, kk)
+        return (c_new, n_new, m_new), hh
+
+    c0 = jnp.zeros((b, h, hd, hd), f32)
+    n0 = jnp.zeros((b, h, hd), f32)
+    m0 = jnp.full((b, h), -1e30, f32)
+    (c_f, n_f, m_f), hs = jax.lax.scan(chunk, (c0, n0, m0), (qc, kc, vc, li, lf))
+    y = hs.transpose(1, 0, 3, 2, 4).reshape(b, sq, -1).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bst,td->bsd", y, p["down"].astype(x.dtype))
+    if return_state:
+        return out, MLSTMState(c=c_f, n=n_f, m=m_f, conv=conv_tail)
+    return out
+
+
+def mlstm_decode(cfg, p, x, st: MLSTMState):
+    """Single-token step. x: (B, 1, d)."""
+    q, k, v, z, log_i, log_f, conv_tail = _mlstm_qkv_gates(
+        cfg, p, x, conv_state=st.conv
+    )
+    f32 = jnp.float32
+    qq = q[:, 0].astype(f32)   # (B,H,hd)
+    kk = k[:, 0].astype(f32)
+    vv = v[:, 0].astype(f32)
+    li = log_i[:, 0]           # (B,H)
+    lf = log_f[:, 0]
+    m_new = jnp.maximum(lf + st.m, li)
+    f_sc = jnp.exp(lf + st.m - m_new)
+    i_sc = jnp.exp(li - m_new)
+    c_new = st.c * f_sc[..., None, None] + i_sc[..., None, None] * (
+        kk[..., :, None] * vv[..., None, :]
+    )
+    n_new = st.n * f_sc[..., None] + i_sc[..., None] * kk
+    num = jnp.einsum("bhd,bhde->bhe", qq, c_new)
+    den = jnp.einsum("bhd,bhd->bh", qq, n_new)
+    hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    b = x.shape[0]
+    y = hh.reshape(b, 1, -1).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bst,td->bsd", y, p["down"].astype(x.dtype))
+    return out, MLSTMState(c=c_new, n=n_new, m=m_new, conv=conv_tail)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_defs(cfg):
+    d = cfg.d_model
+    h = d // cfg.ssm.slstm_head_dim
+    hd = cfg.ssm.slstm_head_dim
+    ff = -(-4 * d // 3 // 128) * 128
+    return {
+        "w": dense_def(d, 4 * d),
+        "r": ParamDef((h, hd, 4 * hd), (None, None, None), "normal"),
+        "b": ParamDef((4 * d,), (None,), "zeros"),
+        "gn": {"scale": ParamDef((d,), (None,), "zeros")},
+        "out": dense_def(d, d),
+        "ff_gate": dense_def(d, ff),
+        "ff_up": dense_def(d, ff),
+        "ff_down": ParamDef((ff, d), ("tensor", "fsdp")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # (B, d)
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.float32) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), dtype)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full((batch, d), -1e30, dtype))
+
+
+def _slstm_cell(cfg, p, wx_t, st: SLSTMState):
+    """One step. wx_t: (B, 4d) precomputed input projection."""
+    d = cfg.d_model
+    hd = cfg.ssm.slstm_head_dim
+    nh = d // hd
+    b = wx_t.shape[0]
+    hh = st.h.reshape(b, nh, hd).astype(jnp.float32)
+    rec = jnp.einsum("bnk,nkg->bng", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    g = wx_t.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    zi, ii, ff, oo = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ff)
+    m_new = jnp.maximum(log_f + st.m, ii)
+    i_sc = jnp.exp(ii - m_new)
+    f_sc = jnp.exp(log_f + st.m - m_new)
+    c_new = f_sc * st.c + i_sc * jnp.tanh(zi)
+    n_new = f_sc * st.n + i_sc
+    h_new = jax.nn.sigmoid(oo) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMState(h=h_new, c=c_new, n=n_new, m=m_new)
+
+
+def slstm_apply(cfg, p, x, return_state=False):
+    """x: (B, S, d) -> (B, S, d) via lax.scan over time."""
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w"].astype(x.dtype))
+    st0 = init_slstm_state(cfg, b)
+
+    def step(st, wx_t):
+        st = _slstm_cell(cfg, p, wx_t, st)
+        return st, st.h
+
+    st_f, hs = jax.lax.scan(step, st0, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(y, p["gn"]["scale"], cfg.norm_eps)
+    y = jnp.einsum("bsd,de->bse", y, p["out"].astype(x.dtype))
+    if return_state:
+        return y, st_f
+    return y
+
+
+def slstm_ffn(cfg, p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["ff_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["ff_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["ff_down"].astype(x.dtype))
+
+
+def slstm_decode(cfg, p, x, st: SLSTMState):
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w"].astype(x.dtype))
+    st = _slstm_cell(cfg, p, wx[:, 0], st)
+    y = st.h[:, None].astype(x.dtype)
+    y = rmsnorm(y, p["gn"]["scale"], cfg.norm_eps)
+    y = jnp.einsum("bsd,de->bse", y, p["out"].astype(x.dtype))
+    return y, st

@@ -1,0 +1,18 @@
+"""In-house optimizers (no optax dependency): AdamW and Adafactor.
+
+Both are pytree->pytree transforms whose states inherit the parameter
+shardings under pjit (elementwise states) — Adafactor's factored second moment
+keeps optimizer memory O(rows+cols), which is what lets grok-1 (314B) train on
+a 256-chip v5e pod with FSDPxTP sharding.
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,156 @@
+"""AdamW + Adafactor, schedules, and global-norm clipping."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState, dict]]
+    # update(grads, state, params, step) -> (new_params, new_state, metrics)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}, {"gnorm": gnorm, "lr": lr}
+
+    return Optimizer(init=init, update=update)
+
+
+def _factored_dims(shape):
+    """Adafactor factors the two largest trailing dims of >=2-D params."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor(lr_fn, decay=0.99, eps=1e-30, clip_norm=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018), beta1 = 0."""
+
+    def init(params):
+        def st(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            r, c = f
+            # vr accumulates row means (reduce over c); vc column means
+            # (reduce over r).
+            vr = jnp.zeros(p.shape[:c] + p.shape[c + 1:], jnp.float32)
+            vc = jnp.zeros(p.shape[:r] + p.shape[r + 1:], jnp.float32)
+            return {"vr": vr, "vc": vc}
+
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = lr_fn(step)
+
+        def upd(p, g, s):
+            g2 = g * g + eps
+            f = _factored_dims(p.shape)
+            if f is None:
+                v = decay * s["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            else:
+                r, c = f
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=c)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=r)
+                mean_r = jnp.mean(vr, axis=-1, keepdims=True)
+                pre_r = jax.lax.rsqrt(
+                    jnp.expand_dims(vr / jnp.maximum(mean_r, eps), c)
+                )
+                pre_c = jax.lax.rsqrt(jnp.expand_dims(vc, r))
+                u = g * pre_r * pre_c
+                new_s = {"vr": vr, "vc": vc}
+            # update clipping (RMS <= 1) as in the paper
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = td.flatten_up_to(state["s"])
+        new_p, new_s = [], []
+        for p, g, s in zip(flat_p, flat_g, flat_s):
+            np_, ns = upd(p, g, s)
+            new_p.append(np_)
+            new_s.append(ns)
+        return (jax.tree.unflatten(td, new_p),
+                {"s": jax.tree.unflatten(td, new_s)},
+                {"gnorm": gnorm, "lr": lr})
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, lr_fn=None, **kw) -> Optimizer:
+    lr_fn = lr_fn or cosine_schedule(3e-4, 100, 10_000)
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

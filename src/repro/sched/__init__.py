@@ -1,0 +1,11 @@
+"""Production scheduler: sharded selection, tiering, elastic service."""
+from repro.sched.distributed import (
+    ShardedSchedState,
+    make_sharded_env,
+    sharded_crawl_step,
+    sharded_select,
+)
+from repro.sched.service import CrawlScheduler
+from repro.sched.tiered import TierState, tiered_select
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,170 @@
+"""Sharded crawl scheduling over a device mesh (paper Section 5.2).
+
+Pages are sharded across *all* mesh axes (a pure data decomposition — the
+paper's state per page is O(1) and independent across pages). One scheduling
+round is:
+
+    local values (VPU / Pallas kernel)  ->  local top-k  ->
+    all_gather of k candidates per shard (tiny)  ->  global top-k  ->
+    local reset of winners.
+
+Only the candidate exchange touches the interconnect: k * n_shards * 8 bytes
+per round, independent of the page count — this is the paper's "only the
+comparison between the pages with the top crawl values matters" made concrete.
+
+The same step is used by the multi-pod dry-run at 2^30 pages on 512 devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import tables
+from repro.core.state import PageState
+from repro.core.values import DerivedEnv, Env, derive
+
+
+class ShardedSchedState(NamedTuple):
+    tau_elap: jax.Array   # (m,) f32, sharded over all mesh axes
+    n_cis: jax.Array      # (m,) i32
+    crawl_clock: jax.Array  # scalar step counter
+
+
+def make_sharded_env(env: Env, mesh: Mesh, mu_total) -> DerivedEnv:
+    """Derive env with a *global* importance normalizer so that per-shard
+    normalization agrees across shards."""
+    return derive(env, mu_total=mu_total)
+
+
+def _local_values(tau_elap, n_cis, d: DerivedEnv, table: tables.ValueTable | None,
+                  n_terms: int, use_kernel: bool):
+    if table is not None:
+        return tables.lookup_state(table, d, tau_elap, n_cis)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.crawl_value(tau_elap, n_cis, d, n_terms=n_terms)
+    from repro.core.values import tau_eff, value_ncis
+
+    return value_ncis(tau_eff(tau_elap, n_cis, d), d, n_terms=n_terms,
+                      method="series")
+
+
+def sharded_select(
+    state: ShardedSchedState,
+    d: DerivedEnv,
+    table: tables.ValueTable | None,
+    mesh: Mesh,
+    k: int,
+    n_terms: int = 8,
+    use_kernel: bool = False,
+    k_local: int | None = None,
+):
+    """Global top-k page selection. Returns (global_page_ids, values) replicated
+    and a per-page crawl mask (sharded like the state).
+
+    k_local: candidates contributed per shard. Default k (exact). With S
+    shards, E[winners per shard] = k/S; k_local = c*k/S for small c is exact
+    with overwhelming probability and cuts the candidate exchange by S/c —
+    see EXPERIMENTS.md §Perf (the final top-k result is unchanged whenever no
+    shard holds more than k_local winners).
+    """
+    axes = tuple(mesh.axis_names)
+    pspec = P(axes)
+    k_loc = min(k_local or k, k)
+
+    def shard_fn(tau_elap, n_cis, d_shard, table_shard):
+        vals = _local_values(tau_elap, n_cis, d_shard, table_shard, n_terms,
+                             use_kernel)
+        m_local = tau_elap.shape[0]
+        loc_v, loc_i = jax.lax.top_k(vals, k_loc)
+        # Global ids: shard offset + local index.
+        shard_lin = jnp.int32(0)
+        mul = 1
+        for ax in reversed(axes):
+            shard_lin = shard_lin + jax.lax.axis_index(ax) * mul
+            mul = mul * jax.lax.axis_size(ax)
+        gids = loc_i.astype(jnp.int32) + shard_lin * m_local
+        # Tiny candidate exchange: (n_shards * k) values + ids.
+        all_v = loc_v
+        all_g = gids
+        for ax in axes:
+            all_v = jax.lax.all_gather(all_v, ax, tiled=True)
+            all_g = jax.lax.all_gather(all_g, ax, tiled=True)
+        top_v, top_j = jax.lax.top_k(all_v, k)
+        top_g = all_g[top_j]
+        # Per-shard crawl mask for the winners that live here.
+        local_start = shard_lin * m_local
+        rel = top_g - local_start
+        here = (rel >= 0) & (rel < m_local)
+        # Out-of-bounds indices are dropped, so non-local winners are no-ops.
+        idx = jnp.where(here, rel, m_local)
+        mask = jnp.zeros((m_local,), bool).at[idx].set(True, mode="drop")
+        return top_g, top_v, mask
+
+    table_specs = tables.ValueTable(vals=P(axes, None), u_max=P()) if table is not None else None
+    d_specs = DerivedEnv(*([pspec] * len(d)))
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(pspec, pspec, d_specs, table_specs),
+        out_specs=(P(), P(), pspec),
+        check_vma=False,
+    )
+    return fn(state.tau_elap, state.n_cis, d, table)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "n_terms", "use_kernel", "dt", "k_local"),
+)
+def sharded_crawl_step(
+    state: ShardedSchedState,
+    new_cis: jax.Array,
+    d: DerivedEnv,
+    table: tables.ValueTable | None,
+    mesh: Mesh,
+    k: int,
+    dt: float,
+    n_terms: int = 8,
+    use_kernel: bool = False,
+    k_local: int | None = None,
+):
+    """One full scheduling round: select k pages globally, reset them, advance
+    time, ingest externally-fed CIS counts. Returns (new_state, page_ids)."""
+    top_g, top_v, mask = sharded_select(
+        state, d, table, mesh, k, n_terms, use_kernel, k_local
+    )
+    tau = jnp.where(mask, 0.0, state.tau_elap) + dt
+    n = jnp.where(mask, 0, state.n_cis) + new_cis
+    new_state = ShardedSchedState(
+        tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + 1
+    )
+    return new_state, (top_g, top_v)
+
+
+def sched_input_specs(m: int, mesh: Mesh, table_grid: int | None = None):
+    """ShapeDtypeStructs + shardings for the dry-run scheduler step."""
+    axes = tuple(mesh.axis_names)
+    sh = NamedSharding(mesh, P(axes))
+    sh_t = NamedSharding(mesh, P(axes, None))
+    rep = NamedSharding(mesh, P())
+    f = lambda shape, dt, s: jax.ShapeDtypeStruct(shape, dt, sharding=s)
+    state = ShardedSchedState(
+        tau_elap=f((m,), jnp.float32, sh),
+        n_cis=f((m,), jnp.int32, sh),
+        crawl_clock=f((), jnp.int32, rep),
+    )
+    new_cis = f((m,), jnp.int32, sh)
+    d = DerivedEnv(*[f((m,), jnp.float32, sh) for _ in range(8)])
+    table = None
+    if table_grid:
+        table = tables.ValueTable(
+            vals=f((m, table_grid), jnp.float32, sh_t),
+            u_max=f((), jnp.float32, rep),
+        )
+    return state, new_cis, d, table

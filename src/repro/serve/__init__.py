@@ -1,0 +1,3 @@
+from repro.serve.engine import GenerationResult, generate, sample_token
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,71 @@
+"""Batched generation engine: prefill + jit decode loop with sampling.
+
+Serving path used by examples/serve_lm.py and the decode dry-run cells. The
+decode step is a single compiled program reused every token; the KV cache is
+donated so decoding is allocation-free after warmup.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+class GenerationResult(NamedTuple):
+    tokens: jax.Array      # (B, prompt + max_new)
+    logprobs: jax.Array    # (B, max_new)
+
+
+def sample_token(key, logits, temperature=1.0, top_k=0):
+    """logits: (B, V) f32 -> (B,) i32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cut = vals[..., -1:]
+        logits = jnp.where(logits < cut, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "temperature", "top_k"),
+    donate_argnums=(4,),
+)
+def _decode_jit(cfg, params, token, pos, cache, key, temperature, top_k):
+    logits, cache = M.decode_step(cfg, params, token, pos, cache)
+    nxt = sample_token(key, logits, temperature, top_k)
+    lp = jax.nn.log_softmax(logits)[jnp.arange(logits.shape[0]), nxt]
+    return nxt, lp, cache
+
+
+def generate(cfg: ModelConfig, params, batch, max_new: int, key=None,
+             temperature: float = 0.0, top_k: int = 0, s_max: int = 0):
+    """Greedy/temperature generation. batch["tokens"]: (B, S_prompt)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prompt = batch["tokens"]
+    b, s = prompt.shape
+    s_max = s_max or s + max_new
+    logits, cache = M.prefill(cfg, params, batch, s_max=s_max)
+    toks = [prompt]
+    lps = []
+    tok = sample_token(key, logits, temperature, top_k)
+    for i in range(max_new):
+        toks.append(tok[:, None])
+        key = jax.random.fold_in(key, i)
+        pos = jnp.int32(s + i)
+        nxt, lp, cache = _decode_jit(
+            cfg, params, tok[:, None], pos, cache, key,
+            float(temperature), int(top_k)
+        )
+        lps.append(lp)
+        tok = nxt
+    return GenerationResult(
+        tokens=jnp.concatenate(toks, axis=1),
+        logprobs=jnp.stack(lps, axis=1) if lps else jnp.zeros((b, 0)),
+    )

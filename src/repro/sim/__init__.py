@@ -1,0 +1,10 @@
+"""Semi-synthetic crawling experiment substrate (paper Section 6)."""
+from repro.sim.instances import (
+    corrupt_precision_recall,
+    env_from_precision_recall,
+    realworld_instance,
+    uniform_instance,
+)
+from repro.sim.simulator import DelayConfig, SimConfig, SimResult, simulate
+
+__all__ = [k for k in dir() if not k.startswith("_")]

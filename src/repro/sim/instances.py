@@ -1,0 +1,106 @@
+"""Problem-instance generators (paper Section 6.1 / 6.7).
+
+All generators return `core.Env` arrays plus any auxiliary ground truth needed
+by the benchmarks. Randomness is explicit via PRNG keys; instances are plain
+arrays so they vmap over repetitions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import Env
+
+
+def uniform_instance(
+    key: jax.Array,
+    m: int,
+    delta_range=(0.0, 1.0),
+    mu_range=(0.0, 1.0),
+    lam_beta=(0.25, 0.25),
+    nu_range=(0.1, 0.6),
+    with_cis: bool = True,
+) -> Env:
+    """Section 6.1: Delta, mu ~ Unif; lam ~ Beta(a, b) (bimodal for 0.25/0.25);
+    nu ~ Unif. with_cis=False zeroes the CIS channel (Section 6.4 setting)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    delta = jax.random.uniform(k1, (m,), minval=delta_range[0], maxval=delta_range[1])
+    mu = jax.random.uniform(k2, (m,), minval=mu_range[0], maxval=mu_range[1])
+    if with_cis:
+        lam = jax.random.beta(k3, lam_beta[0], lam_beta[1], (m,))
+        nu = jax.random.uniform(k4, (m,), minval=nu_range[0], maxval=nu_range[1])
+    else:
+        lam = jnp.zeros((m,))
+        nu = jnp.zeros((m,))
+    # Degenerate delta = 0 pages never change; keep a tiny floor so V and the
+    # freshness integral stay well-conditioned (matches 'close to m/2' note).
+    delta = jnp.maximum(delta, 1e-3)
+    mu = jnp.maximum(mu, 1e-3)
+    return Env(delta=delta, mu=mu, lam=lam, nu=nu)
+
+
+def env_from_precision_recall(
+    delta: jax.Array, mu: jax.Array, precision: jax.Array, recall: jax.Array
+) -> Env:
+    """Invert (precision, recall) to model parameters:
+        lam = recall;   gamma = lam*delta/precision;   nu = gamma - lam*delta.
+    Pages with recall = 0 get nu = 0 (no signal channel at all) — matching the
+    paper's treatment of URLs without side information."""
+    lam = jnp.clip(recall, 0.0, 1.0)
+    prec = jnp.clip(precision, 1e-3, 1.0)
+    signaled = lam * delta
+    gamma = jnp.where(lam > 0, signaled / prec, 0.0)
+    nu = jnp.maximum(gamma - signaled, 0.0)
+    return Env(delta=delta, mu=mu, lam=lam, nu=nu)
+
+
+class RealWorldInstance(NamedTuple):
+    env: Env
+    precision: jax.Array
+    recall: jax.Array
+    top_mask: jax.Array  # the ~5% of URLs labelled "perfect CIS" by Kolobov'19
+
+
+def realworld_instance(
+    key: jax.Array,
+    m: int = 100_000,
+    top_frac: float = 0.05,
+) -> RealWorldInstance:
+    """Section 6.7 semi-synthetic protocol.
+
+    The Kolobov'19 dataset is not redistributable; we reproduce the *published
+    statistics*: importance and change rates with heavy-tailed distributions
+    (importance from PageRank-like power law, change rate in changes/day over a
+    2-week crawl), ~5% of URLs labelled as having side information. Precision /
+    recall are drawn from the Section 2 shaped histograms: the labelled top 5%
+    from the upper tail (>0.8 mode), the rest from the lower 95% (precision
+    mode < 0.2, recall mode < 0.5).
+    """
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Importance: power-law (PageRank-like). Change rate: log-uniform-ish.
+    mu = jax.random.pareto(k1, 1.5, (m,)) + 1.0
+    delta = jnp.exp(jax.random.uniform(k2, (m,), minval=jnp.log(0.02), maxval=jnp.log(5.0)))
+    top = jax.random.uniform(k3, (m,)) < top_frac
+    # Lower 95%: Beta(1.2, 5) precision (mass < 0.2), Beta(2, 2.5) recall.
+    prec_lo = jax.random.beta(k4, 1.2, 5.0, (m,))
+    rec_lo = jax.random.beta(k5, 2.0, 2.5, (m,))
+    # Upper 5% tail: Beta(8, 1.5) — mode near 0.9 for both.
+    prec_hi = jax.random.beta(k6, 8.0, 1.5, (m,))
+    rec_hi = jax.random.beta(jax.random.fold_in(k6, 1), 8.0, 1.5, (m,))
+    precision = jnp.where(top, prec_hi, prec_lo)
+    recall = jnp.where(top, rec_hi, rec_lo)
+    env = env_from_precision_recall(delta, mu, precision, recall)
+    return RealWorldInstance(env=env, precision=precision, recall=recall, top_mask=top)
+
+
+def corrupt_precision_recall(
+    key: jax.Array, precision: jax.Array, recall: jax.Array, p: float
+):
+    """Section 6.7 corruption: mix uniform noise xi ~ U(0,1) into the estimates
+    with weight p: est = (1-p) * est + p * xi."""
+    k1, k2 = jax.random.split(key)
+    xi1 = jax.random.uniform(k1, precision.shape)
+    xi2 = jax.random.uniform(k2, recall.shape)
+    return (1 - p) * precision + p * xi1, (1 - p) * recall + p * xi2

@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, loss_fn, make_train_step, train_step
+
+__all__ = [k for k in dir() if not k.startswith("_")]

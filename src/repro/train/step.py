@@ -1,0 +1,125 @@
+"""Training step: loss, grads, optimizer update — pjit-ready.
+
+The cross-entropy keeps logits tensor-sharded over the vocab dim ("tensor" ->
+model axis); the log-sum-exp and label gather run on the sharded layout and
+XLA inserts the small model-axis reductions — the (B, S, V) f32 logits tensor
+never materializes unsharded (it would be ~13 GB/chip for granite-8b at 4k).
+
+Microbatching: optional gradient accumulation over n_micro slices of the
+per-step batch via lax.scan (memory ~ 1/n_micro activations at the cost of
+re-running the forward; used by long-sequence cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.common import constrain
+from repro.optim import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def _chunked_xent(cfg, embed_params, hidden, labels, mesh, chunk=512):
+    """Sequence-chunked cross entropy from final hidden states.
+
+    The (B, S, V) f32 logits tensor never exists: each chunk's logits are
+    (re)computed inside a jax.checkpoint'd scan body (forward AND backward),
+    keeping live logits at (B, chunk, V/|model|).
+    """
+    from repro.models.common import apply_norm, softcap
+
+    b, s, d = hidden.shape
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+    head = (embed_params["lm_head"] if "lm_head" in embed_params
+            else embed_params["tok"].T)
+
+    hid_c = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lab_c = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, z_sum, cnt = carry
+        h, lab = xs
+        h = apply_norm(cfg, embed_params["ln_f"], h)
+        logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logits = constrain(logits, mesh, "batch", None, "tensor")
+        mask = (lab >= 0).astype(jnp.float32)
+        lab_cl = jnp.maximum(lab, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab_cl[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum((logz - ll) * mask)
+        z_sum = z_sum + jnp.sum((logz * mask) ** 2)
+        cnt = cnt + mask.sum()
+        return (nll_sum, z_sum, cnt), None
+
+    zero = jnp.float32(0.0)
+    (nll_sum, z_sum, cnt), _ = jax.lax.scan(body, (zero, zero, zero),
+                                            (hid_c, lab_c))
+    denom = jnp.maximum(cnt, 1.0)
+    return nll_sum / denom, 1e-4 * z_sum / denom
+
+
+def loss_fn(cfg: ModelConfig, params, batch, mesh=None, impl="triangle"):
+    hidden, aux = M.forward_hidden(cfg, params, batch, mesh, impl)
+    xent, zloss = _chunked_xent(cfg, params["embed"], hidden,
+                                batch["labels"], mesh)
+    return xent + zloss + aux, {"xent": xent, "aux": aux, "zloss": zloss}
+
+
+def _micro_split(batch, n_micro):
+    return jax.tree.map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+        batch,
+    )
+
+
+def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
+               batch, mesh=None, impl="triangle", n_micro: int = 1):
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, mesh, impl), has_aux=True
+    )
+    if n_micro == 1:
+        (loss, parts), grads = grad_fn(state.params, batch)
+    else:
+        micro = _micro_split(batch, n_micro)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            (l, _), g = grad_fn(state.params, mb)
+            return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+        )
+        (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        loss = loss / n_micro
+        parts = {"xent": loss, "aux": jnp.float32(0), "zloss": jnp.float32(0)}
+
+    params, opt_state, om = optimizer.update(
+        grads, state.opt_state, state.params, state.step
+    )
+    metrics = {"loss": loss, **parts, **om}
+    return TrainState(params=params, opt_state=opt_state,
+                      step=state.step + 1), metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh=None,
+                    impl="triangle", n_micro: int = 1, donate: bool = True):
+    """jit-wrapped train step (donates state buffers)."""
+    fn = functools.partial(train_step, cfg, optimizer, mesh=mesh, impl=impl,
+                           n_micro=n_micro)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ layout import path (tests run as PYTHONPATH=src pytest tests/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single-device host; only launch/dryrun.py forces 512 devices.

@@ -1,0 +1,152 @@
+"""Unit + property tests for the paper's value functions (Theorem 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BIG,
+    Env,
+    G,
+    derive,
+    freq,
+    psi,
+    residual,
+    residual_derivative,
+    residual_naive,
+    tau_eff,
+    value_asymptote,
+    value_cis,
+    value_greedy,
+    value_ncis,
+    w,
+)
+from repro.core.residuals import residual_ladder
+from repro.core import tables
+
+
+def _env(key, m=64, nu_range=(0.1, 0.6)):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return Env(
+        delta=jax.random.uniform(k1, (m,), minval=0.05, maxval=1.0),
+        mu=jax.random.uniform(k2, (m,), minval=0.05, maxval=1.0),
+        lam=jax.random.beta(k3, 0.25, 0.25, (m,)),
+        nu=jax.random.uniform(k4, (m,), minval=nu_range[0], maxval=nu_range[1]),
+    )
+
+
+class TestResiduals:
+    def test_r0_closed_form(self):
+        x = jnp.linspace(0.01, 30, 100)
+        np.testing.assert_allclose(residual(0, x), 1 - np.exp(-x), atol=1e-6)
+
+    @pytest.mark.parametrize("i", [1, 2, 3, 5, 7])
+    def test_matches_naive(self, i):
+        x = jnp.linspace(0.01, 20, 200)
+        np.testing.assert_allclose(
+            residual(i, x), residual_naive(i, x), atol=1e-5
+        )
+
+    def test_ladder_matches_gammainc(self):
+        k = 8
+        x = jax.random.uniform(jax.random.PRNGKey(0), (256, k), maxval=50.0)
+        lad = residual_ladder(x)
+        ref = residual(jnp.arange(k, dtype=jnp.float32), x)
+        np.testing.assert_allclose(lad, ref, atol=2e-5)
+
+    def test_ladder_no_overflow(self):
+        x = jnp.full((4, 8), 1e30)
+        assert bool(jnp.isfinite(residual_ladder(x)).all())
+
+    def test_derivative_identity(self):
+        # Eq. (3): dR^i/dx = R^{i-1} - R^i
+        x = jnp.linspace(0.1, 10, 50)
+        for i in [1, 2, 4]:
+            lhs = residual_derivative(i, x)
+            rhs = residual(i - 1, x) - residual(i, x)
+            np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+class TestValues:
+    def test_monotone(self):
+        # Lemma 2: V increasing, f decreasing in iota.
+        d = derive(_env(jax.random.PRNGKey(0)))
+        iotas = jnp.linspace(0.05, 60, 300)
+        V = jax.vmap(lambda i: value_ncis(jnp.full((64,), i), d, 8))(iotas)
+        F = jax.vmap(lambda i: freq(jnp.full((64,), i), d, 8))(iotas)
+        assert float(jnp.min(jnp.diff(V, axis=0))) >= -1e-7
+        assert float(jnp.max(jnp.diff(F, axis=0))) <= 1e-7
+
+    def test_asymptote(self):
+        d = derive(_env(jax.random.PRNGKey(1)))
+        v = value_ncis(jnp.full((64,), BIG), d, 8)
+        np.testing.assert_allclose(v, value_asymptote(d), rtol=1e-6)
+
+    def test_greedy_limit(self):
+        # gamma -> 0 recovers V_GREEDY exactly.
+        env = _env(jax.random.PRNGKey(2))
+        env0 = Env(env.delta, env.mu, jnp.zeros(64), jnp.zeros(64))
+        d0 = derive(env0)
+        t = jnp.linspace(0.1, 20, 100)[:, None] * jnp.ones((1, 64))
+        np.testing.assert_allclose(
+            value_greedy(t, d0),
+            jax.vmap(lambda tt: value_ncis(tt, d0, 8))(t),
+            atol=1e-6,
+        )
+
+    def test_cis_limit(self):
+        # nu -> 0 with no signal recovers V_GREEDY_CIS.
+        env = _env(jax.random.PRNGKey(3), nu_range=(0.0, 0.0))
+        d = derive(env)
+        t = jnp.linspace(0.1, 20, 50)[:, None] * jnp.ones((1, 64))
+        np.testing.assert_allclose(
+            value_cis(t, jnp.zeros((50, 64), jnp.int32), d),
+            jax.vmap(lambda tt: value_ncis(tt, d, 8))(t),
+            atol=1e-6,
+        )
+
+    def test_never_change_page_worthless(self):
+        # delta -> 0: always fresh, V = 0 for any iota.
+        env = Env(delta=jnp.array([1e-9]), mu=jnp.array([1.0]),
+                  lam=jnp.array([0.0]), nu=jnp.array([0.3]))
+        d = derive(env)
+        v = value_ncis(jnp.array([5.0]), d, 8)
+        assert abs(float(v[0])) < 1e-4
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        delta=st.floats(0.01, 2.0),
+        mu=st.floats(0.01, 2.0),
+        lam=st.floats(0.0, 0.999),
+        nu=st.floats(0.0, 2.0),
+        t1=st.floats(0.01, 50.0),
+        scale=st.floats(1.01, 4.0),
+    )
+    def test_property_monotone_and_bounded(self, delta, mu, lam, nu, t1, scale):
+        env = Env(*[jnp.array([v]) for v in (delta, mu, lam, nu)])
+        d = derive(env)
+        v1 = float(value_ncis(jnp.array([t1]), d, 8)[0])
+        v2 = float(value_ncis(jnp.array([t1 * scale]), d, 8)[0])
+        vmax = float(value_asymptote(d)[0])
+        assert v1 <= v2 + 1e-6          # monotone
+        assert -1e-6 <= v1 <= vmax + 1e-5  # bounded by asymptote
+        assert np.isfinite(v1) and np.isfinite(v2)
+
+    def test_table_accuracy(self):
+        env = _env(jax.random.PRNGKey(4), m=512)
+        d = derive(env)
+        table = tables.build_ncis_table(d, n_terms=8)
+        tau = jax.random.uniform(jax.random.PRNGKey(5), (512,), maxval=40.0)
+        n = jax.random.poisson(jax.random.PRNGKey(6), 2.0, (512,)).astype(jnp.int32)
+        v_tab = tables.lookup_state(table, d, tau, n)
+        v_ref = value_ncis(tau_eff(tau, n, d), d, 8)
+        scale = float(jnp.max(v_ref))
+        assert float(jnp.max(jnp.abs(v_tab - v_ref))) < 2e-3 * scale
+
+    def test_g_objective(self):
+        mu_t = jnp.array([0.5])
+        delta = jnp.array([0.8])
+        xi = jnp.array([2.0])
+        expected = 0.5 / 0.8 * 2.0 * (1 - np.exp(-0.8 / 2.0))
+        np.testing.assert_allclose(G(xi, mu_t, delta), [expected], rtol=1e-6)

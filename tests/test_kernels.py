@@ -1,0 +1,85 @@
+"""Pallas kernel vs pure-jnp oracle: shape/param sweeps + tiering semantics
+(interpret mode executes the kernel body on CPU; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Env, derive
+from repro.kernels import ops, ref
+from repro.kernels.crawl_value import LANES
+from repro.sim import uniform_instance
+
+
+@pytest.mark.parametrize("m", [1000, 32768, 100_000])
+@pytest.mark.parametrize("n_terms", [1, 2, 8])
+def test_crawl_value_allclose(m, n_terms):
+    env = uniform_instance(jax.random.PRNGKey(m), m)
+    d = derive(env)
+    tau = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=50.0)
+    n = jax.random.poisson(jax.random.PRNGKey(2), 2.0, (m,)).astype(jnp.int32)
+    v_k = ops.crawl_value(tau, n, d, n_terms=n_terms, block_rows=64)
+    v_r = ref.crawl_value_ref(tau, n, d, n_terms=n_terms)
+    scale = float(jnp.max(jnp.abs(v_r))) + 1e-12
+    np.testing.assert_allclose(v_k, v_r, atol=2e-6 * scale + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    lam=st.floats(0.0, 1.0),
+    nu=st.floats(0.0, 1.5),
+    delta=st.floats(1e-3, 3.0),
+    tau_max=st.floats(0.1, 500.0),
+)
+def test_crawl_value_property(lam, nu, delta, tau_max):
+    m = 256
+    env = Env(
+        delta=jnp.full((m,), delta),
+        mu=jnp.linspace(0.1, 1.0, m),
+        lam=jnp.full((m,), lam),
+        nu=jnp.full((m,), nu),
+    )
+    d = derive(env)
+    tau = jnp.linspace(0.0, tau_max, m)
+    n = (jnp.arange(m) % 5).astype(jnp.int32)
+    v_k = ops.crawl_value(tau, n, d, block_rows=64)
+    v_r = ref.crawl_value_ref(tau, n, d)
+    assert bool(jnp.isfinite(v_k).all())
+    # f32 series-vs-f32 gammainc: allow an absolute cancellation floor ~1e-7
+    scale = float(jnp.max(jnp.abs(v_r))) + 1e-12
+    np.testing.assert_allclose(v_k, v_r, atol=5e-6 * scale + 2e-7)
+
+
+def test_tiered_skip():
+    block_rows = 64
+    bp = block_rows * LANES
+    m = 8 * bp
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    d = derive(env)
+    tau = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=20.0)
+    n = jnp.zeros((m,), jnp.int32)
+    bounds = jnp.where(jnp.arange(8) % 2 == 0, 1.0, -1.0)
+    thresh = jnp.zeros(())
+    v_t, blkmax = ops.crawl_value_tiered(tau, n, d, bounds, thresh,
+                                         block_rows=block_rows)
+    v_ref = ref.tiered_crawl_value_ref(tau, n, d, bounds, thresh, bp)
+    finite = np.isfinite(np.asarray(v_ref))
+    assert (np.isfinite(np.asarray(v_t)) == finite).all()
+    np.testing.assert_allclose(np.asarray(v_t)[finite],
+                               np.asarray(v_ref)[finite], atol=1e-6)
+    # block maxima of computed blocks match
+    got = np.asarray(blkmax).reshape(8)[::2]
+    want = np.asarray(v_t).reshape(8, bp).max(1)[::2]
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_padding_pages_never_selected():
+    m = 1000  # forces padding to a block multiple
+    env = uniform_instance(jax.random.PRNGKey(3), m)
+    d = derive(env)
+    tau = jnp.full((m,), 5.0)
+    n = jnp.zeros((m,), jnp.int32)
+    v = ops.crawl_value(tau, n, d, block_rows=64)
+    assert v.shape == (m,)
+    assert bool(jnp.isfinite(v).all())

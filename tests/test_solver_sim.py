@@ -1,0 +1,141 @@
+"""Solver (Theorem 1) and simulator integration tests — the paper's central
+empirical claims at reduced scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BIG,
+    G,
+    derive,
+    freq,
+    policies as pol,
+    solver,
+    value_ncis,
+)
+from repro.core.estimation import fit_mle, naive_precision_recall
+from repro.sim import DelayConfig, SimConfig, simulate, uniform_instance
+from repro.sim.simulator import simulate_delayed
+
+R = 100
+
+
+def test_solver_meets_budget_and_kkt():
+    env = uniform_instance(jax.random.PRNGKey(0), 64)
+    sol = solver.solve_continuous(env, R)
+    np.testing.assert_allclose(float(jnp.sum(sol.rate)), R, rtol=1e-3)
+    # KKT: V(iota*) == Lambda for crawled pages.
+    d = derive(env)
+    crawled = sol.iota < BIG
+    v = value_ncis(sol.iota, d, 8)
+    lam = float(sol.lam_mult)
+    assert float(jnp.max(jnp.abs(jnp.where(crawled, v - lam, 0.0)))) < 1e-4
+
+
+def test_solver_cis_beats_nocis():
+    env = uniform_instance(jax.random.PRNGKey(1), 64)
+    with_cis = solver.solve_continuous(env, R)
+    without = solver.solve_continuous_nocis(env, R)
+    assert float(with_cis.objective) >= float(without.objective) - 1e-6
+
+
+def test_nocis_matches_G():
+    env = uniform_instance(jax.random.PRNGKey(2), 64, with_cis=False)
+    sol = solver.solve_continuous(env, R)
+    d = derive(env)
+    obj_g = float(jnp.sum(G(sol.rate, d.mu_t, d.delta)))
+    np.testing.assert_allclose(float(sol.objective), obj_g, rtol=1e-4)
+
+
+class TestSimulator:
+    def _cfg(self, T=60):
+        return SimConfig(dt=1.0 / R, n_steps=R * T)
+
+    def test_greedy_near_continuous_optimum(self):
+        # Fig. 2 claim: GREEDY ~ LDS ~ continuous optimum (no CIS).
+        env = uniform_instance(jax.random.PRNGKey(3), 100, with_cis=False)
+        sol = solver.solve_continuous_nocis(env, R)
+        res = simulate(jax.random.PRNGKey(4), env, pol.GREEDY, self._cfg())
+        lds = simulate(jax.random.PRNGKey(4), env, pol.LDS, self._cfg(),
+                       lds_rates=sol.rate)
+        base = float(sol.objective)
+        assert abs(float(res.accuracy) - base) < 0.03
+        assert abs(float(lds.accuracy) - base) < 0.03
+
+    def test_budget_exact(self):
+        env = uniform_instance(jax.random.PRNGKey(5), 50)
+        cfg = self._cfg(T=10)
+        res = simulate(jax.random.PRNGKey(6), env, pol.GREEDY, cfg)
+        assert int(res.crawl_counts.sum()) == cfg.n_steps  # k=1 per tick
+
+    def test_cis_helps(self):
+        # Fig. 3/4 claim: NCIS >= GREEDY when signals exist.
+        env = uniform_instance(jax.random.PRNGKey(7), 100)
+        g = simulate(jax.random.PRNGKey(8), env, pol.GREEDY, self._cfg())
+        n = simulate(jax.random.PRNGKey(8), env, pol.GREEDY_NCIS, self._cfg())
+        assert float(n.accuracy) > float(g.accuracy) + 0.01
+
+    def test_ncis_beats_cis_under_noise(self):
+        # Fig. 4 claim: with false positives, NCIS >= CIS.
+        accs = {"cis": [], "ncis": []}
+        for r in range(3):
+            env = uniform_instance(jax.random.PRNGKey(100 + r), 300,
+                                   nu_range=(0.3, 0.6))
+            c = simulate(jax.random.PRNGKey(r), env, pol.GREEDY_CIS,
+                         self._cfg())
+            n = simulate(jax.random.PRNGKey(r), env, pol.GREEDY_NCIS,
+                         self._cfg())
+            accs["cis"].append(float(c.accuracy))
+            accs["ncis"].append(float(n.accuracy))
+        assert np.mean(accs["ncis"]) > np.mean(accs["cis"]) - 1e-3
+
+    def test_approx_close_to_exact(self):
+        env = uniform_instance(jax.random.PRNGKey(9), 100)
+        a1 = simulate(jax.random.PRNGKey(10), env, pol.G_NCIS_APPROX_1,
+                      self._cfg())
+        ex = simulate(jax.random.PRNGKey(10), env, pol.GREEDY_NCIS,
+                      self._cfg())
+        assert abs(float(a1.accuracy) - float(ex.accuracy)) < 0.03
+
+    def test_delay_filter_recovers(self):
+        env = uniform_instance(jax.random.PRNGKey(11), 100)
+        cfg = self._cfg(T=40)
+        delay = DelayConfig(mean_ticks=6.0, max_ticks=32)
+        plain = simulate_delayed(jax.random.PRNGKey(12), env, pol.GREEDY_NCIS,
+                                 cfg, delay)
+        filt = simulate_delayed(jax.random.PRNGKey(12), env, pol.GREEDY_NCIS,
+                                cfg._replace(t_delay_filter=5.0 / R), delay)
+        assert float(filt.accuracy) > float(plain.accuracy) - 0.02
+
+    def test_table_impl_matches_exact(self):
+        env = uniform_instance(jax.random.PRNGKey(13), 100)
+        cfg = self._cfg(T=30)
+        t = simulate(jax.random.PRNGKey(14), env, pol.GREEDY_NCIS, cfg)
+        e = simulate(jax.random.PRNGKey(14), env, pol.GREEDY_NCIS,
+                     cfg._replace(value_impl="exact"))
+        assert abs(float(t.accuracy) - float(e.accuracy)) < 0.01
+
+
+def test_estimation_mle_beats_naive():
+    rng = np.random.default_rng(0)
+    errs_n, errs_m = [], []
+    for _ in range(5):
+        precision, recall = rng.uniform(0.3, 0.9, 2)
+        delta = 1.0 / rng.uniform(2, 10)
+        lam = recall
+        gamma = lam * delta / precision
+        nu = gamma - lam * delta
+        tau = rng.exponential(2.0 / delta, 4000)
+        changes = rng.poisson(delta * tau)
+        signaled = rng.binomial(changes, lam)
+        n_cis = signaled + rng.poisson(nu * tau)
+        fresh = (changes == 0).astype(np.int32)
+        p_n, r_n = naive_precision_recall(jnp.asarray(n_cis)[None],
+                                          jnp.asarray(changes)[None])
+        errs_n.append(abs(float(p_n[0]) - precision) + abs(float(r_n[0]) - recall))
+        q = fit_mle(jnp.asarray(tau, jnp.float32), jnp.asarray(n_cis),
+                    jnp.asarray(fresh), jnp.float32(gamma), steps=300)
+        errs_m.append(abs(float(q.precision) - precision)
+                      + abs(float(q.recall) - recall))
+    assert np.mean(errs_m) < np.mean(errs_n)
