@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: profiles, timing, CSV emission."""
+"""Shared benchmark utilities: profiles, timing, CSV emission + JSON persist."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -11,18 +12,48 @@ import numpy as np
 # quick: CI-friendly (~minutes); paper: the paper's experimental protocol.
 PROFILE = os.environ.get("REPRO_BENCH_PROFILE", "quick")
 
+# Machine-readable perf trajectory, kept across PRs (committed after bench
+# runs; CI uploads it as an artifact). One row per emit() of the last run.
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_kernel.json")
+
 
 def prof(quick, paper):
     return paper if PROFILE == "paper" else quick
 
 
-_rows = []
+_rows = None  # lazily seeded from the existing file so partial runs
+              # (e.g. --only kernel) update their rows without clobbering
+              # the rest of the committed trajectory
+
+
+def _load_rows():
+    global _rows
+    if _rows is None:
+        _rows = []
+        try:
+            with open(BENCH_JSON) as f:
+                _rows = json.load(f).get("rows", [])
+        except (OSError, ValueError):
+            pass
+    return _rows
 
 
 def emit(name: str, us_per_call: float, derived: str):
-    row = f"{name},{us_per_call:.1f},{derived}"
-    _rows.append(row)
-    print(row, flush=True)
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    rows = _load_rows()
+    row = {"name": name, "us_per_call": round(us_per_call, 1),
+           "derived": derived}
+    for i, r in enumerate(rows):
+        if r["name"] == name:
+            rows[i] = row
+            break
+    else:
+        rows.append(row)
+    try:
+        with open(BENCH_JSON, "w") as f:
+            json.dump({"profile": PROFILE, "rows": rows}, f, indent=1)
+    except OSError:
+        pass  # read-only checkouts still get the CSV on stdout
 
 
 def timed(fn, *args, reps=3):

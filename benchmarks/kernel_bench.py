@@ -1,13 +1,27 @@
 """Crawl-value evaluation microbenchmarks: the paper's per-tick hot path.
 
-Compares the four evaluation strategies at production shard sizes:
+`kernel_bench` compares the four value-evaluation strategies at production
+shard sizes:
   gammainc  exact igamma special function (solver-grade)
   series    K-term Taylor ladder (the Pallas kernel's algorithm, jnp)
   table     exposure-grid interpolation (App. G tiering, our TPU adaptation)
   pallas    the actual kernel body in interpret mode (correctness-grade only
             on CPU; compiled Mosaic on TPU)
+
+`sched_bench` measures full scheduling rounds, including the headline
+fused-select comparison at m = 2^20 (quick) / 2^22 (paper):
+  sched/round_seed   the seed pipeline — dense per-page values + full-m top_k
+                     (the m-element value vector round-trips HBM)
+  sched/round_fused  packed PageShard + fused single-pass select with static
+                     asymptote block bounds and a warm-started threshold;
+                     derived column reports pages/s, speedup, the analytic
+                     HBM bytes/page, the active-block fraction, and the
+                     number of exact-recovery fallbacks observed.
+Selections are verified identical between the two paths before timing.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -52,10 +66,29 @@ def kernel_bench():
     emit("kernel/pallas_interpret", us_k, f"m={mk};max_err={err_k:.2e}")
 
 
+def _fused_round_loop(step_fn, state, k, n_rounds, hysteresis=0.9):
+    """Run fused rounds threading the warm-start threshold; returns
+    (final_state, final_thresh, seconds_per_round)."""
+    thresh = jnp.float32(-jnp.inf)
+    # warm-up (compile + seed the threshold)
+    state, (_, v) = step_fn(state, thresh)
+    thresh = v[k - 1] * hysteresis
+    state, (_, v) = step_fn(state, thresh)
+    thresh = v[k - 1] * hysteresis
+    jax.block_until_ready(v)
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        state, (_, v) = step_fn(state, thresh)
+        thresh = v[k - 1] * hysteresis
+    jax.block_until_ready(v)
+    return state, thresh, (time.perf_counter() - t0) / n_rounds
+
+
 def sched_bench():
-    """Sharded scheduler round + tiered-selection quality."""
+    """Sharded scheduler rounds (seed vs fused select) + tiered-selection
+    quality."""
     import numpy as np
-    from repro.core.state import PageState
+    from repro.kernels import layout, select
     from repro.sched.distributed import ShardedSchedState, sharded_crawl_step
     from repro.sched.tiered import init_tiers, tiered_select
 
@@ -75,16 +108,72 @@ def sched_bench():
     _, us = timed(step, state, reps=3)
     emit("sched/round", us, f"m={m};k={k};pages_per_s={m/(us/1e6):.3e}")
 
+    # ---- fused select vs the seed dense pipeline at production size ----
+    mf = prof(1 << 20, 1 << 22)
+    env = uniform_instance(jax.random.PRNGKey(0), mf)
+    # Value-correlated blocks (the paper's production tiers).
+    order = jnp.argsort(-(env.mu / env.delta))
+    env = jax.tree.map(lambda x: x[order], env)
+    d = derive(env)
+    shard = layout.pack_shard(d)  # block-aligned at these sizes
+    assert shard.m_pad == mf
+    bounds = layout.asym_block_bounds(shard.env)
+    zero = jnp.zeros((mf,), jnp.int32)
+    state = ShardedSchedState(
+        tau_elap=jax.random.uniform(jax.random.PRNGKey(1), (mf,), maxval=10.0),
+        n_cis=jnp.zeros((mf,), jnp.int32),
+        crawl_clock=jnp.int32(0),
+    )
+
+    # Correctness gate: fused == dense selection on the benchmark instance.
+    tau_pad, n_pad = state.tau_elap, state.n_cis.astype(jnp.float32)
+    sel = select.fused_select(tau_pad, n_pad, shard, k, bounds=bounds)
+    dense_v = value_ncis(tau_eff(state.tau_elap, state.n_cis, d), d, 8,
+                         "series")
+    _, di = jax.lax.top_k(dense_v, k)
+    assert set(np.asarray(sel.ids).tolist()) == set(np.asarray(di).tolist()), \
+        "fused selection diverged from dense top-k"
+
+    # Seed pipeline: dense values (series, = the dense kernel's math) written
+    # out in full + jax.lax.top_k over all m as a second pass.
+    seed_step = lambda st: sharded_crawl_step(st, zero, d, None, mesh, k, 0.01)[0]
+    _, us_seed = timed(seed_step, state, reps=prof(2, 3))
+    emit("sched/round_seed", us_seed,
+         f"m={mf};k={k};pages_per_s={mf/(us_seed/1e6):.3e};"
+         f"hbm_bytes_per_page={8*4 + 4 + 4}")
+
+    # Fused pipeline, steady state (warm threshold + static asym bounds).
+    def fused_step(st, thresh):
+        return sharded_crawl_step(
+            st, zero, None, None, mesh, k, 0.01,
+            env_planes=shard.env, thresh=thresh, bounds=bounds)
+
+    n_rounds = prof(6, 10)
+    fstate, fthresh, sec = _fused_round_loop(fused_step, state, k, n_rounds)
+    us_fused = sec * 1e6
+    # Steady-state active fraction + fallback flag (instrumented pass on the
+    # final timed state/threshold).
+    sel = select.fused_select(fstate.tau_elap,
+                              fstate.n_cis.astype(jnp.float32), shard, k,
+                              thresh=fthresh, bounds=bounds)
+    frac = float(sel.frac_active)
+    bpp = layout.bytes_per_page(shard.n_terms)
+    emit("sched/round_fused", us_fused,
+         f"m={mf};k={k};pages_per_s={mf/(us_fused/1e6):.3e};"
+         f"speedup={us_seed/us_fused:.2f}x;frac_active={frac:.3f};"
+         f"hbm_bytes_per_page={bpp*frac:.1f};fell_back={int(sel.fell_back)}")
+
     # tiered selection: agreement + compute saved over a rolling horizon
     # (pages grouped into value tiers, as the paper's production system does)
+    m = prof(1 << 18, 1 << 21)
+    env = uniform_instance(jax.random.PRNGKey(0), m)
     order = jnp.argsort(-(env.mu / env.delta))
     env_t = jax.tree.map(lambda x: x[order], env)
     d = derive(env_t)
     table = tables.build_ncis_table(d, n_grid=64)
-    state = state._replace(tau_elap=state.tau_elap[order])
     tiers = init_tiers(d, block=4096)
-    tau = state.tau_elap
-    n = state.n_cis
+    tau = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=10.0)
+    n = jnp.zeros((m,), jnp.int32)
     agree, saved = [], []
     for rnd in range(1, prof(20, 100)):
         exact_v, exact_i = jax.lax.top_k(

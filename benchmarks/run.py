@@ -34,6 +34,8 @@ def main() -> None:
             continue
         try:
             fn()
+        except AssertionError:  # correctness gates must fail the run
+            raise
         except Exception as e:  # keep the harness going
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

@@ -1,5 +1,6 @@
-"""Production-shaped scheduler demo: a million-page shard, sharded selection,
-tiered lazy evaluation, elastic bandwidth, checkpoint/restore.
+"""Production-shaped scheduler demo: a million-page shard, sharded selection
+(fused single-pass select by default), tiered lazy evaluation, elastic
+bandwidth, checkpoint/restore.
 
     PYTHONPATH=src python examples/crawl_at_scale.py [--pages 1048576]
 """
@@ -23,11 +24,18 @@ def main():
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--budget", type=float, default=4096.0)
     ap.add_argument("--ckpt", default="/tmp/repro_sched_ckpt")
+    ap.add_argument("--select", choices=("fused", "table"), default="fused",
+                    help="fused = packed single-pass select (exact); "
+                         "table = App. G exposure-table lookup")
     args = ap.parse_args()
 
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     env = uniform_instance(jax.random.PRNGKey(0), args.pages)
-    sched = CrawlScheduler(env, mesh, bandwidth=args.budget, table_grid=64)
+    if args.select == "fused":
+        sched = CrawlScheduler(env, mesh, bandwidth=args.budget,
+                               table_grid=None, use_fused=True)
+    else:
+        sched = CrawlScheduler(env, mesh, bandwidth=args.budget, table_grid=64)
     zero_cis = jnp.zeros((args.pages,), jnp.int32)
 
     print(f"pages={args.pages}, budget={args.budget}/round, "
@@ -53,7 +61,7 @@ def main():
 
     # tiered lazy evaluation (paper App. G)
     d = sched.d
-    table = sched.table
+    table = sched.table or tables.build_ncis_table(d, n_grid=64)
     tiers = init_tiers(d, block=4096)
     tau = sched.state.tau_elap
     n = sched.state.n_cis

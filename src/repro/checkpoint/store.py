@@ -22,7 +22,10 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    if hasattr(jax.tree, "flatten_with_path"):
+        flat, treedef = jax.tree.flatten_with_path(tree)
+    else:  # jax <= 0.4.x
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
              for p, _ in flat]
     return paths, [v for _, v in flat], treedef

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute hot-spot kernels for the per-round crawl-value pipeline.
+
+  layout       PageShard packed page-shard layout (pack once per refresh)
+  crawl_value  dense fused value kernel (Pallas; value vector to HBM)
+  select       fused single-pass value/top-k selection (values stay
+               in-register; exact via candidate-overflow fallback)
+  ops          jit'd public wrappers
+  ref          pure-jnp oracles
+"""
+from repro.kernels import layout, ops, ref, select  # noqa: F401

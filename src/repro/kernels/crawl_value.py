@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused crawl-value evaluation with tiered block skip.
+"""Pallas TPU kernel: fused crawl-value evaluation over the packed PageShard
+layout, with tiered block skip.
 
 This is the per-tick hot spot of the paper's production deployment: evaluating
 V_GREEDY_NCIS for ~10^9 pages per shard per scheduling round. The kernel fuses
@@ -7,20 +8,29 @@ V_GREEDY_NCIS for ~10^9 pages per shard per scheduling round. The kernel fuses
     V       = mu_t * ( w(tau^EFF) - e^{-alpha tau^EFF} psi(tau^EFF) )
 
 with the K-term Taylor-residual ladder (Section 5.1 / App. A.1) evaluated
-in-register — exp + K^2/2 FMAs per page, no special functions, pure VPU work —
-plus two production features:
+in-register — exp + K^2/2 FMAs per page, no special functions, pure VPU work.
+All env-derived constants (beta, 1/gamma, 1/(delta+nu), the coefficient
+ladder nu^i/(delta+nu)^{i+1}) arrive precomputed in the packed env planes
+(see `kernels.layout`), so the kernel body contains zero divisions and zero
+per-round derivation, and reads one contiguous (n_planes, BLOCK_ROWS, 128)
+stream per block. Production features:
 
   * per-block *tiered skip* (paper App. G): each grid block carries an
     optimistic value bound; blocks whose bound is below the current selection
     threshold skip all compute and emit -inf (`pl.when`), saving ~the tier
-    fraction of the round's FLOPs;
-  * fused per-block lane-maxima output, feeding the scheduler's top-k without
-    a second pass over HBM.
+    fraction of the round's FLOPs and HBM stream;
+  * fused per-block lane-maxima output, feeding the scheduler's top-k.
 
-Memory layout: pages are tiled (BLOCK_ROWS, 128) — 8 f32 input fields + 1
-output per page; with BLOCK_ROWS = 256 a block's working set is
-9 * 256 * 128 * 4 B = 1.2 MiB, comfortably inside VMEM with double buffering.
-All tile dims are (8,128)-aligned for the VPU; there is no MXU work here.
+This module holds the *dense* kernel (full m-element value output — used by
+the one-shot `ops.crawl_value` API and as the exact-recovery fallback). The
+fused *selection* kernel that never materializes the value vector lives in
+`kernels.select`.
+
+Memory layout: pages are tiled (BLOCK_ROWS, 128). With BLOCK_ROWS = 256 and
+K = 8 a block's working set is (2 state + 16 env + 1 out) * 256 * 128 * 4 B
+= 2.4 MiB, comfortably inside VMEM with double buffering; see
+`layout.bytes_per_page` for the per-page byte budget. All tile dims are
+(8,128)-aligned for the VPU; there is no MXU work here.
 """
 from __future__ import annotations
 
@@ -30,27 +40,93 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import layout
+from repro.kernels.layout import DEFAULT_BLOCK_ROWS, LANES  # noqa: F401  (re-export)
+
 BIG = 1e30
 _BIG_CUT = 1e29  # iota beyond this => asymptote branch
-DEFAULT_BLOCK_ROWS = 256
-LANES = 128
 
 
-def _ladder_sum(x, k_max):
-    """R^i(x[i]) for the unrolled i = 0..k_max-1 ladder; x is a list of tiles."""
-    outs = []
-    for i in range(k_max):
-        xi = x[i]
+def value_from_planes(tau, n, env, n_terms: int):
+    """V_GREEDY_NCIS from packed planes — the shared kernel body.
+
+    tau, n: (..., R, LANES) state tiles; env: (..., n_planes, R, LANES) packed
+    planes (`kernels.layout` ordering). Works identically inside a Pallas
+    block (R = BLOCK_ROWS, no leading dims) and as a dense jnp evaluation over
+    all blocks at once — the jnp path is bit-identical to the kernel body, so
+    the exact-recovery fallback and the CPU mirror share one definition.
+
+    Pure FMA + exp work: every division the seed kernel performed per page per
+    round (beta = b/alpha, 1/gamma, 1/(delta+nu)) is a precomputed plane.
+    """
+    mu_t = env[..., layout.MU_T, :, :]
+    alpha = env[..., layout.ALPHA, :, :]
+    beta = env[..., layout.BETA, :, :]
+    gamma = env[..., layout.GAMMA, :, :]
+    ag = env[..., layout.AG, :, :]
+    inv_g = env[..., layout.INV_G, :, :]
+
+    iota = jnp.minimum(tau + jnp.minimum(beta * n, BIG), BIG)
+    small_g = gamma < 1e-8
+    small_ag = ag < 1e-8
+
+    psi = jnp.zeros_like(tau)
+    ww = jnp.zeros_like(tau)
+    for i in range(n_terms):
+        coeff = env[..., layout.COEFF0 + i, :, :]
+        ib = 0.0 if i == 0 else jnp.minimum(i * beta, BIG)
+        rem = jnp.maximum(iota - ib, 0.0)
+        active = (ib <= iota) & (rem > 0.0)
+        # Saturation clamp (see core.residuals.residual_ladder): beyond cut_i
+        # the residual is 1 to ~1e-11 and the clamp prevents f32 overflow of
+        # the series terms.
+        cut = i + 10.0 * (i + 1.0) ** 0.5 + 20.0
+        x_psi = jnp.minimum(gamma * rem, cut)
+        x_w = jnp.minimum(ag * rem, cut)
+        # --- R^i ladder, inline (series form; i static) ---
         if i == 0:
-            outs.append(-jnp.expm1(-xi))
+            r_psi = -jnp.expm1(-x_psi)
+            r_w = -jnp.expm1(-x_w)
         else:
-            s = jnp.ones_like(xi)
-            term = jnp.ones_like(xi)
+            s_p = jnp.ones_like(x_psi)
+            t_p = jnp.ones_like(x_psi)
+            s_w = jnp.ones_like(x_w)
+            t_w = jnp.ones_like(x_w)
             for j in range(1, i + 1):
-                term = term * (xi * (1.0 / j))
-                s = s + term
-            outs.append(1.0 - jnp.exp(-xi) * s)
-    return outs
+                inv_j = 1.0 / j
+                t_p = t_p * (x_psi * inv_j)
+                s_p = s_p + t_p
+                t_w = t_w * (x_w * inv_j)
+                s_w = s_w + t_w
+            r_psi = 1.0 - jnp.exp(-x_psi) * s_p
+            r_w = 1.0 - jnp.exp(-x_w) * s_w
+            # small-x: complementary tail series (no cancellation) —
+            # see core.residuals.residual_ladder.
+            tp_t = t_p * (x_psi / (i + 1))
+            tw_t = t_w * (x_w / (i + 1))
+            tail_p, tail_w = tp_t, tw_t
+            for j in range(i + 2, i + 5):
+                tp_t = tp_t * (x_psi / j)
+                tw_t = tw_t * (x_w / j)
+                tail_p = tail_p + tp_t
+                tail_w = tail_w + tw_t
+            r_psi = jnp.where(x_psi < 0.5, jnp.exp(-x_psi) * tail_p, r_psi)
+            r_w = jnp.where(x_w < 0.5, jnp.exp(-x_w) * tail_w, r_w)
+        # psi term with gamma->0 limit (only i = 0 survives).
+        if i == 0:
+            p_term = jnp.where(small_g, rem, r_psi * inv_g)
+            w_term = jnp.where(small_ag, rem, coeff * r_w)
+        else:
+            p_term = jnp.where(small_g, 0.0, r_psi * inv_g)
+            w_term = coeff * r_w
+        psi = psi + jnp.where(active, p_term, 0.0)
+        ww = ww + jnp.where(active, w_term, 0.0)
+
+    decay = jnp.exp(-jnp.minimum(alpha * iota, 80.0))
+    v = mu_t * (ww - decay * psi)
+    v = jnp.where(iota >= _BIG_CUT, env[..., layout.V_INF, :, :], v)
+    # Padding pages score -inf: they can never enter any selection.
+    return jnp.where(env[..., layout.VALID, :, :] > 0.0, v, -jnp.inf)
 
 
 def crawl_value_kernel(
@@ -58,12 +134,7 @@ def crawl_value_kernel(
     bound_ref,
     tau_ref,
     n_ref,
-    delta_ref,
-    mu_ref,
-    nu_ref,
-    gamma_ref,
-    alpha_ref,
-    b_ref,
+    env_ref,
     vals_ref,
     blkmax_ref,
     *,
@@ -74,88 +145,7 @@ def crawl_value_kernel(
 
     @pl.when(bound >= thresh)
     def _compute():
-        tau = tau_ref[...]
-        n = n_ref[...]
-        delta = delta_ref[...]
-        mu_t = mu_ref[...]
-        nu = nu_ref[...]
-        gamma = gamma_ref[...]
-        alpha = alpha_ref[...]
-        b = b_ref[...]
-
-        eps = 1e-12
-        beta = jnp.where(alpha > 1e-20, b / jnp.maximum(alpha, 1e-20), BIG)
-        beta = jnp.minimum(beta, BIG)
-        # gamma == 0: signals never arrive; mirror derive()'s beta -> BIG so a
-        # (physically unreachable) n_cis > 0 maps to the asymptote branch.
-        beta = jnp.where(gamma > 0.0, beta, BIG)
-        iota = jnp.minimum(tau + jnp.minimum(beta * n, BIG), BIG)
-
-        ag = alpha + gamma
-        inv_g = 1.0 / jnp.maximum(gamma, eps)
-        inv_dn = 1.0 / jnp.maximum(delta + nu, eps)
-        small_g = gamma < 1e-8
-
-        psi = jnp.zeros_like(tau)
-        ww = jnp.zeros_like(tau)
-        # coeff_i = nu^i / (delta+nu)^{i+1}, built incrementally.
-        coeff = inv_dn
-        nu_ratio = nu * inv_dn
-        for i in range(n_terms):
-            ib = 0.0 if i == 0 else jnp.minimum(i * beta, BIG)
-            rem = jnp.maximum(iota - ib, 0.0)
-            active = (ib <= iota) & (rem > 0.0)
-            # Saturation clamp (see core.residuals.residual_ladder): beyond
-            # cut_i the residual is 1 to ~1e-11 and the clamp prevents f32
-            # overflow of the series terms.
-            cut = i + 10.0 * (i + 1.0) ** 0.5 + 20.0
-            x_psi = jnp.minimum(gamma * rem, cut)
-            x_w = jnp.minimum(ag * rem, cut)
-            # --- R^i ladder, inline (series form; i static) ---
-            if i == 0:
-                r_psi = -jnp.expm1(-x_psi)
-                r_w = -jnp.expm1(-x_w)
-            else:
-                s_p = jnp.ones_like(x_psi)
-                t_p = jnp.ones_like(x_psi)
-                s_w = jnp.ones_like(x_w)
-                t_w = jnp.ones_like(x_w)
-                for j in range(1, i + 1):
-                    inv_j = 1.0 / j
-                    t_p = t_p * (x_psi * inv_j)
-                    s_p = s_p + t_p
-                    t_w = t_w * (x_w * inv_j)
-                    s_w = s_w + t_w
-                r_psi = 1.0 - jnp.exp(-x_psi) * s_p
-                r_w = 1.0 - jnp.exp(-x_w) * s_w
-                # small-x: complementary tail series (no cancellation) —
-                # see core.residuals.residual_ladder.
-                tp_t = t_p * (x_psi / (i + 1))
-                tw_t = t_w * (x_w / (i + 1))
-                tail_p, tail_w = tp_t, tw_t
-                for j in range(i + 2, i + 5):
-                    tp_t = tp_t * (x_psi / j)
-                    tw_t = tw_t * (x_w / j)
-                    tail_p = tail_p + tp_t
-                    tail_w = tail_w + tw_t
-                r_psi = jnp.where(x_psi < 0.5, jnp.exp(-x_psi) * tail_p, r_psi)
-                r_w = jnp.where(x_w < 0.5, jnp.exp(-x_w) * tail_w, r_w)
-            # psi term with gamma->0 limit (only i = 0 survives).
-            if i == 0:
-                p_term = jnp.where(small_g, rem, r_psi * inv_g)
-                w_term = coeff * r_w
-                w_term = jnp.where(ag < 1e-8, rem, w_term)
-            else:
-                p_term = jnp.where(small_g, 0.0, r_psi * inv_g)
-                w_term = coeff * r_w
-            psi = psi + jnp.where(active, p_term, 0.0)
-            ww = ww + jnp.where(active, w_term, 0.0)
-            coeff = coeff * nu_ratio
-
-        decay = jnp.exp(-jnp.minimum(alpha * iota, 80.0))
-        v = mu_t * (ww - decay * psi)
-        v_inf = mu_t / jnp.maximum(delta, eps)
-        v = jnp.where(iota >= _BIG_CUT, v_inf, v)
+        v = value_from_planes(tau_ref[...], n_ref[...], env_ref[0], n_terms)
         vals_ref[...] = v
         blkmax_ref[...] = jnp.max(v, axis=0, keepdims=True)
 
@@ -166,40 +156,45 @@ def crawl_value_kernel(
 
 
 def crawl_value_pallas(
-    tau2d: jax.Array,
-    n2d: jax.Array,
-    fields2d: tuple,
+    tau_pad: jax.Array,
+    n_pad: jax.Array,
+    env: jax.Array,
     bounds: jax.Array,
     thresh: jax.Array,
     n_terms: int = 8,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ):
-    """Launch the kernel over a (rows, 128) page tiling.
+    """Launch the dense value kernel over a packed shard.
 
-    tau2d/n2d/fields2d: (rows, 128) f32; fields2d = (delta, mu_t, nu, gamma,
-    alpha, b). bounds: (n_blocks, 1) per-block value bounds; thresh: (1, 1).
-    Returns (vals (rows,128), block_lane_max (n_blocks, 128)).
+    tau_pad/n_pad: (m_pad,) f32 padded state; env: (n_blocks, n_planes,
+    block_rows, LANES) packed planes; bounds: (n_blocks, 1) per-block value
+    bounds; thresh: (1, 1). Returns (vals (m_pad,), block_lane_max
+    (n_blocks, LANES)).
     """
-    rows = tau2d.shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
-    n_blocks = rows // block_rows
-    grid = (n_blocks,)
+    n_blocks, np_, block_rows, lanes = env.shape
+    assert lanes == LANES and np_ == layout.n_planes(n_terms), env.shape
+    rows = n_blocks * block_rows
+    tau2d = tau_pad.reshape(rows, LANES)
+    n2d = n_pad.reshape(rows, LANES)
 
     page_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     bound_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    env_spec = pl.BlockSpec(
+        (1, np_, block_rows, LANES), lambda i: (i, 0, 0, 0)
+    )
     blkmax_spec = pl.BlockSpec((1, LANES), lambda i: (i, 0))
 
     kernel = functools.partial(crawl_value_kernel, n_terms=n_terms)
-    return pl.pallas_call(
+    vals, blkmax = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[scalar_spec, bound_spec] + [page_spec] * 8,
+        grid=(n_blocks,),
+        in_specs=[scalar_spec, bound_spec, page_spec, page_spec, env_spec],
         out_specs=[page_spec, blkmax_spec],
         out_shape=[
             jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
             jax.ShapeDtypeStruct((n_blocks, LANES), jnp.float32),
         ],
         interpret=interpret,
-    )(thresh, bounds, tau2d, n2d, *fields2d)
+    )(thresh, bounds, tau2d, n2d, env)
+    return vals.reshape(-1), blkmax

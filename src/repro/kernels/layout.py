@@ -1,0 +1,212 @@
+"""PageShard — the packed page-shard layout feeding the fused select pipeline.
+
+Production shards hold ~10^9 pages and are re-scored every scheduling round
+(paper Section 5.2 / App. G). The seed hot path re-padded and re-streamed 8
+separate f32 field arrays through HBM per round and re-derived env-only
+constants (beta, 1/gamma, 1/(delta+nu), the nu^i/(delta+nu)^{i+1} coefficient
+ladder) inside the kernel. All of that is a function of the *environment
+parameters only*, which change once per parameter refresh (hours), not once
+per round (seconds).
+
+This module packs everything the value kernel needs into one block-tiled SoA
+tensor, built once per parameter refresh:
+
+    env planes: (n_blocks, N_ENV + K, BLOCK_ROWS, 128) f32
+
+Per-page planes (axis 1):
+
+    MU_T    normalized importance                       mu / sum(mu)
+    ALPHA   unsignalled change rate                     (1 - lam) * delta
+    BETA    time-equivalent of one CIS                  b / alpha (BIG-guarded)
+    GAMMA   observed CIS rate                           lam * delta + nu
+    AG      alpha + gamma                               (x_w rate)
+    INV_G   1 / max(gamma, eps)                         (psi normalizer)
+    V_INF   asymptote mu_t / delta                      (iota -> inf branch)
+    VALID   1.0 real page / 0.0 padding                 (padding scores -inf)
+    COEFF0 + i, i < K:  nu^i / (delta + nu)^{i+1}       (w-series ladder)
+
+so the kernel reads ONE contiguous stream per block and does zero per-round
+derivation — no divisions, no logs, pure FMA + exp work. Precomputing the
+first-K coefficient ladder costs 4*K B/page of extra stream but removes the
+serial coeff_{i+1} = coeff_i * nu_ratio dependency chain from the term loop,
+so all K terms issue as independent FMAs on the VPU.
+
+Byte budget per page per round (K = 8):
+
+    state stream (tau, n_cis)            2 * 4 =  8 B
+    env stream   (8 + K planes)         16 * 4 = 64 B
+    fused-select output                 ~(2 * 8 * n_blocks * 128) / m ~= 0 B
+    ------------------------------------------------------------------
+    total                                        72 B * (active fraction)
+
+versus the seed pipeline's 8 * 4 read + 4 write + 4 re-read for top-k = 44 B
+on EVERY page every round. With value-tiered shards the fused pipeline touches
+only the blocks whose optimistic bound clears the selection threshold (the
+paper's App. G tiering), so the effective bytes/page is 72 * f_active, with
+f_active ~ 0.1 in steady state. `bytes_per_page()` reports the analytic number
+used by the benchmarks' derived column.
+
+State (tau^ELAP, n_CIS) stays in flat (m_pad,) arrays owned by the scheduler —
+it changes every round, so packing it with the env planes would force a full
+rewrite of the packed tensor per round. The flat padded arrays reshape to
+(n_blocks, BLOCK_ROWS, 128) views for free; page p lives at block
+p // block_pages, row (p % block_pages) // 128, lane p % 128 — i.e. flat
+padded index == page id, padding at the tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.values import BIG, DerivedEnv
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+_EPS = 1e-12
+
+# Env-plane indices (axis 1 of PageShard.env).
+MU_T = 0
+ALPHA = 1
+BETA = 2
+GAMMA = 3
+AG = 4
+INV_G = 5
+V_INF = 6
+VALID = 7
+COEFF0 = 8
+N_ENV = 8  # planes before the coefficient ladder
+N_STATE = 2  # tau, n_cis — streamed separately (see module docstring)
+
+
+def n_planes(n_terms: int) -> int:
+    return N_ENV + n_terms
+
+
+def bytes_per_page(n_terms: int) -> int:
+    """HBM bytes streamed per *active* page per round by the fused kernel."""
+    return 4 * (N_STATE + n_planes(n_terms))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PageShard:
+    """Packed env planes + static layout metadata. The env tensor is the only
+    array leaf, so a PageShard moves through jit/shard_map boundaries as a
+    single (n_blocks, n_planes, block_rows, LANES) f32 array."""
+
+    env: jax.Array
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n_terms: int = dataclasses.field(metadata=dict(static=True))
+    block_rows: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def block_pages(self) -> int:
+        return self.block_rows * LANES
+
+    @property
+    def n_blocks(self) -> int:
+        return self.env.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.n_blocks * self.block_pages
+
+
+def _pad(x: jax.Array, m_pad: int, fill: float) -> jax.Array:
+    pad = m_pad - x.shape[0]
+    if pad == 0:
+        return x.astype(jnp.float32)
+    return jnp.concatenate(
+        [x.astype(jnp.float32), jnp.full((pad,), fill, jnp.float32)]
+    )
+
+
+def padded_size(
+    m: int, block_rows: int = DEFAULT_BLOCK_ROWS, n_shards: int = 1
+) -> int:
+    """Pages after padding: a whole number of blocks, and (for sharded use)
+    a block count divisible by the shard count so every shard owns the same
+    number of whole blocks."""
+    bp = block_rows * LANES
+    n_blocks = -(-m // bp)
+    n_blocks = -(-n_blocks // n_shards) * n_shards
+    return n_blocks * bp
+
+
+def pack_shard(
+    d: DerivedEnv,
+    n_terms: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> PageShard:
+    """Build the packed env planes from a derived environment.
+
+    Pay once per parameter refresh. Padding pages (mu_t = 0, VALID = 0) score
+    -inf in the fused kernel and can never be selected.
+    """
+    m = d.delta.shape[0]
+    m_pad = padded_size(m, block_rows)
+
+    # Padded raw fields; fills chosen so every derived plane is finite.
+    delta = _pad(d.delta, m_pad, 1.0)
+    mu_t = _pad(d.mu_t, m_pad, 0.0)
+    nu = _pad(d.nu, m_pad, 0.0)
+    gamma = _pad(d.gamma, m_pad, 0.0)
+    alpha = _pad(d.alpha, m_pad, 1.0)
+    beta = _pad(d.beta, m_pad, 0.0)
+    valid = _pad(jnp.ones((m,), jnp.float32), m_pad, 0.0)
+
+    dn = jnp.maximum(delta + nu, _EPS)
+    # coeff_i = nu^i / (delta+nu)^{i+1} in log space (stable at larger i),
+    # mirroring core.values.w exactly so packed values match the oracle.
+    log_nu = jnp.log(jnp.maximum(nu, _EPS))
+    log_dn = jnp.log(dn)
+    ladder = []
+    for i in range(n_terms):
+        if i == 0:
+            ladder.append(1.0 / dn)
+        else:
+            coeff = jnp.exp(i * log_nu - (i + 1.0) * log_dn)
+            ladder.append(jnp.where(nu <= 0.0, 0.0, coeff))
+
+    planes = [
+        mu_t,                                   # MU_T
+        alpha,                                  # ALPHA
+        jnp.minimum(beta, BIG),                 # BETA
+        gamma,                                  # GAMMA
+        alpha + gamma,                          # AG
+        1.0 / jnp.maximum(gamma, _EPS),         # INV_G
+        mu_t / jnp.maximum(delta, _EPS),        # V_INF
+        valid,                                  # VALID
+    ] + ladder
+    n_blocks = m_pad // (block_rows * LANES)
+    env = jnp.stack(
+        [p.reshape(n_blocks, block_rows, LANES) for p in planes], axis=1
+    )
+    return PageShard(env=env, m=m, n_terms=n_terms, block_rows=block_rows)
+
+
+def pad_state(
+    tau_elap: jax.Array, n_cis: jax.Array, m_pad: int
+) -> tuple[jax.Array, jax.Array]:
+    """Pad flat scheduler state to the packed size (padding: tau = 0, n = 0 —
+    VALID masks them to -inf regardless)."""
+    return _pad(tau_elap, m_pad, 0.0), _pad(n_cis, m_pad, 0.0)
+
+
+def state_blocks(
+    tau_pad: jax.Array, n_pad: jax.Array, block_rows: int
+) -> tuple[jax.Array, jax.Array]:
+    """Free reshape of padded flat state to (n_blocks, block_rows, LANES)."""
+    return (
+        tau_pad.reshape(-1, block_rows, LANES),
+        n_pad.reshape(-1, block_rows, LANES),
+    )
+
+
+def asym_block_bounds(env: jax.Array) -> jax.Array:
+    """Static per-block value bound max(mu_t / delta): V can never exceed its
+    asymptote, so this bound needs no staleness refresh — blocks whose best
+    page can never reach the selection threshold are skipped forever."""
+    return env[:, V_INF].max(axis=(1, 2))

@@ -1,6 +1,12 @@
-"""jit'd public wrappers around the Pallas kernels: padding, 2-D page tiling,
-bound plumbing, and the interpret-mode switch (CPU validates the kernel body;
-TPU is the deployment target)."""
+"""jit'd public wrappers around the Pallas kernels.
+
+The hot path packs the environment once per parameter refresh
+(`layout.pack_shard`) and re-uses the packed planes every round — see
+`kernels.select.fused_select` for the production selection pipeline. The
+one-shot APIs here (`crawl_value`, `crawl_value_tiered`) keep the historical
+(tau, n, DerivedEnv) signature for tests/oracles and pack internally per call;
+`crawl_value_packed` is the refresh-amortized entry point.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,22 +15,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.values import DerivedEnv
-from repro.kernels.crawl_value import (
-    DEFAULT_BLOCK_ROWS,
-    LANES,
-    crawl_value_pallas,
-)
+from repro.kernels import layout
+from repro.kernels.crawl_value import crawl_value_pallas
+from repro.kernels.layout import DEFAULT_BLOCK_ROWS, LANES  # noqa: F401
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
-    pad = size - x.shape[0]
-    if pad == 0:
-        return x
-    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+@functools.partial(
+    jax.jit, static_argnames=("n_terms", "interpret")
+)
+def crawl_value_packed(
+    tau_pad: jax.Array,
+    n_pad: jax.Array,
+    env: jax.Array,
+    bounds: jax.Array | None = None,
+    thresh: jax.Array | None = None,
+    n_terms: int = 8,
+    interpret: bool | None = None,
+):
+    """Dense values over a packed shard (env from `layout.pack_shard`).
+
+    Returns (vals (m_pad,) with -inf for skipped blocks and padding,
+    per-block lane maxima (n_blocks, LANES))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n_blocks = env.shape[0]
+    if bounds is None:
+        bounds = jnp.ones((n_blocks,), jnp.float32)
+    if thresh is None:
+        thresh = jnp.zeros((), jnp.float32)
+    return crawl_value_pallas(
+        tau_pad,
+        n_pad,
+        env,
+        bounds.reshape(-1, 1).astype(jnp.float32),
+        thresh.reshape(1, 1).astype(jnp.float32),
+        n_terms,
+        interpret,
+    )
 
 
 @functools.partial(
@@ -38,34 +69,19 @@ def crawl_value(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused V_GREEDY_NCIS for a flat page shard (no tiering: all blocks on)."""
+    """Fused V_GREEDY_NCIS for a flat page shard (no tiering: all blocks on).
+
+    One-shot API: packs per call. Hot paths should pack once per parameter
+    refresh and call `crawl_value_packed` / `select.fused_select`."""
     if interpret is None:
         interpret = not _on_tpu()
     m = tau_elap.shape[0]
-    block_pages = block_rows * LANES
-    m_pad = -(-m // block_pages) * block_pages
-    n_blocks = m_pad // block_pages
-
-    # Padding pages: delta=1, mu=0 -> value 0, never selected.
-    tau2d = _pad_to(tau_elap.astype(jnp.float32), m_pad, 0.0).reshape(-1, LANES)
-    n2d = _pad_to(n_cis.astype(jnp.float32), m_pad, 0.0).reshape(-1, LANES)
-    fields = tuple(
-        _pad_to(x.astype(jnp.float32), m_pad, fill).reshape(-1, LANES)
-        for x, fill in (
-            (d.delta, 1.0),
-            (d.mu_t, 0.0),
-            (d.nu, 0.0),
-            (d.gamma, 0.0),
-            (d.alpha, 1.0),
-            (d.b, 0.0),
-        )
+    shard = layout.pack_shard(d, n_terms=n_terms, block_rows=block_rows)
+    tau_pad, n_pad = layout.pad_state(tau_elap, n_cis, shard.m_pad)
+    vals, _ = crawl_value_packed(
+        tau_pad, n_pad, shard.env, n_terms=n_terms, interpret=interpret
     )
-    bounds = jnp.ones((n_blocks, 1), jnp.float32)
-    thresh = jnp.zeros((1, 1), jnp.float32)
-    vals, _ = crawl_value_pallas(
-        tau2d, n2d, fields, bounds, thresh, n_terms, block_rows, interpret
-    )
-    return vals.reshape(-1)[:m]
+    return vals[:m]
 
 
 @functools.partial(
@@ -88,20 +104,10 @@ def crawl_value_tiered(
     m = tau_elap.shape[0]
     block_pages = block_rows * LANES
     assert m % block_pages == 0, "tiered path expects block-aligned shards"
-    tau2d = tau_elap.astype(jnp.float32).reshape(-1, LANES)
-    n2d = n_cis.astype(jnp.float32).reshape(-1, LANES)
-    fields = tuple(
-        x.astype(jnp.float32).reshape(-1, LANES)
-        for x in (d.delta, d.mu_t, d.nu, d.gamma, d.alpha, d.b)
+    shard = layout.pack_shard(d, n_terms=n_terms, block_rows=block_rows)
+    tau_pad, n_pad = layout.pad_state(tau_elap, n_cis, shard.m_pad)
+    vals, blkmax = crawl_value_packed(
+        tau_pad, n_pad, shard.env, bounds, thresh,
+        n_terms=n_terms, interpret=interpret,
     )
-    vals, blkmax = crawl_value_pallas(
-        tau2d,
-        n2d,
-        fields,
-        bounds.reshape(-1, 1).astype(jnp.float32),
-        thresh.reshape(1, 1).astype(jnp.float32),
-        n_terms,
-        block_rows,
-        interpret,
-    )
-    return vals.reshape(-1), blkmax.max(axis=-1)
+    return vals, blkmax.max(axis=-1)

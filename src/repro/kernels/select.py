@@ -1,0 +1,328 @@
+"""Fused single-pass value/top-k selection — the m-element value vector never
+touches HBM.
+
+The paper's tractability argument (Section 5.2; also "Learning to Crawl",
+Upadhyay et al. 2019) is that only the comparison among the top-valued pages
+matters per round. The seed pipeline still materialized all m values to HBM
+and ran `jax.lax.top_k` over them as a second full pass. Here a single kernel
+pass computes values in-register from the packed PageShard planes
+(`kernels.layout`) and emits, per block, only
+
+  * the block's per-lane maxima (candidate slot 0), and
+  * a candidate buffer: the top `cand_per_lane` (value, page-id) pairs of
+    each of the 128 lane columns,
+
+so global top-k runs over n_blocks * cand_per_lane * 128 = O(n_blocks * c)
+candidates instead of m, and HBM write traffic per round is
+~8 * c * 128 * n_blocks bytes ~ 0 bytes/page. Blocks whose optimistic bound
+is below the running selection threshold (seeded from the previous round's
+k-th value; see `sched.tiered.BlockBounds`) skip all compute via `pl.when`.
+
+Exact-recovery guarantee
+------------------------
+Let kth be the k-th best candidate value. The candidate selection equals dense
+`jax.lax.top_k` over all pages (including tie order: ties break toward lower
+page id in both) unless
+
+  * some lane column's last retained candidate is >= kth (that column may
+    have dropped a page that belongs in the top-k), or
+  * thresh > kth (a skipped block's bound — an upper bound on its best page —
+    could exceed kth, i.e. a winner may be hiding in a skipped block).
+
+Both conditions are detected from the candidate buffers alone; when either
+fires, the round falls back to a full dense pass (`crawl_value.pallas` body
+as pure jnp + `jax.lax.top_k`) inside `lax.cond`, so selection is *provably
+identical* to dense top-k on every round, with the fallback priced only when
+it actually triggers. `auto_cand_per_lane` sizes c so the fallback stays rare
+even when all k winners concentrate in a single block (value-tiered shards).
+
+Two implementations share the exact same math (`value_from_planes` and
+`_lane_topc`): a Pallas kernel (TPU deployment; validated in interpret mode)
+and a `lax.scan`-over-blocks mirror whose `lax.cond` reproduces the kernel's
+`pl.when` block skip at jnp level — the CPU benchmark path, following the
+convention established in `sched.tiered`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import layout
+from repro.kernels.crawl_value import value_from_planes
+from repro.kernels.layout import LANES
+
+# Floor on candidates retained per lane column (c = 2 collides on most
+# rounds already at k = 256). See `auto_cand_per_lane` for the sizing rule.
+DEFAULT_CAND_PER_LANE = 4
+
+
+def auto_cand_per_lane(k: int) -> int:
+    """Candidate-buffer depth for budget k.
+
+    Worst case (value-tiered shards): all k winners land in ONE block, i.e.
+    mean lam = ceil(k/128) winners per lane column. Winners per column is
+    ~Poisson(lam); retaining 2*lam + 6 per column puts the per-round fallback
+    probability well under 1% even then, at a few extra max/select passes per
+    active block — cheap next to the K-term value ladder."""
+    lam = -(-k // LANES)
+    return max(DEFAULT_CAND_PER_LANE, 2 * lam + 6)
+
+
+class FusedSelection(NamedTuple):
+    values: jax.Array       # (k,) selected values, descending
+    ids: jax.Array          # (k,) int32 page ids (padded-flat id space)
+    blk_max: jax.Array      # (n_blocks,) block maxima (-inf for skipped)
+    fell_back: jax.Array    # () bool — dense exact-recovery pass taken
+    frac_active: jax.Array  # () f32 — fraction of blocks evaluated
+
+
+def _lane_topc(v: jax.Array, row0, c: int):
+    """Top-c (value, page-id) per lane column of a (R, LANES) value tile.
+
+    Iterative max-extraction: c rounds of (lane max, lowest achieving row,
+    mask) — pure VPU select/max work, no sort, no scatter. Ties break toward
+    the lower row, matching `jax.lax.top_k`'s lower-index-first order.
+    row0: first global row of this tile (page id = (row0 + r) * LANES + lane).
+    """
+    rows_n, _ = v.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    vals, ids = [], []
+    vv = v
+    for _ in range(c):
+        mx = jnp.max(vv, axis=0, keepdims=True)                    # (1, L)
+        r = jnp.min(jnp.where(vv == mx, rows, rows_n), axis=0,
+                    keepdims=True)                                  # (1, L)
+        vals.append(mx)
+        ids.append((row0 + r) * LANES + lanes)
+        vv = jnp.where(rows == r, -jnp.inf, vv)
+    return jnp.concatenate(vals, axis=0), jnp.concatenate(ids, axis=0)
+
+
+def fused_select_kernel(
+    thresh_ref,
+    bound_ref,
+    row0_ref,
+    tau_ref,
+    n_ref,
+    env_ref,
+    cand_v_ref,
+    cand_i_ref,
+    *,
+    n_terms: int,
+    cand_per_lane: int,
+):
+    bound = bound_ref[0, 0]
+    thresh = thresh_ref[0, 0]
+
+    @pl.when(bound >= thresh)
+    def _compute():
+        v = value_from_planes(tau_ref[...], n_ref[...], env_ref[0], n_terms)
+        cv, ci = _lane_topc(v, row0_ref[0, 0], cand_per_lane)
+        cand_v_ref[...] = cv
+        cand_i_ref[...] = ci
+
+    @pl.when(bound < thresh)
+    def _skip():
+        cand_v_ref[...] = jnp.full(cand_v_ref.shape, -jnp.inf, jnp.float32)
+        cand_i_ref[...] = jnp.zeros(cand_i_ref.shape, jnp.int32)
+
+
+def _candidates_pallas(tau_pad, n_pad, env, bounds, thresh, n_terms,
+                       cand_per_lane, interpret):
+    n_blocks, np_, block_rows, _ = env.shape
+    rows = n_blocks * block_rows
+    page_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    bound_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    env_spec = pl.BlockSpec((1, np_, block_rows, LANES),
+                            lambda i: (i, 0, 0, 0))
+    cand_spec = pl.BlockSpec((cand_per_lane, LANES), lambda i: (i, 0))
+    row0s = (jnp.arange(n_blocks, dtype=jnp.int32) * block_rows).reshape(-1, 1)
+    kernel = functools.partial(
+        fused_select_kernel, n_terms=n_terms, cand_per_lane=cand_per_lane
+    )
+    cand_v, cand_i = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[scalar_spec, bound_spec, bound_spec, page_spec, page_spec,
+                  env_spec],
+        out_specs=[cand_spec, cand_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks * cand_per_lane, LANES),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks * cand_per_lane, LANES),
+                                 jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        thresh.reshape(1, 1).astype(jnp.float32),
+        bounds.reshape(-1, 1).astype(jnp.float32),
+        row0s,
+        tau_pad.reshape(rows, LANES),
+        n_pad.reshape(rows, LANES),
+        env,
+    )
+    return (
+        cand_v.reshape(n_blocks, cand_per_lane, LANES),
+        cand_i.reshape(n_blocks, cand_per_lane, LANES),
+    )
+
+
+def _candidates_jnp(tau_pad, n_pad, env, bounds, thresh, n_terms,
+                    cand_per_lane):
+    """scan-over-blocks mirror of the kernel grid; `lax.cond` == `pl.when`,
+    so skipped blocks cost no FLOPs here either."""
+    n_blocks, _, block_rows, _ = env.shape
+    tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
+    row0s = jnp.arange(n_blocks, dtype=jnp.int32) * block_rows
+
+    def body(_, xs):
+        tau_b, n_b, env_b, bound_b, row0 = xs
+
+        def compute(_):
+            v = value_from_planes(tau_b, n_b, env_b, n_terms)
+            return _lane_topc(v, row0, cand_per_lane)
+
+        def skip(_):
+            return (
+                jnp.full((cand_per_lane, LANES), -jnp.inf, jnp.float32),
+                jnp.zeros((cand_per_lane, LANES), jnp.int32),
+            )
+
+        return None, jax.lax.cond(bound_b >= thresh, compute, skip, None)
+
+    _, (cand_v, cand_i) = jax.lax.scan(
+        body, None, (tau3, n3, env, bounds.astype(jnp.float32), row0s)
+    )
+    return cand_v, cand_i
+
+
+def fused_select_local(
+    tau_pad: jax.Array,
+    n_pad: jax.Array,
+    env: jax.Array,
+    k: int,
+    thresh: jax.Array,
+    bounds: jax.Array,
+    n_terms: int = 8,
+    cand_per_lane: int | None = None,
+    impl: str = "jnp",
+    interpret: bool = True,
+) -> FusedSelection:
+    """Un-jitted core (safe inside shard_map). See `fused_select`."""
+    if cand_per_lane is None:
+        cand_per_lane = auto_cand_per_lane(k)
+    n_blocks, _, block_rows, _ = env.shape
+    n_cand = n_blocks * cand_per_lane * LANES
+    assert k <= n_cand, (
+        f"k={k} exceeds candidate capacity {n_cand}; raise cand_per_lane"
+    )
+    thresh = jnp.asarray(thresh, jnp.float32)
+    if impl == "pallas":
+        cand_v, cand_i = _candidates_pallas(
+            tau_pad, n_pad, env, bounds, thresh, n_terms, cand_per_lane,
+            interpret,
+        )
+    else:
+        cand_v, cand_i = _candidates_jnp(
+            tau_pad, n_pad, env, bounds, thresh, n_terms, cand_per_lane
+        )
+
+    flat_v = cand_v.reshape(-1)
+    flat_i = cand_i.reshape(-1)
+    # Stable order: value descending, page id ascending on ties — exactly
+    # jax.lax.top_k's tie-breaking, so candidate selection is bit-identical
+    # to the dense pass whenever the exactness conditions hold.
+    order = jnp.lexsort((flat_i, -flat_v))
+    top_v = flat_v[order[:k]]
+    top_i = flat_i[order[:k]]
+    kth = top_v[k - 1]
+
+    # Exact-recovery check (module docstring): any lane column whose last
+    # retained candidate could still beat (or tie) the k-th value may have
+    # dropped a winner; a threshold above kth may have skipped one.
+    col_last = cand_v[:, cand_per_lane - 1, :]
+    fell_back = (thresh > kth) | jnp.any(col_last >= kth)
+
+    def dense(_):
+        tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
+        vals = value_from_planes(tau3, n3, env, n_terms).reshape(-1)
+        dv, di = jax.lax.top_k(vals, k)
+        return dv, di.astype(jnp.int32)
+
+    top_v, top_i = jax.lax.cond(
+        fell_back, dense, lambda _: (top_v, top_i), None
+    )
+    return FusedSelection(
+        values=top_v,
+        ids=top_i,
+        blk_max=cand_v[:, 0, :].max(axis=-1),
+        fell_back=fell_back,
+        frac_active=jnp.mean((bounds >= thresh).astype(jnp.float32)),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_terms", "cand_per_lane", "impl", "interpret"),
+)
+def _fused_select_jit(tau_pad, n_pad, env, k, thresh, bounds, n_terms,
+                      cand_per_lane, impl, interpret):
+    return fused_select_local(
+        tau_pad, n_pad, env, k, thresh, bounds, n_terms, cand_per_lane,
+        impl, interpret,
+    )
+
+
+def fused_select(
+    tau_pad: jax.Array,
+    n_cis_pad: jax.Array,
+    shard: layout.PageShard | jax.Array,
+    k: int,
+    thresh: jax.Array | float | None = None,
+    bounds: jax.Array | None = None,
+    cand_per_lane: int | None = None,
+    n_terms: int | None = None,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> FusedSelection:
+    """Fused single-pass top-k selection over a packed shard.
+
+    tau_pad/n_cis_pad: (m_pad,) padded flat state (`layout.pad_state`).
+    shard: a `layout.PageShard` (or its raw env planes; n_terms then
+    required). thresh: running selection threshold (previous round's k-th
+    value; None = -inf, no skipping). bounds: (n_blocks,) optimistic
+    per-block bounds (None = +inf, all blocks evaluated;
+    `layout.asym_block_bounds` gives the static asymptote bound,
+    `sched.tiered.BlockBounds` the refreshing one).
+
+    Selection is exactly dense `jax.lax.top_k` on every round — overflow /
+    over-aggressive-threshold rounds transparently fall back to a dense pass.
+    """
+    if isinstance(shard, layout.PageShard):
+        env = shard.env
+        n_terms = shard.n_terms if n_terms is None else n_terms
+    else:
+        env = shard
+        assert n_terms is not None, "raw env planes require n_terms"
+    if cand_per_lane is None:
+        cand_per_lane = auto_cand_per_lane(k)
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_blocks = env.shape[0]
+    if thresh is None:
+        thresh = -jnp.inf
+    if bounds is None:
+        bounds = jnp.full((n_blocks,), jnp.inf, jnp.float32)
+    return _fused_select_jit(
+        tau_pad, n_cis_pad, env, k,
+        jnp.asarray(thresh, jnp.float32), bounds,
+        n_terms, cand_per_lane, impl, interpret,
+    )

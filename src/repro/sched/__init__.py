@@ -1,4 +1,5 @@
-"""Production scheduler: sharded selection, tiering, elastic service."""
+"""Production scheduler: sharded selection (dense / table / fused), tiering,
+elastic service."""
 from repro.sched.distributed import (
     ShardedSchedState,
     make_sharded_env,
@@ -6,6 +7,13 @@ from repro.sched.distributed import (
     sharded_select,
 )
 from repro.sched.service import CrawlScheduler
-from repro.sched.tiered import TierState, tiered_select
+from repro.sched.tiered import (
+    BlockBounds,
+    TierState,
+    current_block_bounds,
+    init_block_bounds,
+    tiered_select,
+    update_block_bounds,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

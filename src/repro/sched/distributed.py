@@ -12,6 +12,23 @@ Only the candidate exchange touches the interconnect: k * n_shards * 8 bytes
 per round, independent of the page count — this is the paper's "only the
 comparison between the pages with the top crawl values matters" made concrete.
 
+Local value evaluation has four strategies, in increasing production-grade
+order:
+
+  * dense jnp series (`use_kernel=False`, no table) — oracle-grade;
+  * exposure-table lookup (`table=...`) — App. G tier tables;
+  * dense Pallas kernel (`use_kernel=True`) — values written to HBM, full
+    `top_k` second pass;
+  * **fused select** (`env_planes=...` from `kernels.layout.pack_shard`) —
+    single pass, in-register values, per-block candidate buffers, the
+    m-element value vector never materialized; exact (provably identical to
+    dense top-k) via the candidate-overflow fallback in `kernels.select`.
+    `thresh` (previous round's k-th value) and `bounds` (per-block optimistic
+    bounds, e.g. `layout.asym_block_bounds` or `tiered.BlockBounds`) enable
+    the App. G block skip. The fused path requires block-aligned shards:
+    state length == n_blocks * block_rows * 128 with n_blocks divisible by
+    the shard count.
+
 The same step is used by the multi-pod dry-run at 2^30 pages on 512 devices.
 """
 from __future__ import annotations
@@ -26,6 +43,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import tables
 from repro.core.state import PageState
 from repro.core.values import DerivedEnv, Env, derive
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map (new API) with a jax.experimental fallback (<= 0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 class ShardedSchedState(NamedTuple):
@@ -45,6 +73,9 @@ def _local_values(tau_elap, n_cis, d: DerivedEnv, table: tables.ValueTable | Non
     if table is not None:
         return tables.lookup_state(table, d, tau_elap, n_cis)
     if use_kernel:
+        # Legacy dense-kernel path: packs the env per round (ops.crawl_value
+        # is a one-shot API). Hot paths should pass env_planes instead —
+        # the fused path packs once per parameter refresh.
         from repro.kernels import ops as kops
 
         return kops.crawl_value(tau_elap, n_cis, d, n_terms=n_terms)
@@ -54,15 +85,56 @@ def _local_values(tau_elap, n_cis, d: DerivedEnv, table: tables.ValueTable | Non
                       method="series")
 
 
+def _axis_size(ax):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)  # jax <= 0.4.x
+
+
+def _shard_linear_index(axes):
+    shard_lin = jnp.int32(0)
+    mul = 1
+    for ax in reversed(axes):
+        shard_lin = shard_lin + jax.lax.axis_index(ax) * mul
+        mul = mul * _axis_size(ax)
+    return shard_lin
+
+
+def _global_topk(loc_v, loc_i, axes, m_local, k):
+    """Candidate exchange + global top-k + local winner mask (shared by the
+    dense and fused paths). loc_i are shard-local page indices."""
+    shard_lin = _shard_linear_index(axes)
+    gids = loc_i.astype(jnp.int32) + shard_lin * m_local
+    # Tiny candidate exchange: (n_shards * k_loc) values + ids.
+    all_v = loc_v
+    all_g = gids
+    for ax in axes:
+        all_v = jax.lax.all_gather(all_v, ax, tiled=True)
+        all_g = jax.lax.all_gather(all_g, ax, tiled=True)
+    top_v, top_j = jax.lax.top_k(all_v, k)
+    top_g = all_g[top_j]
+    # Per-shard crawl mask for the winners that live here.
+    local_start = shard_lin * m_local
+    rel = top_g - local_start
+    here = (rel >= 0) & (rel < m_local)
+    # Out-of-bounds indices are dropped, so non-local winners are no-ops.
+    idx = jnp.where(here, rel, m_local)
+    mask = jnp.zeros((m_local,), bool).at[idx].set(True, mode="drop")
+    return top_g, top_v, mask
+
+
 def sharded_select(
     state: ShardedSchedState,
-    d: DerivedEnv,
+    d: DerivedEnv | None,
     table: tables.ValueTable | None,
     mesh: Mesh,
     k: int,
     n_terms: int = 8,
     use_kernel: bool = False,
     k_local: int | None = None,
+    env_planes: jax.Array | None = None,
+    thresh: jax.Array | None = None,
+    bounds: jax.Array | None = None,
 ):
     """Global top-k page selection. Returns (global_page_ids, values) replicated
     and a per-page crawl mask (sharded like the state).
@@ -72,48 +144,73 @@ def sharded_select(
     with overwhelming probability and cuts the candidate exchange by S/c —
     see EXPERIMENTS.md §Perf (the final top-k result is unchanged whenever no
     shard holds more than k_local winners).
+
+    env_planes/thresh/bounds: fused-select path (module docstring). The local
+    selection it produces is *exactly* `top_k(values, k_local)` — the
+    overflow fallback in `kernels.select` guarantees it — so the global
+    result is identical to the dense paths. NOTE: `thresh` is compared
+    against each shard's *local* k-th candidate; feeding the global k-th on
+    a multi-shard mesh stays exact but drives low-value shards into the
+    dense fallback every round — pass per-shard-sound thresholds (or None)
+    there until the per-shard threshold exchange lands (ROADMAP).
     """
     axes = tuple(mesh.axis_names)
     pspec = P(axes)
     k_loc = min(k_local or k, k)
+    m = state.tau_elap.shape[0]
+
+    if env_planes is not None:
+        from repro.kernels import select as ksel
+
+        n_blocks, _, block_rows, lanes = env_planes.shape
+        n_shards = 1
+        for ax_size in mesh.devices.shape:
+            n_shards *= ax_size
+        assert m == n_blocks * block_rows * lanes, (
+            "fused path needs block-aligned padded state "
+            f"(m={m}, planes={env_planes.shape})"
+        )
+        assert n_blocks % n_shards == 0, (
+            "fused path needs n_blocks divisible by the shard count"
+        )
+        if thresh is None:
+            thresh = jnp.float32(-jnp.inf)
+        if bounds is None:
+            bounds = jnp.full((n_blocks,), jnp.inf, jnp.float32)
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+        def shard_fn(tau_elap, n_cis, env_shard, bounds_shard, thresh_r):
+            sel = ksel.fused_select_local(
+                tau_elap, n_cis.astype(jnp.float32), env_shard, k_loc,
+                thresh_r, bounds_shard, n_terms=n_terms, impl=impl,
+                interpret=impl != "pallas",
+            )
+            m_local = tau_elap.shape[0]
+            return _global_topk(sel.values, sel.ids, axes, m_local, k)
+
+        fn = _shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(pspec, pspec, P(axes, None, None, None), P(axes), P()),
+            out_specs=(P(), P(), pspec),
+        )
+        return fn(state.tau_elap, state.n_cis, env_planes, bounds,
+                  jnp.asarray(thresh, jnp.float32))
 
     def shard_fn(tau_elap, n_cis, d_shard, table_shard):
         vals = _local_values(tau_elap, n_cis, d_shard, table_shard, n_terms,
                              use_kernel)
         m_local = tau_elap.shape[0]
         loc_v, loc_i = jax.lax.top_k(vals, k_loc)
-        # Global ids: shard offset + local index.
-        shard_lin = jnp.int32(0)
-        mul = 1
-        for ax in reversed(axes):
-            shard_lin = shard_lin + jax.lax.axis_index(ax) * mul
-            mul = mul * jax.lax.axis_size(ax)
-        gids = loc_i.astype(jnp.int32) + shard_lin * m_local
-        # Tiny candidate exchange: (n_shards * k) values + ids.
-        all_v = loc_v
-        all_g = gids
-        for ax in axes:
-            all_v = jax.lax.all_gather(all_v, ax, tiled=True)
-            all_g = jax.lax.all_gather(all_g, ax, tiled=True)
-        top_v, top_j = jax.lax.top_k(all_v, k)
-        top_g = all_g[top_j]
-        # Per-shard crawl mask for the winners that live here.
-        local_start = shard_lin * m_local
-        rel = top_g - local_start
-        here = (rel >= 0) & (rel < m_local)
-        # Out-of-bounds indices are dropped, so non-local winners are no-ops.
-        idx = jnp.where(here, rel, m_local)
-        mask = jnp.zeros((m_local,), bool).at[idx].set(True, mode="drop")
-        return top_g, top_v, mask
+        return _global_topk(loc_v, loc_i, axes, m_local, k)
 
     table_specs = tables.ValueTable(vals=P(axes, None), u_max=P()) if table is not None else None
     d_specs = DerivedEnv(*([pspec] * len(d)))
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(pspec, pspec, d_specs, table_specs),
         out_specs=(P(), P(), pspec),
-        check_vma=False,
     )
     return fn(state.tau_elap, state.n_cis, d, table)
 
@@ -125,7 +222,7 @@ def sharded_select(
 def sharded_crawl_step(
     state: ShardedSchedState,
     new_cis: jax.Array,
-    d: DerivedEnv,
+    d: DerivedEnv | None,
     table: tables.ValueTable | None,
     mesh: Mesh,
     k: int,
@@ -133,11 +230,20 @@ def sharded_crawl_step(
     n_terms: int = 8,
     use_kernel: bool = False,
     k_local: int | None = None,
+    env_planes: jax.Array | None = None,
+    thresh: jax.Array | None = None,
+    bounds: jax.Array | None = None,
 ):
     """One full scheduling round: select k pages globally, reset them, advance
-    time, ingest externally-fed CIS counts. Returns (new_state, page_ids)."""
+    time, ingest externally-fed CIS counts. Returns (new_state, page_ids).
+
+    With env_planes (fused path) the caller threads `thresh` across rounds:
+    feed the previous round's k-th returned value (relaxed by a hysteresis
+    factor) to skip provably-losing blocks; exactness is preserved for any
+    thresh by the fallback."""
     top_g, top_v, mask = sharded_select(
-        state, d, table, mesh, k, n_terms, use_kernel, k_local
+        state, d, table, mesh, k, n_terms, use_kernel, k_local,
+        env_planes, thresh, bounds,
     )
     tau = jnp.where(mask, 0.0, state.tau_elap) + dt
     n = jnp.where(mask, 0, state.n_cis) + new_cis

@@ -9,6 +9,14 @@ feeds, and exposes the two production properties the paper highlights:
   * **decentralized parameter refresh**: per-page (Delta, mu, lam, nu) updates
     touch only the owning shard (value tables are rebuilt shard-locally).
 
+Selection backends: exposure-table lookup (default), the dense Pallas kernel
+(`use_kernel=True`), or the fused select pipeline (`use_fused=True`): the env
+is packed once at construction / parameter refresh (`kernels.layout`), pages
+are padded to block alignment (padding scores -inf, never selected), and the
+previous round's k-th value warm-starts the selection threshold so blocks
+whose static asymptote bound can't reach it are skipped. Selection stays
+provably identical to dense top-k (see `kernels.select`).
+
 Fault tolerance: the entire scheduler state is two arrays; `state_dict()` /
 `load_state_dict()` plug into repro.checkpoint for atomic, sharded, resumable
 snapshots. Loss of a shard loses only the staleness clocks of its pages (they
@@ -25,6 +33,12 @@ from repro.core import tables
 from repro.core.values import Env, derive
 from repro.sched.distributed import ShardedSchedState, sharded_crawl_step
 
+# Threshold warm-start relaxation: the next round's k-th value can sit below
+# the current one (winners reset to ~0 value), so the carried threshold is
+# relaxed; too-aggressive thresholds only cost a dense fallback, never
+# exactness.
+THRESH_HYSTERESIS = 0.9
+
 
 class CrawlScheduler:
     def __init__(
@@ -36,6 +50,8 @@ class CrawlScheduler:
         n_terms: int = 8,
         table_grid: int | None = 128,
         use_kernel: bool = False,
+        use_fused: bool = False,
+        block_rows: int | None = None,
     ):
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
@@ -43,24 +59,65 @@ class CrawlScheduler:
         self.bandwidth = float(bandwidth)
         self.n_terms = n_terms
         self.use_kernel = use_kernel
+        self.use_fused = use_fused
         sh = NamedSharding(mesh, P(self.axes))
         self.m = env.m
-        env = jax.device_put(env, sh)
-        self.d = derive(env)
-        self.table = (
-            tables.build_ncis_table(self.d, n_terms=n_terms, n_grid=table_grid)
-            if table_grid
-            else None
-        )
+        self._shard = None
+        self._thresh = None
+        self._bounds = None
+        if use_fused:
+            from repro.kernels import layout
+
+            block_rows = block_rows or layout.DEFAULT_BLOCK_ROWS
+            m_state = layout.padded_size(self.m, block_rows,
+                                         n_shards=mesh.size)
+            # Pad the raw env so derived state/env sizes agree; padding pages
+            # (mu = 0) normalize away and score -inf in the fused kernel.
+            pad = m_state - self.m
+            if pad:
+                env = Env(
+                    delta=jnp.concatenate([env.delta, jnp.ones((pad,))]),
+                    mu=jnp.concatenate([env.mu, jnp.zeros((pad,))]),
+                    lam=jnp.concatenate([env.lam, jnp.zeros((pad,))]),
+                    nu=jnp.concatenate([env.nu, jnp.zeros((pad,))]),
+                )
+            env = jax.device_put(env, sh)
+            self.d = derive(env, mu_total=jnp.sum(env.mu))
+            self._shard = layout.pack_shard(
+                self.d, n_terms=n_terms, block_rows=block_rows
+            )
+            self._bounds = layout.asym_block_bounds(self._shard.env)
+            # Threshold warm-start is sound per shard only against that
+            # shard's own k-th value; carrying the *global* k-th would push
+            # low-value shards into the dense fallback every round (exact but
+            # slow). Until per-shard thresholds are threaded through the
+            # candidate exchange (see ROADMAP), skip-by-threshold is enabled
+            # on single-shard meshes only.
+            self._warm_thresh = mesh.size == 1
+            self._thresh = jnp.float32(-jnp.inf)
+            self.table = None
+        else:
+            m_state = self.m
+            env = jax.device_put(env, sh)
+            self.d = derive(env)
+            self.table = (
+                tables.build_ncis_table(self.d, n_terms=n_terms,
+                                        n_grid=table_grid)
+                if table_grid
+                else None
+            )
+        self.m_state = m_state
         self.state = ShardedSchedState(
-            tau_elap=jax.device_put(jnp.zeros((self.m,), jnp.float32), sh),
-            n_cis=jax.device_put(jnp.zeros((self.m,), jnp.int32), sh),
+            tau_elap=jax.device_put(jnp.zeros((m_state,), jnp.float32), sh),
+            n_cis=jax.device_put(jnp.zeros((m_state,), jnp.int32), sh),
             crawl_clock=jnp.int32(0),
         )
 
     @property
     def k_per_round(self) -> int:
-        return max(1, int(round(self.bandwidth * self.round_period)))
+        # A budget above the shard size just means "crawl everything".
+        k = max(1, int(round(self.bandwidth * self.round_period)))
+        return min(k, self.m)
 
     def set_bandwidth(self, bandwidth: float) -> None:
         """App. D: adapting to a new budget is just a new k — no re-solve."""
@@ -68,17 +125,28 @@ class CrawlScheduler:
 
     def ingest_and_schedule(self, new_cis: jax.Array):
         """One round: ingest the CIS feed counts, pick k pages to crawl."""
+        if new_cis.shape[0] < self.m_state:
+            new_cis = jnp.concatenate([
+                new_cis,
+                jnp.zeros((self.m_state - new_cis.shape[0],), new_cis.dtype),
+            ])
+        k = self.k_per_round
         self.state, (page_ids, values) = sharded_crawl_step(
             self.state,
             new_cis,
-            self.d,
+            self.d if self._shard is None else None,
             self.table,
             self.mesh,
-            self.k_per_round,
+            k,
             self.round_period,
             self.n_terms,
             self.use_kernel,
+            env_planes=self._shard.env if self._shard is not None else None,
+            thresh=self._thresh,
+            bounds=self._bounds,
         )
+        if self._shard is not None and self._warm_thresh:
+            self._thresh = values[k - 1] * THRESH_HYSTERESIS
         return page_ids, values
 
     def state_dict(self):

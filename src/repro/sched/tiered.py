@@ -34,6 +34,76 @@ from repro.core import tables
 from repro.core.values import DerivedEnv
 
 
+class BlockBounds(NamedTuple):
+    """Per-block optimistic bounds for the *fused* select pipeline
+    (`kernels.select.fused_select`).
+
+    Same *approximate* bound construction as `TierState` — growth capped by
+    `slope * elapsed` and by the static asymptote — but tracking only the
+    per-block maxima the fused kernel already emits (candidate slot 0), never
+    an m-element cached value vector, so it composes with the
+    never-materialize-values guarantee.
+
+    Exactness caveat (same as the paper's production tiering): the slope term
+    bounds only *time-driven* value growth. An ingested CIS jumps a page's
+    exposure by beta instantly, which this bound ignores, so a skipped block
+    that received signals can transiently hide a winner (the select-time
+    fallback protects against over-aggressive thresholds and candidate
+    overflow, not unsound bounds). Feed blocks with fresh CIS back through
+    `update_block_bounds(..., evaluated | cis_seen, ...)` — or use only the
+    static `layout.asym_block_bounds`, which is a true upper bound and keeps
+    fused selection exactly equal to dense top-k (what `sched.service` and
+    the benchmarks do).
+    """
+
+    asym: jax.Array       # (n_blocks,) static bound max(mu_t/delta)
+    slope: jax.Array      # (n_blocks,) max value growth rate bound
+    blk_max: jax.Array    # (n_blocks,) block max at last exact evaluation
+    last_eval: jax.Array  # (n_blocks,) round index of last exact evaluation
+
+
+def init_block_bounds(env_planes: jax.Array) -> BlockBounds:
+    """Build bounds from packed env planes (`kernels.layout.pack_shard`)."""
+    from repro.kernels import layout
+
+    asym = layout.asym_block_bounds(env_planes)
+    mu_blk = env_planes[:, layout.MU_T].max(axis=(1, 2))
+    nb = env_planes.shape[0]
+    return BlockBounds(
+        asym=asym,
+        slope=mu_blk * jnp.exp(-1.0) * 2.0,
+        blk_max=jnp.zeros((nb,), jnp.float32),
+        last_eval=jnp.zeros((nb,), jnp.int32),
+    )
+
+
+def current_block_bounds(
+    bb: BlockBounds, round_idx: jax.Array, dt: float
+) -> jax.Array:
+    """Optimistic per-block bound for this round. Values only shrink on crawl
+    and grow at most `slope` per unit time since the last exact evaluation,
+    capped by the static asymptote; never-evaluated blocks get +inf."""
+    elapsed = (round_idx - bb.last_eval).astype(jnp.float32) * dt
+    bound = jnp.minimum(bb.blk_max + bb.slope * elapsed, bb.asym)
+    return jnp.where(bb.last_eval == 0, jnp.inf, bound)
+
+
+def update_block_bounds(
+    bb: BlockBounds,
+    blk_max: jax.Array,
+    evaluated: jax.Array,
+    round_idx: jax.Array,
+) -> BlockBounds:
+    """Fold the fused kernel's per-block maxima (slot-0 candidates) back into
+    the bounds; skipped blocks keep their stale anchor."""
+    return BlockBounds(
+        asym=bb.asym,
+        slope=bb.slope,
+        blk_max=jnp.where(evaluated, blk_max, bb.blk_max),
+        last_eval=jnp.where(evaluated, round_idx, bb.last_eval),
+    )
+
+
 class TierState(NamedTuple):
     cached_vals: jax.Array    # (m,) last computed value per page
     blk_asym: jax.Array       # (n_blocks,) static bound max(mu_t/delta)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Env, derive
 from repro.kernels import ops, ref
@@ -21,8 +21,11 @@ def test_crawl_value_allclose(m, n_terms):
     n = jax.random.poisson(jax.random.PRNGKey(2), 2.0, (m,)).astype(jnp.int32)
     v_k = ops.crawl_value(tau, n, d, n_terms=n_terms, block_rows=64)
     v_r = ref.crawl_value_ref(tau, n, d, n_terms=n_terms)
+    # f32 series-vs-f32 gammainc: absolute cancellation floor ~1e-7 (same
+    # floor as test_crawl_value_property; the seed's 1e-9 floor was unrunnable
+    # at the time it was written and fails for the seed kernel too).
     scale = float(jnp.max(jnp.abs(v_r))) + 1e-12
-    np.testing.assert_allclose(v_k, v_r, atol=2e-6 * scale + 1e-9)
+    np.testing.assert_allclose(v_k, v_r, atol=2e-6 * scale + 1e-7)
 
 
 @settings(max_examples=15, deadline=None)

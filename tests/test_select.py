@@ -1,0 +1,225 @@
+"""Fused select pipeline: exactness vs dense top-k, tiered skip semantics,
+oracle accuracy, and the candidate-overflow fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Env, derive
+from repro.kernels import layout, ops, ref, select
+from repro.kernels.layout import LANES
+from repro.sim import uniform_instance
+
+
+def _packed(key, m, block_rows=8, n_terms=8, tau_max=20.0):
+    env = uniform_instance(key, m)
+    d = derive(env)
+    shard = layout.pack_shard(d, n_terms=n_terms, block_rows=block_rows)
+    tau = jax.random.uniform(jax.random.fold_in(key, 1), (m,), maxval=tau_max)
+    n = jax.random.poisson(jax.random.fold_in(key, 2), 2.0, (m,)).astype(jnp.int32)
+    tau_pad, n_pad = layout.pad_state(tau, n, shard.m_pad)
+    return d, shard, tau_pad, n_pad
+
+
+def _dense_topk(tau_pad, n_pad, shard, k):
+    vals, _ = ops.crawl_value_packed(tau_pad, n_pad, shard.env,
+                                     n_terms=shard.n_terms)
+    return jax.lax.top_k(vals, k)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("m,k", [(5000, 16), (40_000, 128)])
+def test_fused_matches_dense_topk(impl, m, k):
+    d, shard, tau_pad, n_pad = _packed(jax.random.PRNGKey(m + k), m)
+    dv, di = _dense_topk(tau_pad, n_pad, shard, k)
+    sel = select.fused_select(tau_pad, n_pad, shard, k, impl=impl)
+    np.testing.assert_array_equal(np.asarray(sel.ids), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(sel.values), np.asarray(dv))
+
+
+def test_fused_exact_across_warm_rounds():
+    """Threshold warm-start + static asymptote bounds: selection stays
+    bit-identical to dense top-k every round while blocks get skipped."""
+    m, k = 30_000, 32
+    env = uniform_instance(jax.random.PRNGKey(7), m)
+    # Value-correlated blocks (the paper's tiers): sort by asymptote.
+    order = jnp.argsort(-(env.mu / env.delta))
+    d = derive(jax.tree.map(lambda x: x[order], env))
+    shard = layout.pack_shard(d, n_terms=8, block_rows=8)
+    bounds = layout.asym_block_bounds(shard.env)
+    tau = jax.random.uniform(jax.random.PRNGKey(8), (m,), maxval=10.0)
+    tau_pad, n_pad = layout.pad_state(tau, jnp.zeros((m,), jnp.int32),
+                                      shard.m_pad)
+    thresh = -jnp.inf
+    fracs = []
+    for _ in range(10):
+        dv, di = _dense_topk(tau_pad, n_pad, shard, k)
+        sel = select.fused_select(tau_pad, n_pad, shard, k, thresh=thresh,
+                                  bounds=bounds, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(sel.ids), np.asarray(di))
+        fracs.append(float(sel.frac_active))
+        thresh = sel.values[-1] * 0.9
+        tau_pad = tau_pad.at[sel.ids].set(0.0) + 0.05
+    assert min(fracs[2:]) < 1.0  # tiering actually skipped blocks
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_skipped_blocks_emit_neg_inf_and_never_win(impl):
+    block_rows = 8
+    bp = block_rows * LANES
+    m = 8 * bp
+    k = 16
+    d, shard, tau_pad, n_pad = _packed(jax.random.PRNGKey(3), m,
+                                       block_rows=block_rows)
+    # Force-skip odd blocks; candidates from them must be -inf and selection
+    # must come from even blocks only.
+    bounds = jnp.where(jnp.arange(8) % 2 == 0, jnp.inf, -jnp.inf)
+    thresh = jnp.float32(0.0)
+    if impl == "pallas":
+        cand_v, cand_i = select._candidates_pallas(
+            tau_pad, n_pad, shard.env, bounds, thresh, 8,
+            select.DEFAULT_CAND_PER_LANE, interpret=True)
+    else:
+        cand_v, cand_i = select._candidates_jnp(
+            tau_pad, n_pad, shard.env, bounds, thresh, 8,
+            select.DEFAULT_CAND_PER_LANE)
+    assert bool(jnp.all(jnp.isneginf(cand_v[1::2])))
+    assert bool(jnp.all(jnp.isfinite(cand_v[0::2])))
+
+    sel = select.fused_select(tau_pad, n_pad, shard, k, thresh=thresh,
+                              bounds=bounds, impl=impl)
+    blocks = np.asarray(sel.ids) // bp
+    assert (blocks % 2 == 0).all()
+    assert bool(jnp.all(jnp.isneginf(sel.blk_max[1::2])))
+
+
+def test_active_blocks_match_gamma_oracle():
+    m = 20_000
+    d, shard, tau_pad, n_pad = _packed(jax.random.PRNGKey(11), m)
+    vals, _ = ops.crawl_value_packed(tau_pad, n_pad, shard.env)
+    v_ref = ref.crawl_value_ref(tau_pad[:m], n_pad[:m].astype(jnp.int32), d,
+                                method="gamma")
+    scale = float(jnp.max(jnp.abs(v_ref))) + 1e-12
+    np.testing.assert_allclose(np.asarray(vals[:m]), np.asarray(v_ref),
+                               atol=1e-5 * scale)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_candidate_overflow_falls_back_to_exact_dense(impl):
+    """Pile the global top-k into a single lane column so the per-lane
+    candidate buffer must overflow; the fused path must detect it and return
+    the exact dense selection."""
+    block_rows = 8
+    bp = block_rows * LANES
+    m = 4 * bp
+    k = 16
+    cand_per_lane = 2
+    # One lane column (lane 0 of block 0) holds 3*cand_per_lane winners.
+    mu = jnp.ones((m,)) * 1e-3
+    hot = jnp.arange(3 * cand_per_lane) * LANES  # lane-0 rows
+    mu = mu.at[hot].set(100.0)
+    env = Env(delta=jnp.full((m,), 0.5), mu=mu, lam=jnp.full((m,), 0.5),
+              nu=jnp.full((m,), 0.3))
+    d = derive(env)
+    shard = layout.pack_shard(d, n_terms=8, block_rows=block_rows)
+    tau = jnp.full((m,), 5.0)
+    tau_pad, n_pad = layout.pad_state(tau, jnp.zeros((m,), jnp.int32),
+                                      shard.m_pad)
+    dv, di = _dense_topk(tau_pad, n_pad, shard, k)
+    sel = select.fused_select(tau_pad, n_pad, shard, k, impl=impl,
+                              cand_per_lane=cand_per_lane)
+    assert bool(sel.fell_back)
+    np.testing.assert_array_equal(np.asarray(sel.ids), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(sel.values), np.asarray(dv))
+
+
+def test_pallas_and_jnp_candidates_agree():
+    m = 10_000
+    d, shard, tau_pad, n_pad = _packed(jax.random.PRNGKey(5), m)
+    nb = shard.n_blocks
+    bounds = jnp.full((nb,), jnp.inf, jnp.float32)
+    thresh = jnp.float32(-jnp.inf)
+    cv_j, ci_j = select._candidates_jnp(tau_pad, n_pad, shard.env, bounds,
+                                        thresh, 8, 3)
+    cv_p, ci_p = select._candidates_pallas(tau_pad, n_pad, shard.env, bounds,
+                                           thresh, 8, 3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(cv_j), np.asarray(cv_p))
+    np.testing.assert_array_equal(np.asarray(ci_j), np.asarray(ci_p))
+
+
+def test_sharded_fused_step_matches_dense():
+    from repro.sched.distributed import ShardedSchedState, sharded_crawl_step
+
+    mesh = jax.make_mesh((1,), ("data",))
+    block_rows = 8
+    m = 16 * block_rows * LANES
+    k = 16
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    d = derive(env)
+    shard = layout.pack_shard(d, n_terms=8, block_rows=block_rows)
+    bounds = layout.asym_block_bounds(shard.env)
+    st = ShardedSchedState(
+        tau_elap=jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=10.0),
+        n_cis=jnp.zeros((m,), jnp.int32),
+        crawl_clock=jnp.int32(0),
+    )
+    zero = jnp.zeros((m,), jnp.int32)
+    thresh = jnp.float32(-jnp.inf)
+    stf = std = st
+    for _ in range(4):
+        stf, (gf, vf) = sharded_crawl_step(
+            stf, zero, None, None, mesh, k, 0.05,
+            env_planes=shard.env, thresh=thresh, bounds=bounds)
+        std, (gd, vd) = sharded_crawl_step(std, zero, d, None, mesh, k, 0.05)
+        assert set(map(int, gf)) == set(map(int, gd))
+        thresh = vf[k - 1] * 0.9
+
+
+def test_fused_service_multidevice_subprocess():
+    """Fused service on 4 fake host devices with a non-aligned page count:
+    padding must round the block count up to a shard multiple (regression:
+    the fused shard_map asserts n_blocks % n_shards == 0)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from repro.sched.service import CrawlScheduler
+        from repro.sim import uniform_instance
+        mesh = jax.make_mesh((4,), ("data",))
+        m = 3000  # pads to 3 blocks of 1024 -> must round up to 4
+        env = uniform_instance(jax.random.PRNGKey(0), m)
+        s = CrawlScheduler(env, mesh, bandwidth=16.0, use_fused=True,
+                           block_rows=8)
+        ids, vals = s.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+        assert ids.shape == (16,) and int(ids.max()) < m, ids
+        print("FUSED_MULTIDEV_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       env=env, timeout=300)
+    assert "FUSED_MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_fused_service_roundtrip():
+    from repro.sched.service import CrawlScheduler
+
+    mesh = jax.make_mesh((1,), ("data",))
+    m = 20_000  # not block-aligned: service pads internally
+    env = uniform_instance(jax.random.PRNGKey(3), m)
+    s = CrawlScheduler(env, mesh, bandwidth=32.0, use_fused=True, block_rows=8)
+    s_tab = CrawlScheduler(env, mesh, bandwidth=32.0, table_grid=None)
+    for _ in range(3):
+        ids_f, _ = s.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+        ids_t, _ = s_tab.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+        assert ids_f.shape == (32,)
+        assert int(jnp.max(ids_f)) < m  # padding never selected
+        assert set(map(int, ids_f)) == set(map(int, ids_t))
+    sd = s.state_dict()
+    s.load_state_dict(jax.device_get(sd))
