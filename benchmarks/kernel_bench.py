@@ -65,23 +65,76 @@ def kernel_bench():
     err_k = float(jnp.max(jnp.abs(vk - ref[:mk])))
     emit("kernel/pallas_interpret", us_k, f"m={mk};max_err={err_k:.2e}")
 
+    refresh_repack_bench()
 
-def _fused_round_loop(step_fn, state, k, n_rounds, hysteresis=0.9):
-    """Run fused rounds threading the warm-start threshold; returns
-    (final_state, final_thresh, seconds_per_round)."""
-    thresh = jnp.float32(-jnp.inf)
-    # warm-up (compile + seed the threshold)
-    state, (_, v) = step_fn(state, thresh)
-    thresh = v[k - 1] * hysteresis
-    state, (_, v) = step_fn(state, thresh)
-    thresh = v[k - 1] * hysteresis
+
+def refresh_repack_bench():
+    """Block-granular parameter refresh (`CrawlScheduler.update_pages`) vs a
+    full `pack_shard`: scatter the touched plane columns + refresh only the
+    touched blocks' bounds, with the packed tensor donated (in-place)."""
+    import numpy as np
+    from repro.kernels import layout
+
+    m = prof(1 << 20, 1 << 22)
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    d = derive(env)
+    shard = layout.pack_shard(d)
+    n_upd = m // 100
+    ids = jnp.asarray(
+        np.sort(np.random.default_rng(0).choice(m, n_upd, replace=False)),
+        jnp.int32,
+    )
+    d_rows = jax.tree.map(lambda x: x[ids], d)
+    blk = jnp.asarray(np.unique(np.asarray(ids) // shard.block_pages),
+                      jnp.int32)
+    bounds = layout.asym_block_bounds(shard.env)
+
+    # Full repack baseline: d passed as a real argument (a closed-over d
+    # would constant-fold the entire pack at trace time).
+    pack = jax.jit(lambda dd: layout.pack_shard(dd).env)
+    _, us_full = timed(pack, d, reps=prof(2, 3))
+
+    repack = jax.jit(
+        lambda e, b, i, dr, bl: (
+            lambda e2: (e2, layout.refresh_block_bounds(e2, b, bl))
+        )(layout.repack_pages(e, i, dr)),
+        donate_argnums=(0, 1),
+    )
+    e, b = jnp.copy(shard.env), jnp.copy(bounds)
+    e, b = repack(e, b, ids, d_rows, blk)  # compile
+    p0 = e.unsafe_buffer_pointer()
+    jax.block_until_ready(e)
+    import time as _time
+    reps = prof(10, 20)
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        e, b = repack(e, b, ids, d_rows, blk)
+    jax.block_until_ready(e)
+    us_part = (_time.perf_counter() - t0) / reps * 1e6
+    # No-copy accounting: the donated packed tensor must alias through.
+    aliased = e.unsafe_buffer_pointer() == p0
+    assert aliased, "repack copied the donated env planes"
+    emit(
+        "sched/refresh_repack", us_part,
+        f"m={m};upd_frac=0.01;blocks_touched={blk.shape[0]}/{shard.n_blocks};"
+        f"speedup_vs_full_pack={us_full / us_part:.1f}x;"
+        f"bytes_per_update={layout.bytes_per_update(shard.n_terms)};"
+        f"donated_alias={int(aliased)}",
+    )
+
+
+def _fused_round_loop(sched, zero, n_rounds):
+    """Run donated backend rounds (the warm-start threshold is carried inside
+    the RoundState); returns seconds_per_round."""
+    # warm-up: compile + seed the per-shard thresholds
+    sched.ingest_and_schedule(zero)
+    _, v = sched.ingest_and_schedule(zero)
     jax.block_until_ready(v)
     t0 = time.perf_counter()
     for _ in range(n_rounds):
-        state, (_, v) = step_fn(state, thresh)
-        thresh = v[k - 1] * hysteresis
+        _, v = sched.ingest_and_schedule(zero)
     jax.block_until_ready(v)
-    return state, thresh, (time.perf_counter() - t0) / n_rounds
+    return (time.perf_counter() - t0) / n_rounds
 
 
 def sched_bench():
@@ -142,26 +195,33 @@ def sched_bench():
          f"m={mf};k={k};pages_per_s={mf/(us_seed/1e6):.3e};"
          f"hbm_bytes_per_page={8*4 + 4 + 4}")
 
-    # Fused pipeline, steady state (warm threshold + static asym bounds).
-    def fused_step(st, thresh):
-        return sharded_crawl_step(
-            st, zero, None, None, mesh, k, 0.01,
-            env_planes=shard.env, thresh=thresh, bounds=bounds)
+    # Fused pipeline via the backend API: donated RoundState, per-shard
+    # threshold warm-start carried inside the state, static asym bounds.
+    import dataclasses
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
 
+    sched = CrawlScheduler(env, mesh, bandwidth=float(k), round_period=1.0,
+                           backend=be.FusedBackend())
+    sched.round = dataclasses.replace(
+        sched.round,
+        tau_elap=jnp.copy(state.tau_elap), n_cis=jnp.copy(state.n_cis),
+    )
+    p_env = sched.round.backend.env_planes.unsafe_buffer_pointer()
     n_rounds = prof(6, 10)
-    fstate, fthresh, sec = _fused_round_loop(fused_step, state, k, n_rounds)
-    us_fused = sec * 1e6
-    # Steady-state active fraction + fallback flag (instrumented pass on the
-    # final timed state/threshold).
-    sel = select.fused_select(fstate.tau_elap,
-                              fstate.n_cis.astype(jnp.float32), shard, k,
-                              thresh=fthresh, bounds=bounds)
-    frac = float(sel.frac_active)
-    bpp = layout.bytes_per_page(shard.n_terms)
+    us_fused = _fused_round_loop(sched, zero, n_rounds) * 1e6
+    # No-copy accounting (state-plane donation): across all timed rounds the
+    # packed env planes must alias the same donated buffer.
+    aliased = sched.round.backend.env_planes.unsafe_buffer_pointer() == p_env
+    assert aliased, "crawl_round copied the donated env planes"
+    frac = float(sched.round.backend.frac_active.mean())
+    fell = int(np.asarray(sched.round.backend.fell_back).any())
+    bpp = layout.bytes_per_page(sched.backend.n_terms)
     emit("sched/round_fused", us_fused,
          f"m={mf};k={k};pages_per_s={mf/(us_fused/1e6):.3e};"
          f"speedup={us_seed/us_fused:.2f}x;frac_active={frac:.3f};"
-         f"hbm_bytes_per_page={bpp*frac:.1f};fell_back={int(sel.fell_back)}")
+         f"hbm_bytes_per_page={bpp*frac:.1f};fell_back={fell};"
+         f"state_planes_donated_alias={int(aliased)}")
 
     # tiered selection: agreement + compute saved over a rolling horizon
     # (pages grouped into value tiers, as the paper's production system does)

@@ -1,6 +1,7 @@
-"""Production-shaped scheduler demo: a million-page shard, sharded selection
-(fused single-pass select by default), tiered lazy evaluation, elastic
-bandwidth, checkpoint/restore.
+"""Production-shaped scheduler demo: a million-page shard, pluggable
+selection backends (fused single-pass select by default), decentralized
+parameter refresh + the closed crawl->estimate->refresh loop, tiered lazy
+evaluation, elastic bandwidth, checkpoint/restore with warm-start state.
 
     PYTHONPATH=src python examples/crawl_at_scale.py [--pages 1048576]
 """
@@ -11,11 +12,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import derive, tables
+from repro.core import tables
+from repro.sched import backends as be
 from repro.sched.service import CrawlScheduler
 from repro.sched.tiered import init_tiers, tiered_select
 from repro.sim import uniform_instance
 from repro import checkpoint as ckpt
+
+BACKENDS = {
+    "fused": lambda: be.FusedBackend(),
+    "table": lambda: be.TableBackend(table_grid=64),
+    "dense": lambda: be.DenseBackend(),
+    "kernel": lambda: be.KernelBackend(),
+}
 
 
 def main():
@@ -24,22 +33,19 @@ def main():
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--budget", type=float, default=4096.0)
     ap.add_argument("--ckpt", default="/tmp/repro_sched_ckpt")
-    ap.add_argument("--select", choices=("fused", "table"), default="fused",
-                    help="fused = packed single-pass select (exact); "
-                         "table = App. G exposure-table lookup")
+    ap.add_argument("--select", choices=sorted(BACKENDS), default="fused",
+                    help="selection backend (fused = packed single-pass "
+                         "select, exact; table = App. G exposure tables)")
     args = ap.parse_args()
 
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     env = uniform_instance(jax.random.PRNGKey(0), args.pages)
-    if args.select == "fused":
-        sched = CrawlScheduler(env, mesh, bandwidth=args.budget,
-                               table_grid=None, use_fused=True)
-    else:
-        sched = CrawlScheduler(env, mesh, bandwidth=args.budget, table_grid=64)
+    sched = CrawlScheduler(env, mesh, bandwidth=args.budget,
+                           backend=BACKENDS[args.select]())
     zero_cis = jnp.zeros((args.pages,), jnp.int32)
 
     print(f"pages={args.pages}, budget={args.budget}/round, "
-          f"devices={mesh.size}")
+          f"devices={mesh.size}, backend={args.select}")
     t0 = time.perf_counter()
     for r in range(args.rounds):
         ids, vals = sched.ingest_and_schedule(zero_cis)
@@ -53,11 +59,38 @@ def main():
     print(f"scheduler round: {dt*1e3:.1f} ms "
           f"({args.pages/dt/1e6:.1f}M pages/s/host)")
 
-    # fault tolerance: snapshot + restore the whole scheduler state
-    ckpt.save(args.ckpt, 1, sched.state_dict())
-    sd, step, _ = ckpt.restore_latest(args.ckpt, sched.state_dict())
+    # decentralized parameter refresh (paper Section 5.2): crawl logs say a
+    # cohort changes much more often than assumed -> re-estimate (App. E MLE)
+    # and repack only the touched blocks, while the service keeps running.
+    cohort = np.asarray(jax.device_get(ids))[: min(256, int(ids.shape[0]))]
+    rng = np.random.default_rng(0)
+    tau_log = rng.uniform(0.5, 2.0, (cohort.size, 200))
+    n_log = rng.poisson(1.5 * tau_log)
+    fresh = (rng.uniform(size=tau_log.shape) <
+             np.exp(-(0.4 * tau_log + 1.2 * n_log))).astype(np.float32)
+    t0 = time.perf_counter()
+    q = sched.ingest_crawl_results(cohort, jnp.asarray(tau_log),
+                                   jnp.asarray(n_log), jnp.asarray(fresh))
+    jax.block_until_ready(sched.round.backend)
+    print(f"crawl->estimate->refresh: {cohort.size} pages re-estimated "
+          f"(mean precision {float(q.precision.mean()):.2f}, mean Delta "
+          f"{float(q.delta.mean()):.2f}) in "
+          f"{(time.perf_counter()-t0)*1e3:.1f} ms (block-granular repack)")
+    sched.ingest_and_schedule(zero_cis)
+
+    # fault tolerance: snapshot + restore the whole scheduler state,
+    # including the backend warm-start state (per-shard thresholds, bounds).
+    ckpt.save(args.ckpt, 1, jax.device_get(sched.state_dict()))
+    sd, step, _ = ckpt.restore_latest(args.ckpt,
+                                      jax.device_get(sched.state_dict()))
     sched.load_state_dict(sd)
-    print(f"checkpoint roundtrip OK (step {step})")
+    ids, _ = sched.ingest_and_schedule(zero_cis)
+    if args.select == "fused":
+        frac = float(sched.round.backend.frac_active.mean())
+        print(f"checkpoint roundtrip OK (step {step}; first post-restore "
+              f"round evaluated {100*frac:.0f}% of blocks — warm start)")
+    else:
+        print(f"checkpoint roundtrip OK (step {step})")
 
     # tiered lazy evaluation (paper App. G)
     d = sched.d

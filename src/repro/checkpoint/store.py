@@ -82,8 +82,15 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int, tree_like):
-    """Restore into the structure of tree_like (shape-checked)."""
+def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
+    """Restore into the structure of tree_like (shape-checked).
+
+    strict=False matches leaves by manifest *path* instead of flat order:
+    paths missing from the checkpoint keep tree_like's current value (so a
+    state_dict that grew new fields — e.g. the scheduler's backend
+    warm-start state — still restores from old checkpoints), and checkpoint
+    paths absent from tree_like are ignored.
+    """
     proc = jax.process_index()
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(d, "manifest.json")) as f:
@@ -97,18 +104,26 @@ def restore(ckpt_dir: str, step: int, tree_like):
         if a.dtype == np.uint8 and dt != "uint8":
             a = a.view(np.dtype(dt)).reshape(shp)
         leaves.append(a)
-    ref_leaves, treedef = jax.tree.flatten(tree_like)
-    assert len(leaves) == len(ref_leaves), "checkpoint/tree mismatch"
+    if strict:
+        ref_leaves, treedef = jax.tree.flatten(tree_like)
+        assert len(leaves) == len(ref_leaves), "checkpoint/tree mismatch"
+        pairs = zip(leaves, ref_leaves)
+    else:
+        by_path = dict(zip(manifest["paths"], leaves))
+        ref_paths, ref_leaves, treedef = _flatten_with_paths(tree_like)
+        pairs = [(by_path.get(p, ref), ref)
+                 for p, ref in zip(ref_paths, ref_leaves)]
     out = []
-    for got, ref in zip(leaves, ref_leaves):
+    for got, ref in pairs:
+        got = np.asarray(jax.device_get(got))
         assert tuple(got.shape) == tuple(ref.shape), (got.shape, ref.shape)
         out.append(jnp.asarray(got, dtype=ref.dtype))
     return jax.tree.unflatten(treedef, out), manifest["extra"]
 
 
-def restore_latest(ckpt_dir: str, tree_like):
+def restore_latest(ckpt_dir: str, tree_like, strict: bool = True):
     step = latest_step(ckpt_dir)
     if step is None:
         return None, None, None
-    tree, extra = restore(ckpt_dir, step, tree_like)
+    tree, extra = restore(ckpt_dir, step, tree_like, strict=strict)
     return tree, step, extra

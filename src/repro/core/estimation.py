@@ -12,10 +12,15 @@ with gamma estimated from the raw CIS frequency.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.values import Env
+
+_EPS = 1e-12
 
 
 class CISQuality(NamedTuple):
@@ -96,3 +101,43 @@ def fit_mle(
     recall = signaled / jnp.maximum(delta, 1e-12)
     return CISQuality(alpha=a, b=b, gamma=gamma_hat, precision=precision,
                       recall=recall, delta=delta)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def fit_mle_pages(
+    tau: jax.Array,
+    n_cis: jax.Array,
+    fresh: jax.Array,
+    steps: int = 500,
+    lr: float = 0.05,
+) -> CISQuality:
+    """Batched crawl-log estimation: `fit_mle` vmapped over pages.
+
+    tau/n_cis/fresh: (n_pages, n_intervals) crawl-log arrays. The observed
+    CIS rate gamma_hat is estimated per page from the raw logs
+    (total signals / total observed time), exactly as a production pipeline
+    would. Returns a CISQuality of (n_pages,) arrays — feed it to
+    `quality_to_env` + `CrawlScheduler.update_pages` to close the paper's
+    crawl -> estimate -> refresh loop.
+    """
+    tau = jnp.atleast_2d(tau)
+    n_cis = jnp.atleast_2d(n_cis)
+    fresh = jnp.atleast_2d(fresh)
+    gamma_hat = n_cis.astype(jnp.float32).sum(-1) / jnp.maximum(
+        tau.astype(jnp.float32).sum(-1), _EPS)
+    fit = lambda t, n, f, g: fit_mle(t, n, f, g, steps=steps, lr=lr)
+    return jax.vmap(fit)(tau, n_cis, fresh, gamma_hat)
+
+
+def quality_to_env(q: CISQuality, mu: jax.Array) -> Env:
+    """Map estimated CIS quality back to the raw Env parameterization.
+
+    recall = lam (the fraction of changes that signal), and the false CIS
+    rate is the unexplained part of the observed signal rate:
+    nu = gamma * (1 - precision). Importance mu is supplied by the caller —
+    it comes from request logs, not crawl logs.
+    """
+    delta = jnp.maximum(q.delta, _EPS)
+    lam = jnp.clip(q.recall, 0.0, 1.0)
+    nu = jnp.maximum(q.gamma * (1.0 - q.precision), 0.0)
+    return Env(delta=delta, mu=jnp.asarray(mu), lam=lam, nu=nu)

@@ -52,6 +52,12 @@ rewrite of the packed tensor per round. The flat padded arrays reshape to
 (n_blocks, BLOCK_ROWS, 128) views for free; page p lives at block
 p // block_pages, row (p % block_pages) // 128, lane p % 128 — i.e. flat
 padded index == page id, padding at the tail.
+
+Parameter refresh is incremental: `repack_pages` scatters the refreshed
+pages' plane columns (the paper's decentralized per-page refresh — with the
+tensor donated the scatter is in place) and `refresh_block_bounds`
+recomputes the static bound for the touched blocks only. A full
+`pack_shard` is only ever paid at construction.
 """
 from __future__ import annotations
 
@@ -89,6 +95,13 @@ def bytes_per_page(n_terms: int) -> int:
     return 4 * (N_STATE + n_planes(n_terms))
 
 
+def bytes_per_update(n_terms: int) -> int:
+    """HBM bytes written per updated page by `repack_pages` (one plane column
+    scatter). Block-granular bound refresh adds O(block) reads per touched
+    block on top."""
+    return 4 * n_planes(n_terms)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PageShard:
@@ -114,13 +127,26 @@ class PageShard:
         return self.n_blocks * self.block_pages
 
 
-def _pad(x: jax.Array, m_pad: int, fill: float) -> jax.Array:
+def pad_to(
+    x: jax.Array, m_pad: int, fill: float = 0.0, dtype=jnp.float32
+) -> jax.Array:
+    """Pad a flat per-page array to the packed size. THE padding helper: every
+    feed/state/env pad in the scheduler routes through here (dtype=None keeps
+    the input dtype). Rejects inputs longer than the padded size."""
+    if dtype is not None:
+        x = x.astype(dtype)
     pad = m_pad - x.shape[0]
+    if pad < 0:
+        raise ValueError(
+            f"per-page array of length {x.shape[0]} exceeds the packed size "
+            f"{m_pad}; refusing to truncate"
+        )
     if pad == 0:
-        return x.astype(jnp.float32)
-    return jnp.concatenate(
-        [x.astype(jnp.float32), jnp.full((pad,), fill, jnp.float32)]
-    )
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+_pad = pad_to
 
 
 def padded_size(
@@ -135,28 +161,12 @@ def padded_size(
     return n_blocks * bp
 
 
-def pack_shard(
-    d: DerivedEnv,
-    n_terms: int = 8,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-) -> PageShard:
-    """Build the packed env planes from a derived environment.
+def _page_planes(delta, mu_t, nu, gamma, alpha, beta, valid, n_terms: int):
+    """The per-page plane math, shared by the full pack and the incremental
+    repack so updated pages are bit-identical to a from-scratch pack.
 
-    Pay once per parameter refresh. Padding pages (mu_t = 0, VALID = 0) score
-    -inf in the fused kernel and can never be selected.
+    All inputs f32 of one shape; returns the n_planes(n_terms) plane list.
     """
-    m = d.delta.shape[0]
-    m_pad = padded_size(m, block_rows)
-
-    # Padded raw fields; fills chosen so every derived plane is finite.
-    delta = _pad(d.delta, m_pad, 1.0)
-    mu_t = _pad(d.mu_t, m_pad, 0.0)
-    nu = _pad(d.nu, m_pad, 0.0)
-    gamma = _pad(d.gamma, m_pad, 0.0)
-    alpha = _pad(d.alpha, m_pad, 1.0)
-    beta = _pad(d.beta, m_pad, 0.0)
-    valid = _pad(jnp.ones((m,), jnp.float32), m_pad, 0.0)
-
     dn = jnp.maximum(delta + nu, _EPS)
     # coeff_i = nu^i / (delta+nu)^{i+1} in log space (stable at larger i),
     # mirroring core.values.w exactly so packed values match the oracle.
@@ -170,7 +180,7 @@ def pack_shard(
             coeff = jnp.exp(i * log_nu - (i + 1.0) * log_dn)
             ladder.append(jnp.where(nu <= 0.0, 0.0, coeff))
 
-    planes = [
+    return [
         mu_t,                                   # MU_T
         alpha,                                  # ALPHA
         jnp.minimum(beta, BIG),                 # BETA
@@ -180,11 +190,79 @@ def pack_shard(
         mu_t / jnp.maximum(delta, _EPS),        # V_INF
         valid,                                  # VALID
     ] + ladder
+
+
+def pack_shard(
+    d: DerivedEnv,
+    n_terms: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> PageShard:
+    """Build the packed env planes from a derived environment.
+
+    Pay once per *full* parameter refresh; per-page refreshes should go
+    through `repack_pages`, which touches only the updated plane columns.
+    Padding pages (mu_t = 0, VALID = 0) score -inf in the fused kernel and
+    can never be selected.
+    """
+    m = d.delta.shape[0]
+    m_pad = padded_size(m, block_rows)
+
+    # Padded raw fields; fills chosen so every derived plane is finite.
+    planes = _page_planes(
+        delta=pad_to(d.delta, m_pad, 1.0),
+        mu_t=pad_to(d.mu_t, m_pad, 0.0),
+        nu=pad_to(d.nu, m_pad, 0.0),
+        gamma=pad_to(d.gamma, m_pad, 0.0),
+        alpha=pad_to(d.alpha, m_pad, 1.0),
+        beta=pad_to(d.beta, m_pad, 0.0),
+        valid=pad_to(jnp.ones((m,), jnp.float32), m_pad, 0.0),
+        n_terms=n_terms,
+    )
     n_blocks = m_pad // (block_rows * LANES)
     env = jnp.stack(
         [p.reshape(n_blocks, block_rows, LANES) for p in planes], axis=1
     )
     return PageShard(env=env, m=m, n_terms=n_terms, block_rows=block_rows)
+
+
+def repack_pages(
+    env: jax.Array, page_ids: jax.Array, d_new: DerivedEnv
+) -> jax.Array:
+    """Scatter-update the packed planes of `page_ids` from their refreshed
+    derived parameters — the paper's decentralized parameter refresh.
+
+    d_new: DerivedEnv whose fields have shape (n_upd,) (derive the raw
+    updates with the *construction-time* mu_total so normalization stays
+    consistent with the untouched pages). Only the updated pages' plane
+    columns are written; with the env buffer donated (`backends.crawl_round`
+    / `backends.refresh_pages`) the scatter is in-place — O(n_upd * n_planes)
+    writes instead of the O(m * n_planes) of a full `pack_shard`.
+    """
+    n_blocks, np_, block_rows, lanes = env.shape
+    n_terms = np_ - N_ENV
+    ids = jnp.asarray(page_ids, jnp.int32)
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    planes = _page_planes(
+        delta=f(d_new.delta), mu_t=f(d_new.mu_t), nu=f(d_new.nu),
+        gamma=f(d_new.gamma), alpha=f(d_new.alpha), beta=f(d_new.beta),
+        valid=jnp.ones(ids.shape, jnp.float32), n_terms=n_terms,
+    )
+    cols = jnp.stack(planes, axis=-1)            # (n_upd, n_planes)
+    bp = block_rows * lanes
+    blk = ids // bp
+    row = (ids % bp) // lanes
+    lane = ids % lanes
+    return env.at[blk, :, row, lane].set(cols)
+
+
+def refresh_block_bounds(
+    env: jax.Array, bounds: jax.Array, block_ids: jax.Array
+) -> jax.Array:
+    """Recompute the static asymptote bound for the touched blocks only
+    (block-granular: O(touched * block_pages) reads, everything else keeps
+    its bound). Companion to `repack_pages`."""
+    new = env[block_ids, V_INF].max(axis=(1, 2))
+    return bounds.at[block_ids].set(new)
 
 
 def pad_state(

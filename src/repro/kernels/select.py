@@ -215,6 +215,7 @@ def fused_select_local(
     interpret: bool = True,
 ) -> FusedSelection:
     """Un-jitted core (safe inside shard_map). See `fused_select`."""
+    n_pad = n_pad.astype(jnp.float32)  # accept the scheduler's int32 counts
     if cand_per_lane is None:
         cand_per_lane = auto_cand_per_lane(k)
     n_blocks, _, block_rows, _ = env.shape

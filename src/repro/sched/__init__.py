@@ -1,5 +1,19 @@
-"""Production scheduler: sharded selection (dense / table / fused), tiering,
-elastic service."""
+"""Production scheduler: pluggable selection backends over one functional
+sharded RoundState (dense / table / kernel / fused), tiering, elastic
+service, decentralized parameter refresh."""
+from repro.sched.backends import (
+    BackendInit,
+    DenseBackend,
+    FusedBackend,
+    FusedState,
+    KernelBackend,
+    RoundState,
+    SelectionBackend,
+    TableBackend,
+    crawl_round,
+    init_round,
+    refresh_pages,
+)
 from repro.sched.distributed import (
     ShardedSchedState,
     make_sharded_env,
@@ -12,6 +26,7 @@ from repro.sched.tiered import (
     TierState,
     current_block_bounds,
     init_block_bounds,
+    refresh_block_params,
     tiered_select,
     update_block_bounds,
 )

@@ -1,0 +1,405 @@
+"""SelectionBackend protocol + the functional scheduling round.
+
+The scheduler API (paper Section 5.2) is organized around two pieces:
+
+  * a **backend** — a frozen, hashable config object implementing the
+    `SelectionBackend` protocol. It owns the selection strategy (how values
+    are evaluated and the top-k extracted) and builds/updates its own state:
+
+        DenseBackend   dense jnp series values (oracle-grade)
+        TableBackend   exposure-table lookup (App. G tier tables)
+        KernelBackend  dense Pallas value kernel + full top_k
+        FusedBackend   packed PageShard planes + single-pass candidate
+                       select (`kernels.select`), per-shard threshold
+                       warm-start, per-block bounds — the production path
+
+  * a **`RoundState`** — one functional, sharded pytree holding everything
+    that changes round to round: the page state (tau^ELAP, n_CIS, clock) and
+    the backend state (derived env / value table / packed env planes,
+    per-shard warm-start thresholds, per-block bounds). Because it is a plain
+    pytree it checkpoints, donates, and moves through jit/shard_map
+    boundaries as-is.
+
+One jitted `crawl_round(backend, state, new_cis, ...)` replaces the old
+flag-dispatched `sharded_crawl_step` (which remains as a legacy shim). The
+round **donates** the state: tau/n_CIS and the fused threshold/bound planes
+are updated in place, and the packed env planes — unchanged within a round —
+alias straight through, so no state plane is copied at production sizes.
+
+Per-shard threshold warm-start (resolves the ROADMAP "sharded
+bound/threshold exchange" item): `FusedState.thresh` holds one threshold per
+shard, sharded alongside the pages, and each shard compares *its own*
+previous k-th candidate value against its local block bounds. Carrying a
+single global k-th value would force low-value shards into the dense
+fallback every round (their local k-th sits far below the global one);
+per-shard thresholds make warm-start sound — and cheap — on any mesh, while
+selection stays provably identical to dense top-k via the exact-recovery
+fallback in `kernels.select`.
+
+Parameter refresh (the paper's decentralized per-page refresh) is
+`refresh_pages(backend, bstate, page_ids, env_new, ...)`: each backend
+scatter-updates only the touched rows of its state (fused: plane columns +
+touched-block bounds via `layout.repack_pages`), again with the state buffer
+donated. The global importance normalizer mu_total is frozen at construction
+— greedy selection is invariant to a common scale factor, so per-page
+updates never need a global renormalization pass (Section 5.2's
+decentralization argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import tables
+from repro.core.values import DerivedEnv, Env, derive
+from repro.sched.distributed import (
+    ShardedSchedState,
+    _global_topk,
+    _shard_map,
+    sharded_select,
+)
+
+# Threshold warm-start relaxation: the next round's k-th value can sit below
+# the current one (winners reset to ~0 value), so the carried threshold is
+# relaxed; a too-aggressive threshold only costs a dense fallback, never
+# exactness.
+DEFAULT_HYSTERESIS = 0.9
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundState:
+    """Everything that changes round to round, as one sharded pytree.
+
+    tau_elap/n_cis are sharded over all mesh axes; `backend` is the
+    backend-owned state pytree (see each backend's `init`). Treat values as
+    immutable: `crawl_round` donates the whole tree, so the previous
+    RoundState's buffers are invalid once the next round runs.
+    """
+
+    tau_elap: jax.Array     # (m_state,) f32
+    n_cis: jax.Array        # (m_state,) i32
+    crawl_clock: jax.Array  # () i32 round counter
+    backend: Any
+
+
+class BackendInit(NamedTuple):
+    """What a backend hands back from `init`: the (padded) state size, its
+    state pytree, and host-side conveniences (derived env, value table)."""
+
+    m_state: int
+    state: Any
+    d: DerivedEnv
+    table: tables.ValueTable | None
+
+
+class DenseState(NamedTuple):
+    d: DerivedEnv
+
+
+class TableState(NamedTuple):
+    d: DerivedEnv
+    table: tables.ValueTable
+
+
+class FusedState(NamedTuple):
+    env_planes: jax.Array   # (n_blocks, n_planes, block_rows, LANES) f32
+    thresh: jax.Array       # (n_shards,) per-SHARD warm-start threshold
+    bounds: jax.Array       # (n_blocks,) optimistic per-block bounds
+    frac_active: jax.Array  # (n_shards,) diagnostics: blocks evaluated
+    fell_back: jax.Array    # (n_shards,) diagnostics: dense recovery taken
+
+
+def _pspec(mesh: Mesh) -> P:
+    return P(tuple(mesh.axis_names))
+
+
+def _put(x, mesh: Mesh, spec: P):
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def _own(env: Env) -> Env:
+    """Defensive copy of caller-owned env arrays. derive() may alias its
+    inputs, and round donation would otherwise invalidate the caller's
+    arrays the first time the state is donated."""
+    return Env(*(jnp.copy(jnp.asarray(f)) for f in env))
+
+
+def _scatter_derived(d: DerivedEnv, ids: jax.Array, d_new: DerivedEnv) -> DerivedEnv:
+    return DerivedEnv(*[f.at[ids].set(n.astype(f.dtype)) for f, n in zip(d, d_new)])
+
+
+@runtime_checkable
+class SelectionBackend(Protocol):
+    """Frozen config + strategy object. Implementations must be hashable
+    (they are static jit arguments) and keep all array state in the pytree
+    returned by `init` — the protocol is purely functional."""
+
+    def init(self, env: Env, mesh: Mesh) -> BackendInit:
+        """Build the backend state for a raw environment on a mesh."""
+        ...
+
+    def select(self, state: RoundState, mesh: Mesh, k: int):
+        """Global top-k. Returns (page_ids (k,) replicated, values (k,)
+        replicated, crawl mask (m_state,) sharded, new backend state)."""
+        ...
+
+    def update_pages(self, bstate, page_ids: jax.Array, d_new: DerivedEnv,
+                     block_ids: jax.Array | None):
+        """Scatter the refreshed derived parameters of `page_ids` into the
+        backend state (shard-local / block-granular where the layout allows);
+        `block_ids` are the touched blocks (fused layout only)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBackend:
+    """Dense jnp series values — oracle-grade reference selection."""
+
+    n_terms: int = 8
+    k_local: int | None = None
+    use_kernel: bool = False  # route values through the dense Pallas kernel
+
+    def init(self, env: Env, mesh: Mesh) -> BackendInit:
+        env = _put(_own(env), mesh, _pspec(mesh))
+        d = derive(env, mu_total=jnp.sum(env.mu))
+        return BackendInit(env.m, DenseState(d=d), d, None)
+
+    def select(self, state: RoundState, mesh: Mesh, k: int):
+        st = ShardedSchedState(state.tau_elap, state.n_cis, state.crawl_clock)
+        top_g, top_v, mask = sharded_select(
+            st, state.backend.d, None, mesh, k, self.n_terms,
+            self.use_kernel, self.k_local,
+        )
+        return top_g, top_v, mask, state.backend
+
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+        return bstate._replace(d=_scatter_derived(bstate.d, page_ids, d_new))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend(DenseBackend):
+    """Dense Pallas value kernel (values to HBM) + full top_k second pass."""
+
+    use_kernel: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class TableBackend:
+    """Exposure-table lookup (App. G tier tables): V_NCIS(u) interpolated
+    from a per-page grid built once per parameter refresh."""
+
+    n_terms: int = 8
+    table_grid: int = 128
+    u_max: float = 40.0
+    k_local: int | None = None
+
+    def init(self, env: Env, mesh: Mesh) -> BackendInit:
+        env = _put(_own(env), mesh, _pspec(mesh))
+        d = derive(env, mu_total=jnp.sum(env.mu))
+        table = tables.build_ncis_table(d, n_terms=self.n_terms,
+                                        n_grid=self.table_grid,
+                                        u_max=self.u_max)
+        return BackendInit(env.m, TableState(d=d, table=table), d, table)
+
+    def select(self, state: RoundState, mesh: Mesh, k: int):
+        st = ShardedSchedState(state.tau_elap, state.n_cis, state.crawl_clock)
+        top_g, top_v, mask = sharded_select(
+            st, state.backend.d, state.backend.table, mesh, k, self.n_terms,
+            False, self.k_local,
+        )
+        return top_g, top_v, mask, state.backend
+
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+        d = _scatter_derived(bstate.d, page_ids, d_new)
+        rows = tables.build_ncis_table(
+            d_new, n_terms=self.n_terms, n_grid=bstate.table.vals.shape[-1],
+            u_max=self.u_max,
+        )
+        table = bstate.table._replace(
+            vals=bstate.table.vals.at[page_ids].set(rows.vals)
+        )
+        return bstate._replace(d=d, table=table)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedBackend:
+    """Packed planes + single-pass candidate select — the production path.
+
+    warm_start enables the per-shard threshold skip (sound on any mesh size:
+    each shard's threshold is its own previous k-th candidate value, relaxed
+    by `hysteresis`). Selection remains exactly dense top-k regardless — the
+    candidate-overflow / over-aggressive-threshold fallback in
+    `kernels.select` guarantees it.
+    """
+
+    n_terms: int = 8
+    block_rows: int | None = None
+    k_local: int | None = None
+    hysteresis: float = DEFAULT_HYSTERESIS
+    warm_start: bool = True
+
+    def init(self, env: Env, mesh: Mesh) -> BackendInit:
+        from repro.kernels import layout
+
+        block_rows = self.block_rows or layout.DEFAULT_BLOCK_ROWS
+        m = env.m
+        m_state = layout.padded_size(m, block_rows, n_shards=mesh.size)
+        # Pad the raw env so derived state/env sizes agree; padding pages
+        # (mu = 0) normalize away and score -inf in the fused kernel.
+        if m_state != m:
+            env = Env(
+                delta=layout.pad_to(env.delta, m_state, 1.0),
+                mu=layout.pad_to(env.mu, m_state, 0.0),
+                lam=layout.pad_to(env.lam, m_state, 0.0),
+                nu=layout.pad_to(env.nu, m_state, 0.0),
+            )
+        env = _put(env, mesh, _pspec(mesh))
+        d = derive(env, mu_total=jnp.sum(env.mu))
+        shard = layout.pack_shard(d, n_terms=self.n_terms,
+                                  block_rows=block_rows)
+        n_shards = mesh.size
+        pspec = _pspec(mesh)
+        neg_inf = jnp.full((n_shards,), -jnp.inf, jnp.float32)
+        bstate = FusedState(
+            env_planes=_put(shard.env, mesh, P(tuple(mesh.axis_names),
+                                               None, None, None)),
+            thresh=_put(neg_inf, mesh, pspec),
+            bounds=_put(layout.asym_block_bounds(shard.env), mesh, pspec),
+            frac_active=_put(jnp.ones((n_shards,), jnp.float32), mesh, pspec),
+            fell_back=_put(jnp.zeros((n_shards,), bool), mesh, pspec),
+        )
+        return BackendInit(m_state, bstate, d, None)
+
+    def select(self, state: RoundState, mesh: Mesh, k: int):
+        from repro.kernels import select as ksel
+
+        axes = tuple(mesh.axis_names)
+        pspec = P(axes)
+        bst: FusedState = state.backend
+        n_blocks, _, block_rows, lanes = bst.env_planes.shape
+        m = state.tau_elap.shape[0]
+        n_shards = mesh.size
+        assert m == n_blocks * block_rows * lanes, (
+            "fused path needs block-aligned padded state "
+            f"(m={m}, planes={bst.env_planes.shape})"
+        )
+        assert n_blocks % n_shards == 0, (
+            "fused path needs n_blocks divisible by the shard count"
+        )
+        k_loc = min(self.k_local or k, k)
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        hyst = jnp.float32(self.hysteresis)
+
+        def shard_fn(tau_elap, n_cis, env_shard, bounds_shard, thresh_shard):
+            # thresh_shard is this shard's OWN slice: the local k-th candidate
+            # value of the previous round — sound to compare against local
+            # block bounds (the ROADMAP per-shard threshold exchange).
+            thresh = (thresh_shard[0] if self.warm_start
+                      else jnp.float32(-jnp.inf))
+            sel = ksel.fused_select_local(
+                tau_elap, n_cis, env_shard, k_loc, thresh, bounds_shard,
+                n_terms=self.n_terms, impl=impl, interpret=impl != "pallas",
+            )
+            m_local = tau_elap.shape[0]
+            top_g, top_v, mask = _global_topk(sel.values, sel.ids, axes,
+                                              m_local, k)
+            new_thresh = (sel.values[k_loc - 1] * hyst).reshape(1)
+            return (top_g, top_v, mask, new_thresh,
+                    sel.frac_active.reshape(1), sel.fell_back.reshape(1))
+
+        fn = _shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(pspec, pspec, P(axes, None, None, None), pspec, pspec),
+            out_specs=(P(), P(), pspec, pspec, pspec, pspec),
+        )
+        top_g, top_v, mask, thresh, frac, fb = fn(
+            state.tau_elap, state.n_cis, bst.env_planes, bst.bounds,
+            bst.thresh,
+        )
+        new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb)
+        return top_g, top_v, mask, new_bst
+
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+        from repro.kernels import layout
+
+        env_planes = layout.repack_pages(bstate.env_planes, page_ids, d_new)
+        assert block_ids is not None, (
+            "fused update_pages needs the touched block ids "
+            "(page_ids // block_pages, deduplicated)"
+        )
+        bounds = layout.refresh_block_bounds(env_planes, bstate.bounds,
+                                             block_ids)
+        return bstate._replace(env_planes=env_planes, bounds=bounds)
+
+
+def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
+    """Build the initial RoundState (pages 'just crawled') for a backend.
+
+    Returns (round_state, BackendInit) — the init carries the padded state
+    size and host conveniences (derived env, table)."""
+    binit = backend.init(env, mesh)
+    pspec = _pspec(mesh)
+    return RoundState(
+        tau_elap=_put(jnp.zeros((binit.m_state,), jnp.float32), mesh, pspec),
+        n_cis=_put(jnp.zeros((binit.m_state,), jnp.int32), mesh, pspec),
+        crawl_clock=jnp.int32(0),
+        backend=binit.state,
+    ), binit
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "mesh", "k", "dt"),
+    donate_argnames=("state",),
+)
+def crawl_round(
+    backend: SelectionBackend,
+    state: RoundState,
+    new_cis: jax.Array,
+    *,
+    mesh: Mesh,
+    k: int,
+    dt: float,
+):
+    """One full scheduling round: select k pages globally, reset them,
+    advance time, ingest the externally-fed CIS counts.
+
+    Returns (new_round_state, (page_ids, values)). `state` is DONATED: its
+    tau/n_CIS (and fused threshold/bound) buffers are updated in place and
+    the packed env planes alias through untouched — no state plane is copied.
+    Do not reuse the argument after the call; `new_cis` is not donated (feed
+    buffers may be reused by the caller).
+    """
+    top_g, top_v, mask, new_b = backend.select(state, mesh, k)
+    tau = jnp.where(mask, 0.0, state.tau_elap) + dt
+    n = jnp.where(mask, 0, state.n_cis) + new_cis
+    new_state = RoundState(
+        tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + 1,
+        backend=new_b,
+    )
+    return new_state, (top_g, top_v)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend",),
+    donate_argnames=("bstate",),
+)
+def refresh_pages(
+    backend: SelectionBackend,
+    bstate,
+    page_ids: jax.Array,
+    d_new: DerivedEnv,
+    block_ids: jax.Array | None = None,
+):
+    """Jitted decentralized parameter refresh: scatter `d_new` (derived with
+    the frozen construction-time mu_total) into the donated backend state.
+    Fused backends repack only the touched plane columns + block bounds."""
+    return backend.update_pages(bstate, page_ids, d_new, block_ids)

@@ -30,6 +30,13 @@ order:
     the shard count.
 
 The same step is used by the multi-pod dry-run at 2^30 pages on 512 devices.
+
+NOTE: `sharded_crawl_step`'s flag-dispatched signature is the *legacy* entry
+point, kept for the dry-run tooling and existing callers. New code should go
+through `sched.backends`: a `SelectionBackend` object + the donated, jitted
+`crawl_round` over a functional `RoundState` (which also carries per-shard
+warm-start thresholds — the `thresh=` scalar here is single-shard-sound
+only; see `backends.FusedBackend`).
 """
 from __future__ import annotations
 
@@ -148,11 +155,12 @@ def sharded_select(
     env_planes/thresh/bounds: fused-select path (module docstring). The local
     selection it produces is *exactly* `top_k(values, k_local)` — the
     overflow fallback in `kernels.select` guarantees it — so the global
-    result is identical to the dense paths. NOTE: `thresh` is compared
-    against each shard's *local* k-th candidate; feeding the global k-th on
-    a multi-shard mesh stays exact but drives low-value shards into the
-    dense fallback every round — pass per-shard-sound thresholds (or None)
-    there until the per-shard threshold exchange lands (ROADMAP).
+    result is identical to the dense paths. NOTE: `thresh` here is a single
+    replicated scalar compared against each shard's *local* k-th candidate;
+    feeding the global k-th on a multi-shard mesh stays exact but drives
+    low-value shards into the dense fallback every round. The per-shard
+    threshold exchange lives in `sched.backends.FusedBackend` — use that for
+    warm-started multi-shard rounds; pass None here.
     """
     axes = tuple(mesh.axis_names)
     pspec = P(axes)
@@ -181,9 +189,8 @@ def sharded_select(
 
         def shard_fn(tau_elap, n_cis, env_shard, bounds_shard, thresh_r):
             sel = ksel.fused_select_local(
-                tau_elap, n_cis.astype(jnp.float32), env_shard, k_loc,
-                thresh_r, bounds_shard, n_terms=n_terms, impl=impl,
-                interpret=impl != "pallas",
+                tau_elap, n_cis, env_shard, k_loc, thresh_r, bounds_shard,
+                n_terms=n_terms, impl=impl, interpret=impl != "pallas",
             )
             m_local = tau_elap.shape[0]
             return _global_topk(sel.values, sel.ids, axes, m_local, k)

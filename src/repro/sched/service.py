@@ -1,43 +1,65 @@
 """CrawlScheduler — the deployable service wrapper.
 
-Holds the sharded page state, executes budgeted scheduling rounds, ingests CIS
-feeds, and exposes the two production properties the paper highlights:
+Holds one functional `RoundState` (page state + selection-backend state,
+see `sched.backends`), executes budgeted scheduling rounds, ingests CIS
+feeds and crawl results, and exposes the production properties the paper
+highlights:
 
   * **elastic bandwidth** (App. D): `set_bandwidth` changes the per-round
     budget k (or round period) with *zero* recomputation — the greedy rule is
     self-adapting;
-  * **decentralized parameter refresh**: per-page (Delta, mu, lam, nu) updates
-    touch only the owning shard (value tables are rebuilt shard-locally).
+  * **decentralized parameter refresh** (§5.2): `update_pages` scatters new
+    per-page (Delta, mu, lam, nu) into the backend state touching only the
+    updated rows — for the fused backend, a block-granular repack of the
+    touched `PageShard` plane columns + bounds, never a full `pack_shard`;
+  * **closed estimation loop** (App. E): `ingest_crawl_results` fits the
+    CIS-quality MLE (`core.estimation.fit_mle_pages`) on crawl logs and
+    feeds the refreshed parameters straight back through `update_pages`.
 
-Selection backends: exposure-table lookup (default), the dense Pallas kernel
-(`use_kernel=True`), or the fused select pipeline (`use_fused=True`): the env
-is packed once at construction / parameter refresh (`kernels.layout`), pages
-are padded to block alignment (padding scores -inf, never selected), and the
-previous round's k-th value warm-starts the selection threshold so blocks
-whose static asymptote bound can't reach it are skipped. Selection stays
-provably identical to dense top-k (see `kernels.select`).
+Selection strategies are `SelectionBackend` objects (`sched.backends`):
+`DenseBackend`, `TableBackend` (default), `KernelBackend`, `FusedBackend`
+(packed planes + single-pass candidate select with per-shard threshold
+warm-start — enabled on any mesh size; selection stays provably identical
+to dense top-k). The legacy `use_kernel=`/`use_fused=`/`table_grid=` kwargs
+are deprecation shims that map onto those backends.
 
-Fault tolerance: the entire scheduler state is two arrays; `state_dict()` /
-`load_state_dict()` plug into repro.checkpoint for atomic, sharded, resumable
-snapshots. Loss of a shard loses only the staleness clocks of its pages (they
-re-initialize as "just crawled" — conservative under-crawling that self-heals)
-while the budget re-normalizes to the surviving shard count.
+Fault tolerance: the entire scheduler state is one pytree; `state_dict()` /
+`load_state_dict()` plug into repro.checkpoint for atomic, sharded,
+resumable snapshots, and now include the backend state (per-shard
+thresholds, block bounds) so a restart resumes warm — the first post-restore
+round skips cold blocks instead of paying a full dense pass. NOTE: rounds
+donate the live buffers; `jax.device_get` a `state_dict()` before running
+further rounds if you intend to keep it.
 """
 from __future__ import annotations
 
+import warnings
+
+import dataclasses
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import tables
-from repro.core.values import Env, derive
-from repro.sched.distributed import ShardedSchedState, sharded_crawl_step
+from repro.core import estimation
+from repro.core.values import DerivedEnv, Env, derive
+from repro.sched import backends as be
+from repro.sched.distributed import ShardedSchedState
 
-# Threshold warm-start relaxation: the next round's k-th value can sit below
-# the current one (winners reset to ~0 value), so the carried threshold is
-# relaxed; too-aggressive thresholds only cost a dense fallback, never
-# exactness.
-THRESH_HYSTERESIS = 0.9
+# Legacy constant, re-exported for back-compat (now lives per backend:
+# `FusedBackend.hysteresis`).
+THRESH_HYSTERESIS = be.DEFAULT_HYSTERESIS
+
+
+def _legacy_backend(n_terms, table_grid, use_kernel, use_fused, block_rows):
+    """Map the pre-backend flag soup onto a SelectionBackend."""
+    if use_fused:
+        return be.FusedBackend(n_terms=n_terms, block_rows=block_rows)
+    if use_kernel:
+        return be.KernelBackend(n_terms=n_terms)
+    if table_grid:
+        return be.TableBackend(n_terms=n_terms, table_grid=table_grid)
+    return be.DenseBackend(n_terms=n_terms)
 
 
 class CrawlScheduler:
@@ -52,67 +74,67 @@ class CrawlScheduler:
         use_kernel: bool = False,
         use_fused: bool = False,
         block_rows: int | None = None,
+        backend: be.SelectionBackend | None = None,
     ):
+        if backend is None:
+            if use_kernel or use_fused:
+                warnings.warn(
+                    "use_kernel=/use_fused= are deprecated; pass "
+                    "backend=KernelBackend(...)/FusedBackend(...) instead",
+                    DeprecationWarning, stacklevel=2,
+                )
+            backend = _legacy_backend(n_terms, table_grid, use_kernel,
+                                      use_fused, block_rows)
+        self.backend = backend
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
         self.round_period = float(round_period)
         self.bandwidth = float(bandwidth)
-        self.n_terms = n_terms
-        self.use_kernel = use_kernel
-        self.use_fused = use_fused
-        sh = NamedSharding(mesh, P(self.axes))
         self.m = env.m
-        self._shard = None
-        self._thresh = None
-        self._bounds = None
-        if use_fused:
-            from repro.kernels import layout
+        self.round, binit = be.init_round(backend, env, mesh)
+        self.m_state = binit.m_state
+        # Host-side conveniences: the derived (padded) env oracle and the
+        # frozen importance normalizer (see backends module docstring). For
+        # dense/table backends `d`/`table` read through to the live backend
+        # state; the fused oracle copy is maintained by update_pages.
+        self.mu_total = jnp.sum(jnp.asarray(env.mu))
+        self._d_oracle = binit.d if isinstance(self.round.backend,
+                                               be.FusedState) else None
+        self._d_pending = []  # (ids, d_new) updates not yet folded into it
 
-            block_rows = block_rows or layout.DEFAULT_BLOCK_ROWS
-            m_state = layout.padded_size(self.m, block_rows,
-                                         n_shards=mesh.size)
-            # Pad the raw env so derived state/env sizes agree; padding pages
-            # (mu = 0) normalize away and score -inf in the fused kernel.
-            pad = m_state - self.m
-            if pad:
-                env = Env(
-                    delta=jnp.concatenate([env.delta, jnp.ones((pad,))]),
-                    mu=jnp.concatenate([env.mu, jnp.zeros((pad,))]),
-                    lam=jnp.concatenate([env.lam, jnp.zeros((pad,))]),
-                    nu=jnp.concatenate([env.nu, jnp.zeros((pad,))]),
-                )
-            env = jax.device_put(env, sh)
-            self.d = derive(env, mu_total=jnp.sum(env.mu))
-            self._shard = layout.pack_shard(
-                self.d, n_terms=n_terms, block_rows=block_rows
+    # -- legacy views ------------------------------------------------------
+    @property
+    def d(self) -> DerivedEnv:
+        """Derived-env oracle view. For the fused backend (whose state holds
+        packed planes, not a DerivedEnv) pending `update_pages` scatters are
+        folded in lazily here, so production refresh loops that never read
+        `.d` pay nothing for it."""
+        b = self.round.backend
+        if hasattr(b, "d"):
+            return b.d
+        for ids, d_new in self._d_pending:
+            self._d_oracle = DerivedEnv(
+                *[f.at[ids].set(n.astype(f.dtype))
+                  for f, n in zip(self._d_oracle, d_new)]
             )
-            self._bounds = layout.asym_block_bounds(self._shard.env)
-            # Threshold warm-start is sound per shard only against that
-            # shard's own k-th value; carrying the *global* k-th would push
-            # low-value shards into the dense fallback every round (exact but
-            # slow). Until per-shard thresholds are threaded through the
-            # candidate exchange (see ROADMAP), skip-by-threshold is enabled
-            # on single-shard meshes only.
-            self._warm_thresh = mesh.size == 1
-            self._thresh = jnp.float32(-jnp.inf)
-            self.table = None
-        else:
-            m_state = self.m
-            env = jax.device_put(env, sh)
-            self.d = derive(env)
-            self.table = (
-                tables.build_ncis_table(self.d, n_terms=n_terms,
-                                        n_grid=table_grid)
-                if table_grid
-                else None
-            )
-        self.m_state = m_state
-        self.state = ShardedSchedState(
-            tau_elap=jax.device_put(jnp.zeros((m_state,), jnp.float32), sh),
-            n_cis=jax.device_put(jnp.zeros((m_state,), jnp.int32), sh),
-            crawl_clock=jnp.int32(0),
+        self._d_pending.clear()
+        return self._d_oracle
+
+    @property
+    def table(self):
+        b = self.round.backend
+        return b.table if isinstance(b, be.TableState) else None
+
+    @property
+    def state(self) -> ShardedSchedState:
+        """Page state as the legacy ShardedSchedState view."""
+        return ShardedSchedState(
+            tau_elap=self.round.tau_elap,
+            n_cis=self.round.n_cis,
+            crawl_clock=self.round.crawl_clock,
         )
 
+    # -- bandwidth ---------------------------------------------------------
     @property
     def k_per_round(self) -> int:
         # A budget above the shard size just means "crawl everything".
@@ -123,43 +145,109 @@ class CrawlScheduler:
         """App. D: adapting to a new budget is just a new k — no re-solve."""
         self.bandwidth = float(bandwidth)
 
+    # -- the round ---------------------------------------------------------
+    def _pad_feed(self, new_cis: jax.Array) -> jax.Array:
+        """Validate + zero-pad a per-page feed to the packed state size (the
+        one shared padding path). A feed must cover exactly the corpus
+        (length m) or be pre-padded (length m_state); anything else is an
+        error — a longer feed would silently credit its tail counts to
+        padding pages, a shorter one would starve real pages."""
+        from repro.kernels import layout
+
+        n = new_cis.shape[0]
+        if n not in (self.m, self.m_state):
+            raise ValueError(
+                f"new_cis has {n} entries but the scheduler holds {self.m} "
+                f"pages ({self.m_state} padded); feed one count per page"
+            )
+        return layout.pad_to(new_cis, self.m_state, 0, dtype=None)
+
     def ingest_and_schedule(self, new_cis: jax.Array):
         """One round: ingest the CIS feed counts, pick k pages to crawl."""
-        if new_cis.shape[0] < self.m_state:
-            new_cis = jnp.concatenate([
-                new_cis,
-                jnp.zeros((self.m_state - new_cis.shape[0],), new_cis.dtype),
-            ])
-        k = self.k_per_round
-        self.state, (page_ids, values) = sharded_crawl_step(
-            self.state,
-            new_cis,
-            self.d if self._shard is None else None,
-            self.table,
-            self.mesh,
-            k,
-            self.round_period,
-            self.n_terms,
-            self.use_kernel,
-            env_planes=self._shard.env if self._shard is not None else None,
-            thresh=self._thresh,
-            bounds=self._bounds,
+        new_cis = self._pad_feed(new_cis)
+        self.round, (page_ids, values) = be.crawl_round(
+            self.backend, self.round, new_cis,
+            mesh=self.mesh, k=self.k_per_round, dt=self.round_period,
         )
-        if self._shard is not None and self._warm_thresh:
-            self._thresh = values[k - 1] * THRESH_HYSTERESIS
         return page_ids, values
 
+    # -- decentralized parameter refresh (§5.2 / App. E) -------------------
+    def update_pages(self, page_ids, env_updates: Env):
+        """Refresh the environment parameters of `page_ids` in place.
+
+        env_updates: raw Env fields of shape (n_upd,) (new delta/mu/lam/nu
+        per updated page). Shard-local and block-granular: only the touched
+        rows of the backend state are rewritten (fused: the touched plane
+        columns + the touched blocks' bounds), with the state buffer donated
+        so nothing else is copied. Normalization uses the frozen
+        construction-time mu_total — greedy selection is scale-invariant, so
+        no global renormalization pass is ever needed.
+        """
+        ids_np = np.asarray(page_ids)
+        if ids_np.size and (ids_np.min() < 0 or ids_np.max() >= self.m):
+            raise ValueError(
+                f"page ids must be in [0, {self.m}); got "
+                f"[{ids_np.min()}, {ids_np.max()}]"
+            )
+        ids = jnp.asarray(ids_np, jnp.int32)
+        d_new = derive(env_updates, mu_total=self.mu_total)
+        block_ids = None
+        if isinstance(self.round.backend, be.FusedState):
+            bp = (self.round.backend.env_planes.shape[2] *
+                  self.round.backend.env_planes.shape[3])
+            block_ids = jnp.asarray(np.unique(ids_np // bp), jnp.int32)
+            # The host-side dense oracle syncs lazily on `.d` access.
+            self._d_pending.append((ids, d_new))
+        new_bstate = be.refresh_pages(self.backend, self.round.backend, ids,
+                                      d_new, block_ids)
+        self.round = dataclasses.replace(self.round, backend=new_bstate)
+
+    def ingest_crawl_results(self, page_ids, tau, n_cis, fresh):
+        """Close the crawl -> estimate -> refresh -> re-select loop (App. E).
+
+        tau/n_cis/fresh: (n_pages, n_intervals) crawl-log arrays for
+        `page_ids` — interval lengths, CIS counts, and whether the crawl
+        found the page unchanged. Fits the CIS-quality MLE per page
+        (`core.estimation.fit_mle_pages`), maps it back to raw env
+        parameters (importance mu is unchanged — it comes from request logs,
+        not crawl logs), and applies `update_pages`. Returns the fitted
+        `CISQuality` for observability.
+        """
+        q = estimation.fit_mle_pages(tau, n_cis, fresh)
+        ids = jnp.asarray(np.asarray(page_ids), jnp.int32)
+        mu = self.d.mu_t[ids] * self.mu_total
+        self.update_pages(page_ids, estimation.quality_to_env(q, mu))
+        return q
+
+    # -- checkpointing -----------------------------------------------------
     def state_dict(self):
+        """Full scheduler state incl. backend warm-start state (per-shard
+        thresholds, block bounds, packed planes). Snapshot with
+        jax.device_get before running further (donating) rounds."""
         return {
-            "tau_elap": self.state.tau_elap,
-            "n_cis": self.state.n_cis,
-            "crawl_clock": self.state.crawl_clock,
+            "tau_elap": self.round.tau_elap,
+            "n_cis": self.round.n_cis,
+            "crawl_clock": self.round.crawl_clock,
+            "backend": self.round.backend,
         }
 
     def load_state_dict(self, sd) -> None:
         sh = NamedSharding(self.mesh, P(self.axes))
-        self.state = ShardedSchedState(
-            tau_elap=jax.device_put(sd["tau_elap"], sh),
-            n_cis=jax.device_put(sd["n_cis"], sh),
-            crawl_clock=jnp.asarray(sd["crawl_clock"]),
+        backend_state = self.round.backend
+        # jnp.copy decouples from caller-held arrays: subsequent rounds
+        # donate the state, which must never invalidate the caller's sd.
+        own = lambda v, dt=None: jnp.copy(jnp.asarray(v, dt))
+        if sd.get("backend") is not None:
+            # Re-shard each restored leaf like the corresponding live leaf
+            # (old checkpoints without backend state keep the cold init).
+            backend_state = jax.tree.map(
+                lambda ref, val: jax.device_put(own(val, ref.dtype),
+                                                ref.sharding),
+                backend_state, sd["backend"],
+            )
+        self.round = be.RoundState(
+            tau_elap=jax.device_put(own(sd["tau_elap"]), sh),
+            n_cis=jax.device_put(own(sd["n_cis"]), sh),
+            crawl_clock=own(sd["crawl_clock"]),
+            backend=backend_state,
         )

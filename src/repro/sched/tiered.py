@@ -34,6 +34,14 @@ from repro.core import tables
 from repro.core.values import DerivedEnv
 
 
+def _block_slope(mu_blk: jax.Array) -> jax.Array:
+    """Max value-growth-rate bound per block from its max normalized
+    importance: dV/dt = mu_t * alpha * e^{-alpha iota} * psi' is bounded by
+    mu_t * e^{-1} with a 2x safety margin (shared by TierState, BlockBounds,
+    and the post-repack refresh so the bound math never diverges)."""
+    return mu_blk * jnp.exp(-1.0) * 2.0
+
+
 class BlockBounds(NamedTuple):
     """Per-block optimistic bounds for the *fused* select pipeline
     (`kernels.select.fused_select`).
@@ -71,7 +79,7 @@ def init_block_bounds(env_planes: jax.Array) -> BlockBounds:
     nb = env_planes.shape[0]
     return BlockBounds(
         asym=asym,
-        slope=mu_blk * jnp.exp(-1.0) * 2.0,
+        slope=_block_slope(mu_blk),
         blk_max=jnp.zeros((nb,), jnp.float32),
         last_eval=jnp.zeros((nb,), jnp.int32),
     )
@@ -104,6 +112,27 @@ def update_block_bounds(
     )
 
 
+def refresh_block_params(
+    bb: BlockBounds, env_planes: jax.Array, block_ids: jax.Array
+) -> BlockBounds:
+    """Re-derive the env-dependent rows of the touched blocks after a
+    parameter repack (`kernels.layout.repack_pages` /
+    `CrawlScheduler.update_pages`): the static asymptote and slope change
+    with the new (Delta, mu) and the stale block max is no longer an anchor,
+    so last_eval resets to 0 — the next round's bound is +inf and the block
+    re-evaluates exactly. Block-granular: untouched rows are not rewritten."""
+    from repro.kernels import layout
+
+    asym_new = env_planes[block_ids, layout.V_INF].max(axis=(1, 2))
+    mu_new = env_planes[block_ids, layout.MU_T].max(axis=(1, 2))
+    return BlockBounds(
+        asym=bb.asym.at[block_ids].set(asym_new),
+        slope=bb.slope.at[block_ids].set(_block_slope(mu_new)),
+        blk_max=bb.blk_max.at[block_ids].set(0.0),
+        last_eval=bb.last_eval.at[block_ids].set(0),
+    )
+
+
 class TierState(NamedTuple):
     cached_vals: jax.Array    # (m,) last computed value per page
     blk_asym: jax.Array       # (n_blocks,) static bound max(mu_t/delta)
@@ -118,7 +147,7 @@ def init_tiers(d: DerivedEnv, block: int) -> TierState:
     # dV/dt = mu_t * alpha * e^{-alpha iota} * psi <= mu_t * (alpha iota e^{-alpha iota} <= e^{-1}) ...
     # conservative: mu_t * max(alpha * psi) bounded by mu_t (psi <= iota).
     mu_blk = d.mu_t.reshape(nb, block).max(axis=1)
-    slope = mu_blk * jnp.exp(-1.0) * 2.0
+    slope = _block_slope(mu_blk)
     return TierState(
         cached_vals=jnp.zeros((m,), jnp.float32),
         blk_asym=asym,
