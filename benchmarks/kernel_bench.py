@@ -18,6 +18,14 @@ fused-select comparison at m = 2^20 (quick) / 2^22 (paper):
                      HBM bytes/page, the active-block fraction, and the
                      number of exact-recovery fallbacks observed.
 Selections are verified identical between the two paths before timing.
+
+`fused_adaptive_bench` (also run by the CI bench-smoke via `kernel_bench`)
+adds sched/round_fused_adaptive: the closed skip-control loop
+(`FusedBackend(adaptive_bounds=True)` — refreshing BlockBounds folded back
+in-jit + adaptive per-shard hysteresis) against an identically-seeded
+static-asymptote scheduler, reporting the extra skip rate
+(frac_active vs frac_active_static), fallback counts, and the state-plane
+donation alias — with both selections gated identical to dense top-k first.
 """
 from __future__ import annotations
 
@@ -66,6 +74,7 @@ def kernel_bench():
     emit("kernel/pallas_interpret", us_k, f"m={mk};max_err={err_k:.2e}")
 
     refresh_repack_bench()
+    fused_adaptive_bench()
 
 
 def refresh_repack_bench():
@@ -123,18 +132,113 @@ def refresh_repack_bench():
     )
 
 
-def _fused_round_loop(sched, zero, n_rounds):
+def _fused_round_loop(sched, zero, n_rounds, warm_rounds=2):
     """Run donated backend rounds (the warm-start threshold is carried inside
-    the RoundState); returns seconds_per_round."""
-    # warm-up: compile + seed the per-shard thresholds
-    sched.ingest_and_schedule(zero)
-    _, v = sched.ingest_and_schedule(zero)
+    the RoundState); returns seconds_per_round. warm_rounds covers compile +
+    threshold seeding; the adaptive-bounds loop needs a few more rounds for
+    the block anchors to populate before steady-state timing."""
+    for _ in range(warm_rounds):
+        _, v = sched.ingest_and_schedule(zero)
     jax.block_until_ready(v)
     t0 = time.perf_counter()
     for _ in range(n_rounds):
         _, v = sched.ingest_and_schedule(zero)
     jax.block_until_ready(v)
     return (time.perf_counter() - t0) / n_rounds
+
+
+def fused_adaptive_bench():
+    """The closed skip-control loop (`sched/round_fused_adaptive`): adaptive
+    BlockBounds + per-shard hysteresis vs the static asymptote bound, on the
+    same value-tiered instance and warm state trajectory. Rounds run at a
+    short period (the production regime where values regrow over many rounds
+    — with dt ~ 1 the slope bound saturates at the asymptote and the
+    refreshing bound degenerates to the static one). Reports the extra skip
+    rate, fallback frequency, and asserts both selection exactness vs dense
+    top-k and the state-plane donation aliasing."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
+    from repro.kernels import layout
+
+    m = prof(1 << 20, 1 << 22)
+    k = 256
+    dt = 0.05
+    mesh = jax.make_mesh((1,), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    # Value-correlated blocks (the paper's production tiers).
+    order = jnp.argsort(-(env.mu / env.delta))
+    env = jax.tree.map(lambda x: x[order], env)
+    tau0 = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=2.0)
+    zero = jnp.zeros((m,), jnp.int32)
+
+    def build(backend):
+        s = CrawlScheduler(env, mesh, bandwidth=float(k), round_period=dt,
+                           backend=backend)
+        s.round = dataclasses.replace(s.round, tau_elap=jnp.copy(tau0))
+        return s
+
+    adaptive = build(be.FusedBackend(adaptive_bounds=True))
+    static = build(be.FusedBackend())
+    dense = build(be.DenseBackend())
+
+    # Correctness gate: adaptive == static == dense selection, round by round
+    # (including the rounds that warm the thresholds and bound anchors).
+    for r in range(4):
+        ids_a, _ = adaptive.ingest_and_schedule(zero)
+        ids_s, _ = static.ingest_and_schedule(zero)
+        ids_d, _ = dense.ingest_and_schedule(zero)
+        assert (set(np.asarray(ids_a).tolist())
+                == set(np.asarray(ids_d).tolist())), \
+            f"adaptive selection diverged from dense top-k (round {r})"
+        assert (set(np.asarray(ids_s).tolist())
+                == set(np.asarray(ids_d).tolist())), \
+            f"static selection diverged from dense top-k (round {r})"
+
+    p_env = adaptive.round.backend.env_planes.unsafe_buffer_pointer()
+    n_rounds = prof(12, 20)
+    # Warm both (compile + populate thresholds/anchors), then time the two
+    # loops INTERLEAVED round by round and take per-round MEDIANS so
+    # host-load drift and spikes cancel out of the adaptive-vs-static
+    # comparison.
+    for s in (adaptive, static):
+        for _ in range(10):
+            _, v = s.ingest_and_schedule(zero)
+        jax.block_until_ready(v)
+    times = ([], [])
+    fell = [0, 0]
+    for _ in range(n_rounds):
+        for i, s in enumerate((adaptive, static)):
+            t0 = time.perf_counter()
+            _, v = s.ingest_and_schedule(zero)
+            jax.block_until_ready(v)
+            times[i].append((time.perf_counter() - t0) * 1e6)
+            # fallback FREQUENCY across the timed rounds (a last-round
+            # snapshot could hide fallback churn inflating the medians)
+            fell[i] += int(np.asarray(s.round.backend.fell_back).any())
+    us = [float(np.median(t)) for t in times]
+    frac = [float(s.round.backend.frac_active.mean())
+            for s in (adaptive, static)]
+    aliased = (adaptive.round.backend.env_planes.unsafe_buffer_pointer()
+               == p_env)
+    assert aliased, "adaptive crawl_round copied the donated env planes"
+    assert frac[0] < frac[1], (
+        f"adaptive bounds did not increase the skip rate: "
+        f"frac_active={frac[0]:.3f} vs static {frac[1]:.3f}"
+    )
+    bpp = layout.bytes_per_page(adaptive.backend.n_terms)
+    emit("sched/round_fused_adaptive", us[0],
+         f"m={m};k={k};dt={dt};pages_per_s={m/(us[0]/1e6):.3e};"
+         f"frac_active={frac[0]:.3f};frac_active_static={frac[1]:.3f};"
+         f"extra_skip={frac[1]-frac[0]:.3f};"
+         f"hbm_bytes_per_page={bpp*frac[0]:.1f};"
+         f"fallback_rounds={fell[0]}/{n_rounds};"
+         f"hyst={float(adaptive.round.backend.hyst[0]):.2f};"
+         f"speedup_vs_static_bound={us[1]/us[0]:.2f}x;"
+         f"state_planes_donated_alias={int(aliased)}")
 
 
 def sched_bench():

@@ -87,9 +87,12 @@ def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
 
     strict=False matches leaves by manifest *path* instead of flat order:
     paths missing from the checkpoint keep tree_like's current value (so a
-    state_dict that grew new fields — e.g. the scheduler's backend
-    warm-start state — still restores from old checkpoints), and checkpoint
-    paths absent from tree_like are ignored.
+    state_dict that grew new fields — e.g. the scheduler's backend adaptive
+    skip-control state, which is APPENDED to `FusedState` precisely so the
+    positional paths of old snapshots still line up — still restores from
+    old checkpoints), checkpoint paths absent from tree_like are ignored,
+    and a matched path whose stored shape no longer fits tree_like keeps
+    the current value too (with a warning) instead of failing the restore.
     """
     proc = jax.process_index()
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
@@ -115,8 +118,23 @@ def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
                  for p, ref in zip(ref_paths, ref_leaves)]
     out = []
     for got, ref in pairs:
-        got = np.asarray(jax.device_get(got))
-        assert tuple(got.shape) == tuple(ref.shape), (got.shape, ref.shape)
+        if got is not ref:
+            got = np.asarray(jax.device_get(got))
+        if got is ref or tuple(got.shape) != tuple(ref.shape):
+            if got is not ref:
+                if strict:
+                    raise AssertionError((got.shape, ref.shape))
+                import warnings
+
+                warnings.warn(
+                    f"checkpoint leaf shape {got.shape} does not fit "
+                    f"{tuple(ref.shape)}; keeping the current value",
+                    stacklevel=2,
+                )
+            # Keep the reference leaf AS IS — no host round-trip, and its
+            # device placement/sharding survives.
+            out.append(ref)
+            continue
         out.append(jnp.asarray(got, dtype=ref.dtype))
     return jax.tree.unflatten(treedef, out), manifest["extra"]
 

@@ -288,3 +288,13 @@ def asym_block_bounds(env: jax.Array) -> jax.Array:
     asymptote, so this bound needs no staleness refresh — blocks whose best
     page can never reach the selection threshold are skipped forever."""
     return env[:, V_INF].max(axis=(1, 2))
+
+
+def block_mu_max(env: jax.Array, block_ids: jax.Array | None = None) -> jax.Array:
+    """Per-block max normalized importance, feeding the slope row of the
+    refreshing bounds (`sched.tiered.BlockBounds`). Like
+    `refresh_block_bounds`, passing `block_ids` reads only the touched blocks
+    so the post-repack slope refresh stays block-granular — and computes the
+    same plane reduction as a from-scratch `init_block_bounds`."""
+    sel = env if block_ids is None else env[block_ids]
+    return sel[:, MU_T].max(axis=(1, 2))

@@ -72,12 +72,63 @@ def auto_cand_per_lane(k: int) -> int:
     return max(DEFAULT_CAND_PER_LANE, 2 * lam + 6)
 
 
+def shard_budget(
+    k: int,
+    m_local: int,
+    nb_local: int,
+    n_shards: int = 1,
+    k_local: int | None = None,
+    cand_per_lane: int | None = None,
+) -> tuple[int, int]:
+    """THE shard-local budget clamp, shared by every fused caller
+    (`sched.backends.FusedBackend`, `sched.distributed.sharded_select`, the
+    scheduler's candidate-depth adaptation) so the k_loc invariant can never
+    diverge between them.
+
+    Returns (k_loc, cand_per_lane): the per-shard candidate count clamped to
+    (a) the requested k_local/k, (b) the shard's padded page count (a large
+    budget on a small shard would otherwise ask local top-k for more entries
+    than the shard holds — the real/unpadded tail shard holds even fewer,
+    but padding scores -inf and is harmless to contribute), and (c) the
+    shard's candidate-buffer capacity (binds only for an explicitly
+    undersized cand_per_lane, where the overflow fallback already restores
+    the dense selection). Raises if the clamped shards cannot jointly cover
+    the global budget."""
+    k_loc = min(k_local or k, k, m_local)
+    c = cand_per_lane or auto_cand_per_lane(k_loc)
+    k_loc = min(k_loc, nb_local * c * LANES)
+    if n_shards * k_loc < k:
+        raise ValueError(
+            f"global budget k={k} exceeds the {n_shards * k_loc} candidates "
+            "the shards can contribute; raise cand_per_lane"
+        )
+    return k_loc, c
+
+
 class FusedSelection(NamedTuple):
     values: jax.Array       # (k,) selected values, descending
     ids: jax.Array          # (k,) int32 page ids (padded-flat id space)
-    blk_max: jax.Array      # (n_blocks,) block maxima (-inf for skipped)
+    blk_max: jax.Array      # (n_blocks,) block maxima (-inf for skipped;
+    #                         recomputed from the dense values on fallback
+    #                         rounds so it stays a sound bound anchor)
     fell_back: jax.Array    # () bool — dense exact-recovery pass taken
     frac_active: jax.Array  # () f32 — fraction of blocks evaluated
+    #                         (1.0 on fallback rounds: the dense pass
+    #                         evaluates everything)
+    col_winners: jax.Array  # () i32 — max per-lane-column count of values
+    #                         >= the k-th: the realized candidate depth this
+    #                         round, feeding the adaptive cand_per_lane
+    #                         shrink (`sched.service`)
+
+
+def _col_depth(vals: jax.Array, kth: jax.Array) -> jax.Array:
+    """Realized candidate depth: the max over (block, lane) columns of
+    entries strictly above the k-th value, plus one boundary slot. Counting
+    strictly (not >=) keeps degenerate mass-tie rounds — e.g. the cold
+    first round where every value is 0 — from pinning the watermark at the
+    full column height; ties at the k-th are covered by the fallback, not
+    the buffer depth. vals: (n_blocks, depth, LANES)."""
+    return (jnp.sum(vals > kth, axis=1).max() + 1).astype(jnp.int32)
 
 
 def _lane_topc(v: jax.Array, row0, c: int):
@@ -251,20 +302,33 @@ def fused_select_local(
     fell_back = (thresh > kth) | jnp.any(col_last >= kth)
 
     def dense(_):
+        # Fallback diagnostics must describe the pass that actually ran:
+        # every block was evaluated (frac_active = 1.0) and the block maxima
+        # come from the dense values — the candidate buffers hold -inf for
+        # skipped blocks and truncated columns, so reusing them would poison
+        # the bound anchors (`sched.tiered.update_block_bounds`).
         tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
-        vals = value_from_planes(tau3, n3, env, n_terms).reshape(-1)
-        dv, di = jax.lax.top_k(vals, k)
-        return dv, di.astype(jnp.int32)
+        vals = value_from_planes(tau3, n3, env, n_terms)
+        dv, di = jax.lax.top_k(vals.reshape(-1), k)
+        colw = _col_depth(vals, dv[k - 1])
+        return (dv, di.astype(jnp.int32), vals.max(axis=(1, 2)),
+                jnp.float32(1.0), colw)
 
-    top_v, top_i = jax.lax.cond(
-        fell_back, dense, lambda _: (top_v, top_i), None
+    def keep(_):
+        return (top_v, top_i, cand_v[:, 0, :].max(axis=-1),
+                jnp.mean((bounds >= thresh).astype(jnp.float32)),
+                _col_depth(cand_v, kth))
+
+    top_v, top_i, blk_max, frac_active, col_winners = jax.lax.cond(
+        fell_back, dense, keep, None
     )
     return FusedSelection(
         values=top_v,
         ids=top_i,
-        blk_max=cand_v[:, 0, :].max(axis=-1),
+        blk_max=blk_max,
         fell_back=fell_back,
-        frac_active=jnp.mean((bounds >= thresh).astype(jnp.float32)),
+        frac_active=frac_active,
+        col_winners=col_winners,
     )
 
 

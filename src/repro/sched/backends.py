@@ -36,6 +36,17 @@ per-shard thresholds make warm-start sound — and cheap — on any mesh, while
 selection stays provably identical to dense top-k via the exact-recovery
 fallback in `kernels.select`.
 
+The adaptive skip-control loop (ROADMAP "adaptive BlockBounds" / "adaptive
+hysteresis") closes entirely inside the jitted, donated round: `FusedState`
+additionally carries the refreshing per-block bound rows (slope / blk_max /
+last_eval — the `tiered.BlockBounds` construction), the per-shard
+hysteresis scalar, and the realized candidate-depth watermark. Each
+`crawl_round` folds the kernel's block maxima back into the anchors,
+re-marks CIS-receiving blocks stale (the re-evaluation rule that keeps
+refreshing bounds sound under signal jumps), and tightens/relaxes the
+warm-start threshold from the fallback diagnostic — no host round-trip, no
+extra pass over the pages. See `FusedBackend` for the flags.
+
 Parameter refresh (the paper's decentralized per-page refresh) is
 `refresh_pages(backend, bstate, page_ids, env_new, ...)`: each backend
 scatter-updates only the touched rows of its state (fused: plane columns +
@@ -67,8 +78,14 @@ from repro.sched.distributed import (
 # Threshold warm-start relaxation: the next round's k-th value can sit below
 # the current one (winners reset to ~0 value), so the carried threshold is
 # relaxed; a too-aggressive threshold only costs a dense fallback, never
-# exactness.
+# exactness. This is only the *initial* factor — the hysteresis loop is
+# closed in-jit per shard (FusedState.hyst): tighten toward HYSTERESIS_MAX
+# while no fallback fires, relax on fallback.
 DEFAULT_HYSTERESIS = 0.9
+HYSTERESIS_MIN = 0.5
+HYSTERESIS_MAX = 0.98
+HYSTERESIS_TIGHTEN = 0.01   # additive step per clean round
+HYSTERESIS_RELAX = 0.1      # additive step back per fallback round
 
 
 @jax.tree_util.register_dataclass
@@ -108,11 +125,27 @@ class TableState(NamedTuple):
 
 
 class FusedState(NamedTuple):
+    """All array state of the fused backend. NOTE: a NamedTuple checkpoints
+    under its *field names* (backend/.thresh, ...), so growing the state is
+    append-only in spirit: never rename or repurpose an existing field —
+    `checkpoint.restore(strict=False)` then loads pre-adaptive snapshots
+    into the grown state by name (the new planes keep their init values)."""
+
     env_planes: jax.Array   # (n_blocks, n_planes, block_rows, LANES) f32
     thresh: jax.Array       # (n_shards,) per-SHARD warm-start threshold
-    bounds: jax.Array       # (n_blocks,) optimistic per-block bounds
+    bounds: jax.Array       # (n_blocks,) static asymptote bound (cap of the
+    #                         refreshing bound; the bound used directly when
+    #                         adaptive_bounds is off)
     frac_active: jax.Array  # (n_shards,) diagnostics: blocks evaluated
     fell_back: jax.Array    # (n_shards,) diagnostics: dense recovery taken
+    # --- adaptive skip-control planes (appended; see class docstring) ---
+    slope: jax.Array        # (n_blocks,) max value-growth-rate bound
+    blk_max: jax.Array      # (n_blocks,) block max at last exact evaluation
+    last_eval: jax.Array    # (n_blocks,) i32 round of last exact evaluation
+    #                         (-1 = never: +inf bound, must evaluate)
+    hyst: jax.Array         # (n_shards,) adaptive hysteresis scalar
+    col_winners: jax.Array  # (n_shards,) i32 running max winners observed
+    #                         per lane column (candidate-depth sizing)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -144,9 +177,18 @@ class SelectionBackend(Protocol):
         """Build the backend state for a raw environment on a mesh."""
         ...
 
-    def select(self, state: RoundState, mesh: Mesh, k: int):
+    def select(self, state: RoundState, mesh: Mesh, k: int, *,
+               dt: float = 0.0, new_cis: jax.Array | None = None):
         """Global top-k. Returns (page_ids (k,) replicated, values (k,)
-        replicated, crawl mask (m_state,) sharded, new backend state)."""
+        replicated, crawl mask (m_state,) sharded, new backend state).
+
+        dt/new_cis thread the round context through for backends whose
+        state update depends on it: the fused adaptive bounds need the
+        round period to decay block bounds, and the CIS feed so any block
+        that received signals this round is re-marked stale (a CIS jump is
+        instant value growth the slope bound cannot see — re-evaluating
+        keeps a skipped block from hiding a signal-jumped winner).
+        Stateless backends ignore both."""
         ...
 
     def update_pages(self, bstate, page_ids: jax.Array, d_new: DerivedEnv,
@@ -170,7 +212,8 @@ class DenseBackend:
         d = derive(env, mu_total=jnp.sum(env.mu))
         return BackendInit(env.m, DenseState(d=d), d, None)
 
-    def select(self, state: RoundState, mesh: Mesh, k: int):
+    def select(self, state: RoundState, mesh: Mesh, k: int, *,
+               dt: float = 0.0, new_cis: jax.Array | None = None):
         st = ShardedSchedState(state.tau_elap, state.n_cis, state.crawl_clock)
         top_g, top_v, mask = sharded_select(
             st, state.backend.d, None, mesh, k, self.n_terms,
@@ -207,7 +250,8 @@ class TableBackend:
                                         u_max=self.u_max)
         return BackendInit(env.m, TableState(d=d, table=table), d, table)
 
-    def select(self, state: RoundState, mesh: Mesh, k: int):
+    def select(self, state: RoundState, mesh: Mesh, k: int, *,
+               dt: float = 0.0, new_cis: jax.Array | None = None):
         st = ShardedSchedState(state.tau_elap, state.n_cis, state.crawl_clock)
         top_g, top_v, mask = sharded_select(
             st, state.backend.d, state.backend.table, mesh, k, self.n_terms,
@@ -233,9 +277,29 @@ class FusedBackend:
 
     warm_start enables the per-shard threshold skip (sound on any mesh size:
     each shard's threshold is its own previous k-th candidate value, relaxed
-    by `hysteresis`). Selection remains exactly dense top-k regardless — the
-    candidate-overflow / over-aggressive-threshold fallback in
-    `kernels.select` guarantees it.
+    by the hysteresis scalar). Selection remains exactly dense top-k
+    regardless — the candidate-overflow / over-aggressive-threshold fallback
+    in `kernels.select` guarantees it.
+
+    Adaptive skip control (the App. G tiering loop, closed in-jit):
+
+      * adaptive_bounds (opt-in): each round's per-block maxima fold back
+        into the refreshing `tiered.BlockBounds` carried in `FusedState`
+        (slope-decayed anchor, capped by the static asymptote), replacing
+        the static asymptote-only bound. Soundness under CIS: any block
+        whose pages received `new_cis > 0` this round is re-marked
+        never-evaluated (+inf bound), so a skipped block can never hide a
+        signal-jumped winner — selection stays exactly dense top-k.
+      * adaptive_hysteresis (default on): the per-shard warm-start
+        threshold factor is carried in `FusedState.hyst` and adapted from
+        the fallback diagnostic — tightened toward `hyst_max` while no
+        fallback fires (more skipping), relaxed toward `hyst_min` on
+        fallback (fewer dense passes).
+      * cand_per_lane (None = auto-size for the worst case): candidate
+        buffer depth. `FusedState.col_winners` tracks the realized
+        per-lane-column winner counts so `CrawlScheduler` (adaptive_cand)
+        can shrink the depth on well-mixed shards — fewer extraction
+        passes per active block.
     """
 
     n_terms: int = 8
@@ -243,9 +307,18 @@ class FusedBackend:
     k_local: int | None = None
     hysteresis: float = DEFAULT_HYSTERESIS
     warm_start: bool = True
+    adaptive_bounds: bool = False
+    adaptive_hysteresis: bool = True
+    adaptive_cand: bool = False
+    cand_per_lane: int | None = None
+    hyst_min: float = HYSTERESIS_MIN
+    hyst_max: float = HYSTERESIS_MAX
+    hyst_tighten: float = HYSTERESIS_TIGHTEN
+    hyst_relax: float = HYSTERESIS_RELAX
 
     def init(self, env: Env, mesh: Mesh) -> BackendInit:
         from repro.kernels import layout
+        from repro.sched import tiered
 
         block_rows = self.block_rows or layout.DEFAULT_BLOCK_ROWS
         m = env.m
@@ -266,18 +339,27 @@ class FusedBackend:
         n_shards = mesh.size
         pspec = _pspec(mesh)
         neg_inf = jnp.full((n_shards,), -jnp.inf, jnp.float32)
+        bb = tiered.init_block_bounds(shard.env)
         bstate = FusedState(
             env_planes=_put(shard.env, mesh, P(tuple(mesh.axis_names),
                                                None, None, None)),
             thresh=_put(neg_inf, mesh, pspec),
-            bounds=_put(layout.asym_block_bounds(shard.env), mesh, pspec),
+            bounds=_put(bb.asym, mesh, pspec),
             frac_active=_put(jnp.ones((n_shards,), jnp.float32), mesh, pspec),
             fell_back=_put(jnp.zeros((n_shards,), bool), mesh, pspec),
+            slope=_put(bb.slope, mesh, pspec),
+            blk_max=_put(bb.blk_max, mesh, pspec),
+            last_eval=_put(bb.last_eval, mesh, pspec),
+            hyst=_put(jnp.full((n_shards,), self.hysteresis, jnp.float32),
+                      mesh, pspec),
+            col_winners=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
         )
         return BackendInit(m_state, bstate, d, None)
 
-    def select(self, state: RoundState, mesh: Mesh, k: int):
+    def select(self, state: RoundState, mesh: Mesh, k: int, *,
+               dt: float = 0.0, new_cis: jax.Array | None = None):
         from repro.kernels import select as ksel
+        from repro.sched import tiered
 
         axes = tuple(mesh.axis_names)
         pspec = P(axes)
@@ -292,51 +374,120 @@ class FusedBackend:
         assert n_blocks % n_shards == 0, (
             "fused path needs n_blocks divisible by the shard count"
         )
-        k_loc = min(self.k_local or k, k)
+        # Shard-local budget + candidate depth, clamped by the one shared
+        # rule (`select.shard_budget`): exactness survives the clamp — a
+        # shard can contribute at most its page count, and the capacity
+        # clamp only binds with an explicitly undersized cand_per_lane,
+        # where the overflow fallback already restores dense selection.
+        k_loc, cand = ksel.shard_budget(
+            k, m // n_shards, n_blocks // n_shards, n_shards,
+            self.k_local, self.cand_per_lane,
+        )
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
-        hyst = jnp.float32(self.hysteresis)
+        if new_cis is None:
+            new_cis = jnp.zeros_like(state.n_cis)
 
-        def shard_fn(tau_elap, n_cis, env_shard, bounds_shard, thresh_shard):
+        def shard_fn(tau_elap, n_cis, cis_feed, env_shard, asym, slope,
+                     blkmax, last_ev, thresh_shard, hyst_shard, colw_shard,
+                     clock):
             # thresh_shard is this shard's OWN slice: the local k-th candidate
             # value of the previous round — sound to compare against local
             # block bounds (the ROADMAP per-shard threshold exchange).
+            bb = tiered.BlockBounds(asym=asym, slope=slope, blk_max=blkmax,
+                                    last_eval=last_ev)
+            bound = (tiered.current_block_bounds(bb, clock, dt)
+                     if self.adaptive_bounds else asym)
             thresh = (thresh_shard[0] if self.warm_start
                       else jnp.float32(-jnp.inf))
             sel = ksel.fused_select_local(
-                tau_elap, n_cis, env_shard, k_loc, thresh, bounds_shard,
-                n_terms=self.n_terms, impl=impl, interpret=impl != "pallas",
+                tau_elap, n_cis, env_shard, k_loc, thresh, bound,
+                n_terms=self.n_terms, cand_per_lane=cand, impl=impl,
+                interpret=impl != "pallas",
             )
             m_local = tau_elap.shape[0]
             top_g, top_v, mask = _global_topk(sel.values, sel.ids, axes,
                                               m_local, k)
-            new_thresh = (sel.values[k_loc - 1] * hyst).reshape(1)
+            # Hysteresis loop: tighten while the threshold proved safe,
+            # relax when it (or candidate overflow) forced a dense pass.
+            if self.adaptive_hysteresis:
+                h = jnp.where(
+                    sel.fell_back,
+                    jnp.maximum(hyst_shard[0] - self.hyst_relax,
+                                self.hyst_min),
+                    jnp.minimum(hyst_shard[0] + self.hyst_tighten,
+                                self.hyst_max),
+                )
+            else:
+                h = jnp.float32(self.hysteresis)
+            new_thresh = (sel.values[k_loc - 1] * h).reshape(1)
+            if self.adaptive_bounds:
+                # Fold the round's block maxima back into the bound anchors.
+                # On fallback rounds the dense pass evaluated every block
+                # (blk_max is recomputed from the dense values in
+                # kernels.select).
+                evaluated = (bound >= thresh) | sel.fell_back
+                bb = tiered.update_block_bounds(bb, sel.blk_max, evaluated,
+                                                clock)
+                # CIS-seen re-evaluation rule: a CIS jumps exposure
+                # instantly, which the slope bound cannot see — blocks that
+                # received signals this round lose their anchor (+inf bound
+                # next round), so a skipped block can never hide a
+                # signal-jumped winner.
+                cis_seen = (cis_feed.reshape(asym.shape[0], -1) > 0) \
+                    .any(axis=1)
+                new_blkmax = bb.blk_max
+                new_last = jnp.where(cis_seen, jnp.int32(-1), bb.last_eval)
+            else:
+                # Static bound: the anchors are never read — alias them
+                # through untouched (no per-round plane writes, no O(m)
+                # CIS reduction on the default path).
+                new_blkmax, new_last = blkmax, last_ev
+            # Running max of realized per-column winner depth: the host-side
+            # candidate-depth adaptation reads (and resets) this window.
+            colw = jnp.maximum(colw_shard[0], sel.col_winners)
             return (top_g, top_v, mask, new_thresh,
-                    sel.frac_active.reshape(1), sel.fell_back.reshape(1))
+                    sel.frac_active.reshape(1), sel.fell_back.reshape(1),
+                    new_blkmax, new_last, h.reshape(1), colw.reshape(1))
 
         fn = _shard_map(
             shard_fn,
             mesh=mesh,
-            in_specs=(pspec, pspec, P(axes, None, None, None), pspec, pspec),
-            out_specs=(P(), P(), pspec, pspec, pspec, pspec),
+            in_specs=(pspec, pspec, pspec, P(axes, None, None, None),
+                      pspec, pspec, pspec, pspec, pspec, pspec, pspec, P()),
+            out_specs=(P(), P(), pspec, pspec, pspec, pspec,
+                       pspec, pspec, pspec, pspec),
         )
-        top_g, top_v, mask, thresh, frac, fb = fn(
-            state.tau_elap, state.n_cis, bst.env_planes, bst.bounds,
-            bst.thresh,
+        top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, hyst, colw = fn(
+            state.tau_elap, state.n_cis, new_cis, bst.env_planes, bst.bounds,
+            bst.slope, bst.blk_max, bst.last_eval, bst.thresh, bst.hyst,
+            bst.col_winners, state.crawl_clock,
         )
-        new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb)
+        new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb,
+                               blk_max=blkmax, last_eval=last_ev, hyst=hyst,
+                               col_winners=colw)
         return top_g, top_v, mask, new_bst
 
     def update_pages(self, bstate, page_ids, d_new, block_ids=None):
         from repro.kernels import layout
+        from repro.sched import tiered
 
         env_planes = layout.repack_pages(bstate.env_planes, page_ids, d_new)
         assert block_ids is not None, (
             "fused update_pages needs the touched block ids "
             "(page_ids // block_pages, deduplicated)"
         )
-        bounds = layout.refresh_block_bounds(env_planes, bstate.bounds,
-                                             block_ids)
-        return bstate._replace(env_planes=env_planes, bounds=bounds)
+        # Refresh every env-dependent bound row of the touched blocks
+        # (asymptote AND slope), and drop their anchors: the repacked pages'
+        # values are unrelated to the recorded block max, so the blocks
+        # re-evaluate exactly next round (last_eval = -1 -> +inf bound).
+        bb = tiered.refresh_block_params(
+            tiered.BlockBounds(asym=bstate.bounds, slope=bstate.slope,
+                               blk_max=bstate.blk_max,
+                               last_eval=bstate.last_eval),
+            env_planes, block_ids)
+        return bstate._replace(env_planes=env_planes, bounds=bb.asym,
+                               slope=bb.slope, blk_max=bb.blk_max,
+                               last_eval=bb.last_eval)
 
 
 def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
@@ -372,12 +523,18 @@ def crawl_round(
     advance time, ingest the externally-fed CIS counts.
 
     Returns (new_round_state, (page_ids, values)). `state` is DONATED: its
-    tau/n_CIS (and fused threshold/bound) buffers are updated in place and
-    the packed env planes alias through untouched — no state plane is copied.
-    Do not reuse the argument after the call; `new_cis` is not donated (feed
-    buffers may be reused by the caller).
+    tau/n_CIS (and fused threshold/bound/anchor) buffers are updated in
+    place and the packed env planes alias through untouched — no state plane
+    is copied. Do not reuse the argument after the call; `new_cis` is not
+    donated (feed buffers may be reused by the caller).
+
+    The CIS feed and round period thread into `select` so stateful backends
+    can close their skip-control loop in the same jitted round: the fused
+    adaptive bounds decay by `dt` and re-mark any block receiving
+    `new_cis > 0` as stale (see `FusedBackend`).
     """
-    top_g, top_v, mask, new_b = backend.select(state, mesh, k)
+    top_g, top_v, mask, new_b = backend.select(state, mesh, k, dt=dt,
+                                               new_cis=new_cis)
     tau = jnp.where(mask, 0.0, state.tau_elap) + dt
     n = jnp.where(mask, 0, state.n_cis) + new_cis
     new_state = RoundState(

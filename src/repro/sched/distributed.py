@@ -164,16 +164,19 @@ def sharded_select(
     """
     axes = tuple(mesh.axis_names)
     pspec = P(axes)
-    k_loc = min(k_local or k, k)
     m = state.tau_elap.shape[0]
+    n_shards = 1
+    for ax_size in mesh.devices.shape:
+        n_shards *= ax_size
+    # A shard can contribute at most its own page count (large budgets on
+    # small shards: local top_k over more entries than the shard holds
+    # would be an error; padding pages score -inf and are harmless).
+    k_loc = min(k_local or k, k, m // n_shards)
 
     if env_planes is not None:
         from repro.kernels import select as ksel
 
         n_blocks, _, block_rows, lanes = env_planes.shape
-        n_shards = 1
-        for ax_size in mesh.devices.shape:
-            n_shards *= ax_size
         assert m == n_blocks * block_rows * lanes, (
             "fused path needs block-aligned padded state "
             f"(m={m}, planes={env_planes.shape})"
@@ -181,6 +184,10 @@ def sharded_select(
         assert n_blocks % n_shards == 0, (
             "fused path needs n_blocks divisible by the shard count"
         )
+        # ... and at most its candidate-buffer capacity — the one shared
+        # clamp rule (`select.shard_budget`).
+        k_loc, _ = ksel.shard_budget(k, m // n_shards, n_blocks // n_shards,
+                                     n_shards, k_local)
         if thresh is None:
             thresh = jnp.float32(-jnp.inf)
         if bounds is None:

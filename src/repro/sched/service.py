@@ -14,7 +14,13 @@ highlights:
     touched `PageShard` plane columns + bounds, never a full `pack_shard`;
   * **closed estimation loop** (App. E): `ingest_crawl_results` fits the
     CIS-quality MLE (`core.estimation.fit_mle_pages`) on crawl logs and
-    feeds the refreshed parameters straight back through `update_pages`.
+    feeds the refreshed parameters straight back through `update_pages`;
+  * **adaptive skip control** (App. G): with
+    `FusedBackend(adaptive_bounds=True)` the per-block bounds refresh from
+    each round's block maxima and the warm-start hysteresis adapts per
+    shard, all inside the jitted round (`sched.backends`); the scheduler
+    additionally shrinks the candidate-buffer depth host-side from the
+    realized winner concentration (`adaptive_cand`).
 
 Selection strategies are `SelectionBackend` objects (`sched.backends`):
 `DenseBackend`, `TableBackend` (default), `KernelBackend`, `FusedBackend`
@@ -151,25 +157,120 @@ class CrawlScheduler:
         one shared padding path). A feed must cover exactly the corpus
         (length m) or be pre-padded (length m_state); anything else is an
         error — a longer feed would silently credit its tail counts to
-        padding pages, a shorter one would starve real pages."""
+        padding pages, a shorter one would starve real pages. CIS counts
+        are integral by definition, and the round ADDS the feed to the
+        donated int32 n_cis state: a float feed would silently promote it
+        to f32 and break the donated-buffer dtype contract on the next
+        round, so non-integer dtypes are rejected (bool counts are cast)."""
         from repro.kernels import layout
 
+        new_cis = jnp.asarray(new_cis)
+        if not (jnp.issubdtype(new_cis.dtype, jnp.integer)
+                or new_cis.dtype == jnp.bool_):
+            raise TypeError(
+                f"new_cis must have an integer dtype, got {new_cis.dtype}: "
+                "CIS counts are integral, and a float feed would promote "
+                "the donated int32 n_cis state to f32"
+            )
         n = new_cis.shape[0]
         if n not in (self.m, self.m_state):
             raise ValueError(
                 f"new_cis has {n} entries but the scheduler holds {self.m} "
                 f"pages ({self.m_state} padded); feed one count per page"
             )
-        return layout.pad_to(new_cis, self.m_state, 0, dtype=None)
+        return layout.pad_to(new_cis, self.m_state, 0, dtype=jnp.int32)
 
     def ingest_and_schedule(self, new_cis: jax.Array):
         """One round: ingest the CIS feed counts, pick k pages to crawl."""
         new_cis = self._pad_feed(new_cis)
+        self._ensure_cand_coverage()
         self.round, (page_ids, values) = be.crawl_round(
             self.backend, self.round, new_cis,
             mesh=self.mesh, k=self.k_per_round, dt=self.round_period,
         )
+        self._maybe_adapt_cand_depth()
         return page_ids, values
+
+    # -- adaptive candidate-buffer depth (ROADMAP "candidate-buffer sizing
+    # -- from observed concentration") --------------------------------------
+    CAND_ADAPT_INTERVAL = 16  # rounds between host-side depth decisions
+    CAND_ADAPT_MARGIN = 2     # retained slack above the observed watermark
+
+    def _cand_floor(self, k: int) -> int:
+        """Smallest candidate depth whose per-shard buffer capacity still
+        covers the shard-local budget — below it, `select.shard_budget`'s
+        capacity clamp would cut k_loc under the global top-k requirement
+        (a mid-round ValueError on one shard, or a silently short
+        contribution on a winner-heavy shard of a multi-shard mesh), so the
+        depth adaptation must never go there. The budget comes from
+        `shard_budget` itself (auto depth, whose capacity never binds) so
+        this can't drift from the clamp rule the round applies."""
+        from repro.kernels import select as ksel
+
+        bst = self.round.backend
+        nb_local = bst.env_planes.shape[0] // self.mesh.size
+        lanes = bst.env_planes.shape[3]
+        k_loc, _ = ksel.shard_budget(
+            k, self.m_state // self.mesh.size, nb_local, self.mesh.size,
+            self.backend.k_local,
+        )
+        return -(-k_loc // (nb_local * lanes))
+
+    def _ensure_cand_coverage(self) -> None:
+        """Re-grow an adapted candidate depth that a later bandwidth raise
+        (`set_bandwidth` between depth decisions) has made too small to
+        cover the budget — cheap host-side arithmetic, runs every round."""
+        b = self.backend
+        if not (isinstance(b, be.FusedBackend) and b.adaptive_cand
+                and b.cand_per_lane is not None):
+            return
+        floor = self._cand_floor(self.k_per_round)
+        if b.cand_per_lane < floor:
+            self.backend = dataclasses.replace(b, cand_per_lane=floor)
+
+    def _maybe_adapt_cand_depth(self) -> None:
+        """Shrink (or re-grow) the fused candidate-buffer depth from the
+        realized per-lane-column winner counts the round tracks in
+        `FusedState.col_winners`. `auto_cand_per_lane` sizes for the worst
+        case — all k winners in one block; on well-mixed shards the realized
+        depth is far smaller, and every retained slot is one more
+        max/select extraction pass per active block per round. Host-side by
+        necessity (the depth is a static buffer shape), so a change re-jits
+        the round: decisions are taken every CAND_ADAPT_INTERVAL rounds and
+        only when the watermark actually moved. Exactness is never at
+        stake — an undersized buffer triggers the dense fallback, which
+        both restores the selection and (through the watermark) grows the
+        depth back."""
+        b = self.backend
+        if not (isinstance(b, be.FusedBackend) and b.adaptive_cand):
+            return
+        self._rounds_since_cand_adapt = getattr(
+            self, "_rounds_since_cand_adapt", 0) + 1
+        if self._rounds_since_cand_adapt < self.CAND_ADAPT_INTERVAL:
+            return
+        self._rounds_since_cand_adapt = 0
+        from repro.kernels import select as ksel
+
+        bst = self.round.backend
+        k = self.k_per_round
+        # The same clamp rule the round itself applies, with the depth left
+        # to auto-size: its cand output IS the worst-case auto depth.
+        _, auto = ksel.shard_budget(
+            k, self.m_state // self.mesh.size,
+            bst.env_planes.shape[0] // self.mesh.size, self.mesh.size,
+            b.k_local,
+        )
+        cur = b.cand_per_lane or auto
+        obs = int(np.asarray(jax.device_get(bst.col_winners)).max())
+        target = min(max(obs + self.CAND_ADAPT_MARGIN, 2,
+                         self._cand_floor(k)), auto)
+        if target != cur:
+            self.backend = dataclasses.replace(b, cand_per_lane=target)
+        # Fresh observation window either way.
+        self.round = dataclasses.replace(
+            self.round,
+            backend=bst._replace(col_winners=jnp.zeros_like(bst.col_winners)),
+        )
 
     # -- decentralized parameter refresh (§5.2 / App. E) -------------------
     def update_pages(self, page_ids, env_updates: Env):

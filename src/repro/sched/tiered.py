@@ -57,12 +57,18 @@ class BlockBounds(NamedTuple):
     exposure by beta instantly, which this bound ignores, so a skipped block
     that received signals can transiently hide a winner (the select-time
     fallback protects against over-aggressive thresholds and candidate
-    overflow, not unsound bounds). Feed blocks with fresh CIS back through
-    `update_block_bounds(..., evaluated | cis_seen, ...)` — or use only the
-    static `layout.asym_block_bounds`, which is a true upper bound and keeps
-    fused selection exactly equal to dense top-k (what `sched.service` and
-    the benchmarks do).
-    """
+    overflow, not unsound bounds). Blocks that received fresh CIS must
+    therefore drop their anchor: mark them never-evaluated
+    (`last_eval = -1` -> +inf bound -> exact re-evaluation next round),
+    which is what `backends.FusedBackend(adaptive_bounds=True)` does with
+    the round's CIS feed — selection then stays exactly equal to dense
+    top-k. The static `layout.asym_block_bounds` alone (the default) is a
+    true upper bound with no re-evaluation rule needed.
+
+    Sentinel convention: `last_eval = -1` means "never evaluated" (+inf
+    bound). Round indices are valid from 0 up — `crawl_clock` starts at 0,
+    so 0 must mean "evaluated on the first round", not "never".
+"""
 
     asym: jax.Array       # (n_blocks,) static bound max(mu_t/delta)
     slope: jax.Array      # (n_blocks,) max value growth rate bound
@@ -75,13 +81,12 @@ def init_block_bounds(env_planes: jax.Array) -> BlockBounds:
     from repro.kernels import layout
 
     asym = layout.asym_block_bounds(env_planes)
-    mu_blk = env_planes[:, layout.MU_T].max(axis=(1, 2))
     nb = env_planes.shape[0]
     return BlockBounds(
         asym=asym,
-        slope=_block_slope(mu_blk),
+        slope=_block_slope(layout.block_mu_max(env_planes)),
         blk_max=jnp.zeros((nb,), jnp.float32),
-        last_eval=jnp.zeros((nb,), jnp.int32),
+        last_eval=jnp.full((nb,), -1, jnp.int32),
     )
 
 
@@ -90,10 +95,11 @@ def current_block_bounds(
 ) -> jax.Array:
     """Optimistic per-block bound for this round. Values only shrink on crawl
     and grow at most `slope` per unit time since the last exact evaluation,
-    capped by the static asymptote; never-evaluated blocks get +inf."""
+    capped by the static asymptote; never-evaluated blocks (`last_eval = -1`,
+    NOT 0 — round 0 is a valid evaluation round) get +inf."""
     elapsed = (round_idx - bb.last_eval).astype(jnp.float32) * dt
     bound = jnp.minimum(bb.blk_max + bb.slope * elapsed, bb.asym)
-    return jnp.where(bb.last_eval == 0, jnp.inf, bound)
+    return jnp.where(bb.last_eval < 0, jnp.inf, bound)
 
 
 def update_block_bounds(
@@ -119,17 +125,17 @@ def refresh_block_params(
     parameter repack (`kernels.layout.repack_pages` /
     `CrawlScheduler.update_pages`): the static asymptote and slope change
     with the new (Delta, mu) and the stale block max is no longer an anchor,
-    so last_eval resets to 0 — the next round's bound is +inf and the block
-    re-evaluates exactly. Block-granular: untouched rows are not rewritten."""
+    so last_eval resets to the never-evaluated sentinel -1 — the next
+    round's bound is +inf and the block re-evaluates exactly.
+    Block-granular: untouched rows are not rewritten."""
     from repro.kernels import layout
 
-    asym_new = env_planes[block_ids, layout.V_INF].max(axis=(1, 2))
-    mu_new = env_planes[block_ids, layout.MU_T].max(axis=(1, 2))
+    mu_new = layout.block_mu_max(env_planes, block_ids)
     return BlockBounds(
-        asym=bb.asym.at[block_ids].set(asym_new),
+        asym=layout.refresh_block_bounds(env_planes, bb.asym, block_ids),
         slope=bb.slope.at[block_ids].set(_block_slope(mu_new)),
         blk_max=bb.blk_max.at[block_ids].set(0.0),
-        last_eval=bb.last_eval.at[block_ids].set(0),
+        last_eval=bb.last_eval.at[block_ids].set(-1),
     )
 
 
@@ -152,7 +158,7 @@ def init_tiers(d: DerivedEnv, block: int) -> TierState:
         cached_vals=jnp.zeros((m,), jnp.float32),
         blk_asym=asym,
         blk_slope=slope,
-        last_eval=jnp.zeros((nb,), jnp.int32),
+        last_eval=jnp.full((nb,), -1, jnp.int32),
     )
 
 
@@ -180,9 +186,10 @@ def tiered_select(
     cached_blk_max = tiers.cached_vals.reshape(nb, block).max(axis=1)
     bound = jnp.minimum(cached_blk_max + tiers.blk_slope * elapsed, tiers.blk_asym)
 
-    # Threshold: k-th best cached value, relaxed.
+    # Threshold: k-th best cached value, relaxed. Never-evaluated blocks
+    # (last_eval = -1; 0 means "evaluated at round 0") always evaluate.
     thresh = jax.lax.top_k(tiers.cached_vals, k)[0][-1] * hysteresis
-    evaluate = (bound >= thresh) | (tiers.last_eval == 0)
+    evaluate = (bound >= thresh) | (tiers.last_eval < 0)
 
     # Exact values for selected blocks only (masked compute: on TPU the Pallas
     # kernel skips non-selected blocks entirely via pl.when; here we compute

@@ -1,0 +1,609 @@
+"""The adaptive skip-control loop: refreshing BlockBounds + CIS-seen
+re-evaluation in the jitted round (exact vs dense top-k under signal jumps),
+in-jit per-shard hysteresis tighten/relax, host-side candidate-depth
+adaptation, fallback-round diagnostics, the round-0 sentinel, feed-dtype
+validation, and the k ~ m budget edge."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import Env, derive
+from repro.kernels import layout, select
+from repro.sched import backends as be
+from repro.sched import tiered
+from repro.sched.service import CrawlScheduler
+from repro.sim import uniform_instance
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _sorted_env(key, m):
+    env = uniform_instance(key, m)
+    order = jnp.argsort(-(env.mu / env.delta))
+    return jax.tree.map(lambda x: x[order], env)
+
+
+def _schedulers(env, k, dt=0.05, tau_max=2.0, **fused_kw):
+    """Adaptive-bounds fused + dense oracle on the same warm trajectory."""
+    mesh = _mesh1()
+    m = env.m
+    fused = CrawlScheduler(env, mesh, bandwidth=float(k), round_period=dt,
+                           backend=be.FusedBackend(block_rows=8,
+                                                   adaptive_bounds=True,
+                                                   **fused_kw))
+    dense = CrawlScheduler(env, mesh, bandwidth=float(k), round_period=dt,
+                           backend=be.DenseBackend())
+    tau = jax.random.uniform(jax.random.PRNGKey(99), (m,), maxval=tau_max)
+    fused.round = dataclasses.replace(
+        fused.round,
+        tau_elap=jnp.zeros((fused.m_state,)).at[:m].set(tau))
+    dense.round = dataclasses.replace(dense.round, tau_elap=jnp.copy(tau))
+    return fused, dense
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: adaptive bounds == dense top-k, including under CIS jumps.
+# ---------------------------------------------------------------------------
+
+def test_adaptive_bounds_exact_and_skips_more_than_static():
+    """With adaptive_bounds the refreshing anchors must (a) keep selection
+    bit-identical to dense top-k every round and (b) skip strictly more
+    blocks than the static asymptote bound once warm."""
+    m, k = 30_000, 32
+    env = _sorted_env(jax.random.PRNGKey(0), m)
+    fused, dense = _schedulers(env, k)
+    static = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                            round_period=0.05,
+                            backend=be.FusedBackend(block_rows=8))
+    static.round = dataclasses.replace(
+        static.round, tau_elap=jnp.copy(fused.round.tau_elap))
+    zero = jnp.zeros((m,), jnp.int32)
+    fr_a, fr_s = [], []
+    for r in range(25):
+        ids_f, _ = fused.ingest_and_schedule(zero)
+        ids_s, _ = static.ingest_and_schedule(zero)
+        ids_d, _ = dense.ingest_and_schedule(zero)
+        assert set(map(int, ids_f)) == set(map(int, ids_d)), r
+        assert set(map(int, ids_s)) == set(map(int, ids_d)), r
+        fr_a.append(float(fused.round.backend.frac_active.mean()))
+        fr_s.append(float(static.round.backend.frac_active.mean()))
+    assert np.mean(fr_a[-10:]) < np.mean(fr_s[-10:]), (fr_a, fr_s)
+    assert min(fr_a) < 1.0
+
+
+def test_cis_seen_blocks_lose_their_anchor():
+    """The re-evaluation rule: any block whose pages received CIS this round
+    must be re-marked never-evaluated (+inf bound -> exact re-evaluation),
+    so a skipped block can never hide a signal-jumped winner."""
+    m, k = 30_000, 32
+    env = _sorted_env(jax.random.PRNGKey(1), m)
+    fused, dense = _schedulers(env, k)
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(10):
+        fused.ingest_and_schedule(zero)
+        dense.ingest_and_schedule(zero)
+    bst = fused.round.backend
+    skipped = np.flatnonzero(np.asarray(bst.last_eval) <
+                             int(fused.round.crawl_clock) - 1)
+    assert skipped.size, "warm loop never skipped a block"
+    # Inject CIS into pages of one currently-skipped (low-value) block.
+    bp = bst.env_planes.shape[2] * bst.env_planes.shape[3]
+    blk = int(skipped[-1])
+    feed = np.zeros((m,), np.int32)
+    lo, hi = blk * bp, min((blk + 1) * bp, m)
+    feed[lo:hi] = 50
+    ids_f, _ = fused.ingest_and_schedule(jnp.asarray(feed))
+    ids_d, _ = dense.ingest_and_schedule(jnp.asarray(feed))
+    assert set(map(int, ids_f)) == set(map(int, ids_d))
+    # The fed block lost its anchor...
+    assert int(fused.round.backend.last_eval[blk]) == -1
+    # ...and therefore re-evaluates exactly next round, again == dense.
+    ids_f, _ = fused.ingest_and_schedule(zero)
+    ids_d, _ = dense.ingest_and_schedule(zero)
+    assert set(map(int, ids_f)) == set(map(int, ids_d))
+    assert int(fused.round.backend.last_eval[blk]) == \
+        int(fused.round.crawl_clock) - 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), jump=st.integers(1, 60),
+       period=st.integers(2, 4))
+def test_property_adaptive_equals_dense_under_cis_jumps(seed, jump, period):
+    """Property: across rounds with randomly-placed CIS jumps, adaptive-
+    bounds fused selection is identical to dense top-k on every round."""
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(seed), m)
+    fused, dense = _schedulers(env, k)
+    rng = np.random.default_rng(seed)
+    for r in range(8):
+        feed = np.zeros((m,), np.int32)
+        if r % period == period - 1:
+            idx = rng.choice(m, 200, replace=False)
+            feed[idx] = rng.integers(1, jump + 1, 200)
+        feed = jnp.asarray(feed)
+        ids_f, vals_f = fused.ingest_and_schedule(feed)
+        ids_d, vals_d = dense.ingest_and_schedule(feed)
+        assert set(map(int, ids_f)) == set(map(int, ids_d)), (seed, r)
+        np.testing.assert_allclose(np.sort(np.asarray(vals_f)),
+                                   np.sort(np.asarray(vals_d)), rtol=1e-5)
+
+
+def test_adaptive_multishard_cis_property_subprocess():
+    """Acceptance property on a 4-shard mesh: adaptive-bounds selection
+    equals dense top-k across rounds with CIS jumps, while blocks are
+    actually skipped."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.sched.service import CrawlScheduler
+        from repro.sched import backends as be
+        from repro.sim import uniform_instance
+        mesh = jax.make_mesh((4,), ("data",))
+        m, k = 30_000, 32
+        for seed in range(3):
+            env = uniform_instance(jax.random.PRNGKey(seed), m)
+            order = jnp.argsort(-(env.mu / env.delta))
+            env = jax.tree.map(lambda x: x[order], env)
+            fused = CrawlScheduler(env, mesh, bandwidth=float(k),
+                                   round_period=0.05,
+                                   backend=be.FusedBackend(
+                                       block_rows=8, adaptive_bounds=True))
+            dense = CrawlScheduler(env, mesh, bandwidth=float(k),
+                                   round_period=0.05,
+                                   backend=be.DenseBackend())
+            rng = np.random.default_rng(seed)
+            fracs = []
+            for r in range(10):
+                feed = np.zeros((m,), np.int32)
+                if r in (4, 7):  # CIS jumps once the skip loop is warm
+                    idx = rng.choice(m, 300, replace=False)
+                    feed[idx] = rng.integers(1, 40, 300)
+                feed = jnp.asarray(feed)
+                ids_f, _ = fused.ingest_and_schedule(feed)
+                ids_d, _ = dense.ingest_and_schedule(feed)
+                assert set(map(int, ids_f)) == set(map(int, ids_d)), (seed, r)
+                fracs.append(float(fused.round.backend.frac_active.mean()))
+            assert min(fracs) < 1.0, fracs
+        print("ADAPTIVE_MULTISHARD_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       env=env, timeout=600)
+    assert "ADAPTIVE_MULTISHARD_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: in-jit hysteresis tighten/relax.
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_tightens_then_relaxes():
+    m, k = 20_000, 16
+    env = _sorted_env(jax.random.PRNGKey(2), m)
+    mesh = _mesh1()
+    s = CrawlScheduler(env, mesh, bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8))
+    zero = jnp.zeros((m,), jnp.int32)
+    h0 = float(s.round.backend.hyst[0])
+    assert h0 == pytest.approx(be.DEFAULT_HYSTERESIS)
+    clean, h = 0, h0
+    for _ in range(12):
+        s.ingest_and_schedule(zero)
+        h_new = float(s.round.backend.hyst[0])
+        if not bool(s.round.backend.fell_back.any()):
+            assert h_new == pytest.approx(
+                min(h + be.HYSTERESIS_TIGHTEN, be.HYSTERESIS_MAX), abs=1e-6)
+            clean += 1
+        else:
+            assert h_new == pytest.approx(
+                max(h - be.HYSTERESIS_RELAX, be.HYSTERESIS_MIN), abs=1e-6)
+        h = h_new
+    assert clean > 0 and h > h0  # the loop actually tightened
+
+    # cand_per_lane=1 can never hold the winners: every round falls back,
+    # so the hysteresis must walk down to the floor.
+    s2 = CrawlScheduler(env, mesh, bandwidth=float(k),
+                        backend=be.FusedBackend(block_rows=8,
+                                                cand_per_lane=1))
+    for _ in range(50):
+        s2.ingest_and_schedule(zero)
+    assert bool(s2.round.backend.fell_back.all())
+    assert float(s2.round.backend.hyst[0]) == pytest.approx(
+        be.HYSTERESIS_MIN, abs=1e-6)
+
+
+def test_fixed_hysteresis_opt_out():
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(3), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_hysteresis=False,
+                                               hysteresis=0.8))
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(5):
+        s.ingest_and_schedule(zero)
+    assert float(s.round.backend.hyst[0]) == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: candidate-depth adaptation from realized winner concentration.
+# ---------------------------------------------------------------------------
+
+def test_adaptive_cand_depth_shrinks_and_stays_exact():
+    m, k = 30_000, 128
+    env = uniform_instance(jax.random.PRNGKey(4), m)  # well-mixed
+    mesh = _mesh1()
+    s = CrawlScheduler(env, mesh, bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_cand=True))
+    dense = CrawlScheduler(env, mesh, bandwidth=float(k),
+                           backend=be.DenseBackend())
+    auto = select.auto_cand_per_lane(k)
+    zero = jnp.zeros((m,), jnp.int32)
+    for r in range(CrawlScheduler.CAND_ADAPT_INTERVAL + 4):
+        ids_f, _ = s.ingest_and_schedule(zero)
+        ids_d, _ = dense.ingest_and_schedule(zero)
+        assert set(map(int, ids_f)) == set(map(int, ids_d)), r
+    got = s.backend.cand_per_lane
+    assert got is not None and got < auto, (got, auto)
+    # the watermark window was reset for the next decision
+    assert int(np.asarray(s.round.backend.col_winners).max()) <= got
+
+
+def test_adaptive_cand_depth_respects_coverage_floor():
+    """Regression: the depth adaptation must never shrink the buffer below
+    the capacity that covers the shard-local budget — with k comparable to
+    the per-shard capacity at small depths, a tie-degenerate observation
+    window would otherwise shrink to a depth whose capacity clamp cuts
+    k_loc under the global top-k (ValueError mid-run / silent shortfall)."""
+    m, k = 2000, 512  # pads to 2 blocks of 1024: floor = ceil(512/256) = 2
+    env = uniform_instance(jax.random.PRNGKey(15), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_cand=True))
+    dense = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                           backend=be.DenseBackend())
+    zero = jnp.zeros((m,), jnp.int32)
+    for r in range(2 * CrawlScheduler.CAND_ADAPT_INTERVAL + 2):
+        ids_f, _ = s.ingest_and_schedule(zero)
+        ids_d, _ = dense.ingest_and_schedule(zero)
+        assert set(map(int, ids_f)) == set(map(int, ids_d)), r
+        cand = s.backend.cand_per_lane
+        if cand is not None:
+            assert cand >= s._cand_floor(k), (r, cand)
+
+
+def test_adapted_cand_depth_survives_bandwidth_raise():
+    """A bandwidth raise between depth decisions must not leave the round
+    with a buffer too small to cover the new budget."""
+    m = 30_000
+    env = uniform_instance(jax.random.PRNGKey(16), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=64.0,
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_cand=True))
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(CrawlScheduler.CAND_ADAPT_INTERVAL + 1):
+        s.ingest_and_schedule(zero)
+    assert s.backend.cand_per_lane is not None  # a decision was taken
+    s.set_bandwidth(8192.0)  # k jumps 128x between decisions
+    ids, _ = s.ingest_and_schedule(zero)  # must not raise
+    assert ids.shape == (8192,)
+    assert (s.backend.cand_per_lane or 0) >= s._cand_floor(s.k_per_round)
+
+
+def test_adaptive_cand_depth_regrows_after_overflow():
+    m, k = 20_000, 64
+    env = uniform_instance(jax.random.PRNGKey(5), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_cand=True,
+                                               cand_per_lane=1))
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(CrawlScheduler.CAND_ADAPT_INTERVAL + 1):
+        s.ingest_and_schedule(zero)
+    # depth 1 forced dense fallbacks; the watermark grew the buffer back
+    assert (s.backend.cand_per_lane or 0) > 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: round-0 sentinel (last_eval = -1, not 0).
+# ---------------------------------------------------------------------------
+
+def test_round0_evaluation_anchors_the_bound():
+    """Regression: a block evaluated at round 0 must get a finite bound
+    (previously `last_eval == 0` doubled as the never-evaluated sentinel, so
+    first-round evaluations kept a +inf bound and re-evaluated forever)."""
+    m = 4 * 8 * layout.LANES
+    env = uniform_instance(jax.random.PRNGKey(6), m)
+    shard = layout.pack_shard(derive(env), n_terms=8, block_rows=8)
+    bb = tiered.init_block_bounds(shard.env)
+    assert (np.asarray(bb.last_eval) == -1).all()
+    assert np.isinf(np.asarray(
+        tiered.current_block_bounds(bb, jnp.int32(0), 1.0))).all()
+
+    evaluated = jnp.asarray([True, True, False, False])
+    bb = tiered.update_block_bounds(bb, jnp.full((4,), 0.5), evaluated,
+                                    jnp.int32(0))
+    bound = np.asarray(tiered.current_block_bounds(bb, jnp.int32(1), 1.0))
+    assert np.isfinite(bound[:2]).all(), bound  # anchored at round 0
+    assert np.isinf(bound[2:]).all(), bound     # still never evaluated
+
+
+def test_round0_sentinel_in_service_loop():
+    """End-to-end: after the very first (clock 0) round, evaluated blocks
+    must carry last_eval = 0 and finite bounds — not the sentinel."""
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(7), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k), round_period=0.05,
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_bounds=True))
+    s.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+    last = np.asarray(s.round.backend.last_eval)
+    assert (last == 0).all(), last  # all evaluated on the cold first round
+    assert np.isfinite(np.asarray(s.round.backend.blk_max)).all()
+
+
+def test_init_tiers_round0_sentinel():
+    from repro.core import tables
+
+    m, block, k = 4096, 512, 16
+    env = uniform_instance(jax.random.PRNGKey(8), m)
+    d = derive(env)
+    table = tables.build_ncis_table(d, n_grid=64)
+    tiers = tiered.init_tiers(d, block)
+    assert (np.asarray(tiers.last_eval) == -1).all()
+    tau = jax.random.uniform(jax.random.PRNGKey(9), (m,), maxval=5.0)
+    n = jnp.zeros((m,), jnp.int32)
+    # Evaluate everything at round 0; afterwards blocks below threshold
+    # must be skippable (previously last_eval == 0 forced them active).
+    _, _, tiers, frac0 = tiered.tiered_select(
+        tau, n, d, table, tiers, jnp.int32(0), 0.01, k)
+    assert frac0 == 1.0
+    assert (np.asarray(tiers.last_eval) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fallback-round diagnostics.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_fallback_round_diagnostics_are_sound(impl):
+    """On a dense exact-recovery round, frac_active must report 1.0 (the
+    dense pass evaluated everything) and blk_max must be the dense per-block
+    maxima — a sound anchor — instead of -inf for skipped blocks."""
+    block_rows = 8
+    bp = block_rows * layout.LANES
+    m, k, cand = 4 * bp, 16, 2
+    mu = jnp.ones((m,)) * 1e-3
+    mu = mu.at[jnp.arange(3 * cand) * layout.LANES].set(100.0)
+    env = Env(delta=jnp.full((m,), 0.5), mu=mu, lam=jnp.full((m,), 0.5),
+              nu=jnp.full((m,), 0.3))
+    shard = layout.pack_shard(derive(env), n_terms=8, block_rows=block_rows)
+    tau_pad, n_pad = layout.pad_state(jnp.full((m,), 5.0),
+                                      jnp.zeros((m,), jnp.int32),
+                                      shard.m_pad)
+    # Force-skip blocks 2..3 via -inf bounds so the pre-fallback skip
+    # fraction (0.5) differs from the sound fallback report (1.0).
+    bounds = jnp.where(jnp.arange(4) < 2, jnp.inf, -jnp.inf)
+    sel = select.fused_select(tau_pad, n_pad, shard, k, thresh=0.0,
+                              bounds=bounds, impl=impl, cand_per_lane=cand)
+    assert bool(sel.fell_back)
+    assert float(sel.frac_active) == 1.0
+    from repro.kernels import ops
+    vals, _ = ops.crawl_value_packed(tau_pad, n_pad, shard.env,
+                                     n_terms=shard.n_terms)
+    dense_blk = np.asarray(vals.reshape(4, -1).max(axis=1))
+    np.testing.assert_allclose(np.asarray(sel.blk_max), dense_blk, rtol=1e-6)
+    assert np.isfinite(np.asarray(sel.blk_max)).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: CIS feed dtype contract.
+# ---------------------------------------------------------------------------
+
+def test_float_feed_rejected_integer_feed_cast():
+    m = 3000
+    env = uniform_instance(jax.random.PRNGKey(10), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                       backend=be.FusedBackend(block_rows=8))
+    with pytest.raises(TypeError, match="integer"):
+        s.ingest_and_schedule(jnp.zeros((m,), jnp.float32))
+    with pytest.raises(TypeError, match="integer"):
+        s.ingest_and_schedule(np.ones((m,)))  # f64 numpy feed
+    # integer and bool feeds are cast to the state dtype; the donated n_cis
+    # plane must stay int32 across rounds (the dtype contract).
+    for feed in (np.ones((m,), np.int16), np.ones((m,), bool),
+                 jnp.ones((m,), jnp.int32)):
+        s.ingest_and_schedule(feed)
+        assert s.round.n_cis.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Satellite: k ~ m budget edge on small shards.
+# ---------------------------------------------------------------------------
+
+def test_budget_near_corpus_single_shard():
+    m = 3000  # pads to 3072: k above the real page count but under padded
+    k = 2900
+    env = uniform_instance(jax.random.PRNGKey(11), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8))
+    ids, vals = s.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+    assert ids.shape == (k,)
+    assert int(ids.max()) < m  # padding never selected
+    assert len(set(map(int, ids))) == k
+
+
+def test_budget_above_shard_size_subprocess():
+    """Regression (k ~ m edge): a budget larger than one shard's page count
+    used to fire the in-jit k <= n_cand assert / local top_k error; the
+    shard-local k must clamp to the shard size and stay exact."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.sched.service import CrawlScheduler
+        from repro.sched import backends as be
+        from repro.sim import uniform_instance
+        m, k = 3000, 2000  # 4 shards of 1024 padded pages: k > m/shard
+        mesh = jax.make_mesh((4,), ("data",))
+        env = uniform_instance(jax.random.PRNGKey(0), m)
+        s = CrawlScheduler(env, mesh, bandwidth=float(k),
+                           backend=be.FusedBackend(block_rows=8))
+        d = CrawlScheduler(env, mesh, bandwidth=float(k),
+                           backend=be.DenseBackend())
+        zero = jnp.zeros((m,), jnp.int32)
+        for _ in range(2):
+            ids_f, _ = s.ingest_and_schedule(zero)
+            ids_d, _ = d.ingest_and_schedule(zero)
+            assert ids_f.shape == (k,)
+            assert int(ids_f.max()) < m
+            assert set(map(int, ids_f)) == set(map(int, ids_d))
+        print("BUDGET_EDGE_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       env=env, timeout=600)
+    assert "BUDGET_EDGE_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Satellite: checkpoint round-trip of the grown FusedState.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_grown_fused_state(tmp_path):
+    from repro import checkpoint as ckpt
+
+    m, k = 20_000, 32
+    env = _sorted_env(jax.random.PRNGKey(12), m)
+    backend = be.FusedBackend(block_rows=8, adaptive_bounds=True)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k), round_period=0.05,
+                       backend=backend)
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(6):
+        s.ingest_and_schedule(zero)
+    sd = jax.device_get(s.state_dict())
+    ckpt.save(str(tmp_path), 1, sd)
+
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=float(k), round_period=0.05,
+                        backend=backend)
+    got, _, _ = ckpt.restore_latest(str(tmp_path), s2.state_dict())
+    s2.load_state_dict(got)
+    b1, b2 = sd["backend"], s2.round.backend
+    for name in ("thresh", "blk_max", "last_eval", "hyst", "col_winners",
+                 "slope", "bounds"):
+        np.testing.assert_array_equal(np.asarray(getattr(b1, name)),
+                                      np.asarray(getattr(b2, name)), name)
+    # The restored service resumes warm AND exact.
+    dense = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                           round_period=0.05, backend=be.DenseBackend())
+    dense.load_state_dict({"tau_elap": sd["tau_elap"][:m],
+                           "n_cis": sd["n_cis"][:m],
+                           "crawl_clock": sd["crawl_clock"]})
+    ids2, _ = s2.ingest_and_schedule(zero)
+    ids_d, _ = dense.ingest_and_schedule(zero)
+    assert set(map(int, ids2)) == set(map(int, ids_d))
+    assert float(s2.round.backend.frac_active.mean()) < 1.0
+
+
+def test_pre_adaptive_checkpoint_restores_into_grown_state(tmp_path):
+    """A snapshot taken before the adaptive planes existed (backend = the
+    original five FusedState slots) restores through the strict=False
+    path-matched restore: old slots load, appended planes keep their init
+    values, and the service keeps running exactly."""
+    from repro import checkpoint as ckpt
+
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(13), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=8))
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(3):
+        s.ingest_and_schedule(zero)
+    sd = jax.device_get(s.state_dict())
+    # A pre-adaptive snapshot: only the first five FusedState fields existed
+    # (checkpoint paths carry the *field names*, so restore matches by name).
+    import collections
+    LegacyFusedState = collections.namedtuple(
+        "FusedState",
+        ["env_planes", "thresh", "bounds", "frac_active", "fell_back"])
+    legacy = dict(sd, backend=LegacyFusedState(*tuple(sd["backend"])[:5]))
+    ckpt.save(str(tmp_path), 1, legacy)
+
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                        backend=be.FusedBackend(block_rows=8))
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1, s2.state_dict())
+    got, _ = ckpt.restore(str(tmp_path), 1,
+                          jax.device_get(s2.state_dict()), strict=False)
+    s2.load_state_dict(got)
+    b = s2.round.backend
+    np.testing.assert_array_equal(np.asarray(b.thresh),
+                                  np.asarray(sd["backend"].thresh))
+    assert (np.asarray(b.last_eval) == -1).all()  # appended plane kept init
+    dense = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                           backend=be.DenseBackend())
+    dense.load_state_dict({"tau_elap": sd["tau_elap"][:m],
+                           "n_cis": sd["n_cis"][:m],
+                           "crawl_clock": sd["crawl_clock"]})
+    ids2, _ = s2.ingest_and_schedule(zero)
+    ids_d, _ = dense.ingest_and_schedule(zero)
+    assert set(map(int, ids2)) == set(map(int, ids_d))
+
+
+def test_update_pages_resets_adaptive_rows():
+    """A parameter repack must drop the touched blocks' anchors (their
+    recorded maxima describe the old parameters) and refresh the slope."""
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(14), m)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k), round_period=0.05,
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_bounds=True))
+    zero = jnp.zeros((m,), jnp.int32)
+    for _ in range(4):
+        s.ingest_and_schedule(zero)
+    assert (np.asarray(s.round.backend.last_eval) >= 0).all()
+    hot = np.arange(0, 64)
+    upd = Env(delta=jnp.full((64,), 2.0), mu=jnp.full((64,), 300.0),
+              lam=jnp.full((64,), 0.5), nu=jnp.full((64,), 0.1))
+    s.update_pages(hot, upd)
+    bst = s.round.backend
+    bp = bst.env_planes.shape[2] * bst.env_planes.shape[3]
+    touched = np.unique(hot // bp)
+    assert (np.asarray(bst.last_eval)[touched] == -1).all()
+    assert (np.asarray(bst.blk_max)[touched] == 0.0).all()
+    mu_blk = np.asarray(layout.block_mu_max(bst.env_planes))
+    np.testing.assert_allclose(
+        np.asarray(bst.slope),
+        mu_blk * np.exp(-1.0) * 2.0, rtol=1e-6)
+    # and the refreshed pages steer the next selection, exactly.
+    env_full = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), env)
+    env_full = Env(
+        delta=env_full.delta.at[hot].set(upd.delta),
+        mu=env_full.mu.at[hot].set(upd.mu),
+        lam=env_full.lam.at[hot].set(upd.lam),
+        nu=env_full.nu.at[hot].set(upd.nu),
+    )
+    ref = CrawlScheduler(env_full, _mesh1(), bandwidth=float(k),
+                         round_period=0.05, backend=be.DenseBackend())
+    ref.round = dataclasses.replace(
+        ref.round, tau_elap=jnp.copy(s.round.tau_elap[:m]),
+        n_cis=jnp.copy(s.round.n_cis[:m]))
+    ids_f, _ = s.ingest_and_schedule(zero)
+    ids_d, _ = ref.ingest_and_schedule(zero)
+    assert set(map(int, ids_f)) == set(map(int, ids_d))

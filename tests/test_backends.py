@@ -246,8 +246,10 @@ def test_refresh_block_params_consistent_with_init():
                                np.asarray(ref.asym[:2]), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(bb2.slope[:2]),
                                np.asarray(ref.slope[:2]), rtol=1e-6)
-    # touched blocks lose their stale anchor (re-evaluate next round)...
-    assert (np.asarray(bb2.last_eval[:2]) == 0).all()
+    # touched blocks lose their stale anchor (the -1 never-evaluated
+    # sentinel: +inf bound, re-evaluate next round; 0 would collide with
+    # "evaluated at round 0")...
+    assert (np.asarray(bb2.last_eval[:2]) == -1).all()
     assert (np.asarray(bb2.blk_max[:2]) == 0.0).all()
     # ...untouched blocks keep theirs.
     np.testing.assert_array_equal(np.asarray(bb2.asym[2:]),
