@@ -75,6 +75,7 @@ def kernel_bench():
 
     refresh_repack_bench()
     fused_adaptive_bench()
+    macro_round_bench()
 
 
 def refresh_repack_bench():
@@ -239,6 +240,146 @@ def fused_adaptive_bench():
          f"hyst={float(adaptive.round.backend.hyst[0]):.2f};"
          f"speedup_vs_static_bound={us[1]/us[0]:.2f}x;"
          f"state_planes_donated_alias={int(aliased)}")
+
+
+def macro_round_bench():
+    """The macro-round scan pipeline (`sched/macro_round`): R rounds under
+    one jitted donated `lax.scan` (`CrawlScheduler.run_rounds`) vs R
+    sequential `ingest_and_schedule` calls at identical seeds/feeds.
+
+    Guards, in order: (1) the stacked macro selection must be BIT-IDENTICAL
+    to the sequential loop round by round; (2) the feed batch must enter the
+    jitted macro-round as runtime parameters — a closed-over batch would be
+    constant-folded at trace time and the scan timing would be meaningless;
+    (3) the donated packed env planes must alias through the whole
+    macro-round (no state-plane copy). Also emits
+    `sched/round_fused_adaptive_sparse`: the CIS-mass re-evaluation rule vs
+    the PR-3 blanket re-mark on the same sparse feed, both gated exact."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
+
+    m = prof(1 << 20, 1 << 22)
+    k = 256
+    R = 32
+    dt = 1.0
+    mesh = jax.make_mesh((1,), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    # Value-correlated blocks (the paper's production tiers).
+    order = jnp.argsort(-(env.mu / env.delta))
+    env = jax.tree.map(lambda x: x[order], env)
+    tau0 = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=2.0)
+
+    def build(**kw):
+        s = CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
+                           round_period=dt,
+                           backend=be.FusedBackend(adaptive_bounds=True,
+                                                   **kw))
+        s.round = dataclasses.replace(s.round, tau_elap=jnp.copy(tau0))
+        return s
+
+    seq, mac = build(), build()
+    # Sparse CIS feed batch, identical for both paths: ~64 signalled pages
+    # per round (the production regime the sparse macro ingest targets).
+    rng = np.random.default_rng(0)
+    nnz = 64
+    feeds_np = np.zeros((R, m), np.int32)
+    for r in range(R):
+        idx = rng.choice(m, nnz, replace=False)
+        feeds_np[r, idx] = rng.poisson(2.0, nnz).astype(np.int32) + 1
+    feeds = jnp.asarray(feeds_np)
+
+    # Guard (2): the feed batch reaches the compiled macro-round as runtime
+    # parameters (REPRO memory: closed-over inputs constant-fold and the
+    # "timed" call is a memcpy). The sparse (ids, counts) arrays must both
+    # appear in the entry computation's signature.
+    sf = mac._sparse_feed_batch(feeds)
+    cap = sf.ids.shape[1]
+    lowered = be.crawl_rounds.lower(
+        mac.backend, mac.round, sf, mesh=mesh, k=mac.k_per_round, dt=dt)
+    import re
+
+    txt = lowered.as_text()
+    n_feed_params = len(re.findall(
+        rf"%arg\d+: tensor<{R}x{cap}xi32>", txt))
+    assert n_feed_params >= 2, (
+        "feed batch is not a jit argument of the macro-round — timings "
+        "would be constant-folded fiction")
+
+    # Guard (1): stacked macro selection == R sequential rounds, bit-exact
+    # (this also compiles + warms both paths on the same trajectory).
+    p_env = mac.round.backend.env_planes.unsafe_buffer_pointer()
+    ids_m, vals_m = mac.run_rounds(feeds)
+    ids_m, vals_m = np.asarray(ids_m), np.asarray(vals_m)
+    for r in range(R):
+        ids_s, vals_s = seq.ingest_and_schedule(feeds[r])
+        assert np.array_equal(ids_m[r], np.asarray(ids_s)), (
+            f"macro selection diverged from sequential at round {r}")
+        assert np.array_equal(vals_m[r], np.asarray(vals_s)), r
+
+    # Timing: interleaved reps, per-round medians.
+    reps = prof(5, 7)
+    ts, tm = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for r in range(R):
+            _, v = seq.ingest_and_schedule(feeds[r])
+        jax.block_until_ready(v)
+        ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _, v = mac.run_rounds(feeds)
+        jax.block_until_ready(v)
+        tm.append(time.perf_counter() - t0)
+    us_seq = float(np.median(ts)) / R * 1e6
+    us_mac = float(np.median(tm)) / R * 1e6
+    # Guard (3): no state-plane copy across the whole run.
+    aliased = mac.round.backend.env_planes.unsafe_buffer_pointer() == p_env
+    assert aliased, "macro-round copied the donated env planes"
+    frac = float(np.asarray(mac.macro_diagnostics.frac_active).mean())
+    emit("sched/macro_round", us_mac,
+         f"m={m};k={k};R={R};dt={dt};pages_per_s={m/(us_mac/1e6):.3e};"
+         f"speedup_vs_sequential={us_seq/us_mac:.2f}x;"
+         f"seq_us_per_round={us_seq:.1f};frac_active={frac:.3f};"
+         f"feed_nnz_per_round={nnz};feeds_as_jit_args=1;exact_equal=1;"
+         f"state_planes_donated_alias={int(aliased)}")
+
+    # --- CIS-mass rule vs blanket re-mark on the same sparse feed --------
+    mass_s = build()
+    remark_s = build(cis_rule="remark")
+    dense_s = CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
+                             round_period=dt, backend=be.DenseBackend())
+    dense_s.round = dataclasses.replace(dense_s.round,
+                                        tau_elap=jnp.copy(tau0))
+    n_rounds = prof(24, 40)
+    rng = np.random.default_rng(1)
+    fr = {"mass": [], "remark": []}
+    for r in range(n_rounds):
+        feed = np.zeros((m,), np.int32)
+        idx = rng.choice(m, 8, replace=False)  # a few weak signals/round
+        feed[idx] = 1
+        feed = jnp.asarray(feed)
+        ids_a, _ = mass_s.ingest_and_schedule(feed)
+        ids_b, _ = remark_s.ingest_and_schedule(feed)
+        if r < 4:  # exactness gate on the warming rounds
+            ids_d, _ = dense_s.ingest_and_schedule(feed)
+            assert set(np.asarray(ids_a).tolist()) \
+                == set(np.asarray(ids_d).tolist()), r
+            assert set(np.asarray(ids_b).tolist()) \
+                == set(np.asarray(ids_d).tolist()), r
+        fr["mass"].append(float(mass_s.round.backend.frac_active.mean()))
+        fr["remark"].append(float(remark_s.round.backend.frac_active.mean()))
+    f_mass = float(np.mean(fr["mass"][-n_rounds // 2:]))
+    f_remark = float(np.mean(fr["remark"][-n_rounds // 2:]))
+    assert f_mass < f_remark, (
+        f"CIS-mass rule did not out-skip the blanket re-mark: "
+        f"{f_mass:.3f} vs {f_remark:.3f}")
+    emit("sched/round_fused_adaptive_sparse", 0.0,
+         f"m={m};k={k};dt={dt};feed_nnz_per_round=8;"
+         f"frac_active_mass={f_mass:.3f};frac_active_remark={f_remark:.3f};"
+         f"extra_skip={f_remark - f_mass:.3f};selection_exact=1")
 
 
 def sched_bench():

@@ -298,3 +298,13 @@ def block_mu_max(env: jax.Array, block_ids: jax.Array | None = None) -> jax.Arra
     same plane reduction as a from-scratch `init_block_bounds`."""
     sel = env if block_ids is None else env[block_ids]
     return sel[:, MU_T].max(axis=(1, 2))
+
+
+def block_beta_max(env: jax.Array, block_ids: jax.Array | None = None) -> jax.Array:
+    """Per-block max time-equivalent of one CIS (the BETA plane), feeding the
+    CIS-mass re-evaluation rule (`sched.tiered.accumulate_cis_mass`): a block
+    that received n signals since its last exact evaluation has advanced its
+    best page's exposure clock by at most beta_max * n. Padding pages pack
+    beta = 0 and never contribute. Block-granular like `block_mu_max`."""
+    sel = env if block_ids is None else env[block_ids]
+    return sel[:, BETA].max(axis=(1, 2))

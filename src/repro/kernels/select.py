@@ -27,9 +27,14 @@ page id in both) unless
   * some lane column's last retained candidate is >= kth (that column may
     have dropped a page that belongs in the top-k), or
   * thresh > kth (a skipped block's bound — an upper bound on its best page —
-    could exceed kth, i.e. a winner may be hiding in a skipped block).
+    could exceed kth, i.e. a winner may be hiding in a skipped block), or
+  * a value tie straddles the k-th boundary (more candidates >= kth than k):
+    the candidate ranking top_ks by value with ties broken by buffer
+    position, then re-ranks only the k selected pairs by (value desc, id
+    asc) — exactly dense tie order whenever the selected set is forced,
+    which a boundary tie is the only way to break.
 
-Both conditions are detected from the candidate buffers alone; when either
+All conditions are detected from the candidate buffers alone; when any
 fires, the round falls back to a full dense pass (`crawl_value.pallas` body
 as pure jnp + `jax.lax.top_k`) inside `lax.cond`, so selection is *provably
 identical* to dense top-k on every round, with the fallback priced only when
@@ -224,20 +229,47 @@ def _candidates_pallas(tau_pad, n_pad, env, bounds, thresh, n_terms,
     )
 
 
-def _candidates_jnp(tau_pad, n_pad, env, bounds, thresh, n_terms,
-                    cand_per_lane):
-    """scan-over-blocks mirror of the kernel grid; `lax.cond` == `pl.when`,
-    so skipped blocks cost no FLOPs here either."""
-    n_blocks, _, block_rows, _ = env.shape
+def block_state_fn(tau_pad, n_pad, block_rows: int):
+    """Default per-block state fetch: index the free (n_blocks, rows, LANES)
+    views of the flat padded state. The fetch happens *inside* the compute
+    branch of the block skip, so skipped blocks never touch the state (or
+    env) arrays at all — previously the scan-over-blocks carried every block
+    through its xs, paying a full copy of the packed planes per round even
+    when almost everything was skipped.
+
+    Callers with a different state representation (the macro-round scan in
+    `sched.backends` reconstructs n_CIS from a crawl anchor + a prefix-summed
+    feed batch) pass their own `state_fn(i) -> (tau_b, n_b)` returning f32
+    (block_rows, LANES) tiles; the value math downstream is identical, so
+    selection stays bit-equal whenever the reconstructed state is."""
     tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
-    row0s = jnp.arange(n_blocks, dtype=jnp.int32) * block_rows
+
+    def state_fn(i):
+        return (
+            jax.lax.dynamic_index_in_dim(tau3, i, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(n3, i, 0, keepdims=False)
+            .astype(jnp.float32),
+        )
+
+    return state_fn
+
+
+def _candidates_jnp_from(state_fn, env, bounds, thresh, n_terms,
+                         cand_per_lane):
+    """scan-over-block-indices mirror of the kernel grid; `lax.cond` ==
+    `pl.when`, so skipped blocks cost no FLOPs here either — and because the
+    state/env block fetch lives inside the compute branch, they cost no
+    memory traffic either."""
+    n_blocks, _, block_rows, _ = env.shape
 
     def body(_, xs):
-        tau_b, n_b, env_b, bound_b, row0 = xs
+        i, bound_b = xs
 
         def compute(_):
+            tau_b, n_b = state_fn(i)
+            env_b = jax.lax.dynamic_index_in_dim(env, i, 0, keepdims=False)
             v = value_from_planes(tau_b, n_b, env_b, n_terms)
-            return _lane_topc(v, row0, cand_per_lane)
+            return _lane_topc(v, i * block_rows, cand_per_lane)
 
         def skip(_):
             return (
@@ -248,14 +280,37 @@ def _candidates_jnp(tau_pad, n_pad, env, bounds, thresh, n_terms,
         return None, jax.lax.cond(bound_b >= thresh, compute, skip, None)
 
     _, (cand_v, cand_i) = jax.lax.scan(
-        body, None, (tau3, n3, env, bounds.astype(jnp.float32), row0s)
+        body, None, (jnp.arange(n_blocks, dtype=jnp.int32),
+                     bounds.astype(jnp.float32))
     )
     return cand_v, cand_i
 
 
-def fused_select_local(
-    tau_pad: jax.Array,
-    n_pad: jax.Array,
+def _candidates_jnp(tau_pad, n_pad, env, bounds, thresh, n_terms,
+                    cand_per_lane):
+    """Dense-state convenience wrapper around `_candidates_jnp_from`."""
+    return _candidates_jnp_from(
+        block_state_fn(tau_pad, n_pad, env.shape[2]), env, bounds, thresh,
+        n_terms, cand_per_lane,
+    )
+
+
+def _dense_values_from(state_fn, env, n_terms):
+    """All block values via the per-block state fetch (the exact-recovery
+    fallback for state_fn-based callers). Same elementwise math as the
+    vectorized dense pass."""
+    n_blocks = env.shape[0]
+
+    def one(i):
+        tau_b, n_b = state_fn(i)
+        env_b = jax.lax.dynamic_index_in_dim(env, i, 0, keepdims=False)
+        return value_from_planes(tau_b, n_b, env_b, n_terms)
+
+    return jax.lax.map(one, jnp.arange(n_blocks, dtype=jnp.int32))
+
+
+def fused_select_from(
+    state_fn,
     env: jax.Array,
     k: int,
     thresh: jax.Array,
@@ -264,9 +319,17 @@ def fused_select_local(
     cand_per_lane: int | None = None,
     impl: str = "jnp",
     interpret: bool = True,
+    dense_state: tuple[jax.Array, jax.Array] | None = None,
 ) -> FusedSelection:
-    """Un-jitted core (safe inside shard_map). See `fused_select`."""
-    n_pad = n_pad.astype(jnp.float32)  # accept the scheduler's int32 counts
+    """Un-jitted core over a per-block state fetch (safe inside shard_map,
+    scan-invariant: shapes and branch structure are static, so the whole
+    selection scans across rounds under one `lax.scan`). See `fused_select`.
+
+    state_fn(i) -> (tau_b, n_b) f32 (block_rows, LANES) tiles, consulted only
+    for evaluated blocks (jnp impl). The Pallas impl streams dense state
+    (`dense_state`, required) since a Pallas grid reads arrays, not
+    callbacks.
+    """
     if cand_per_lane is None:
         cand_per_lane = auto_cand_per_lane(k)
     n_blocks, _, block_rows, _ = env.shape
@@ -276,30 +339,73 @@ def fused_select_local(
     )
     thresh = jnp.asarray(thresh, jnp.float32)
     if impl == "pallas":
+        assert dense_state is not None, "pallas impl streams dense state"
+        tau_pad, n_pad = dense_state
         cand_v, cand_i = _candidates_pallas(
             tau_pad, n_pad, env, bounds, thresh, n_terms, cand_per_lane,
             interpret,
         )
+
+        def dense_values():
+            tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
+            return value_from_planes(tau3, n3, env, n_terms)
     else:
-        cand_v, cand_i = _candidates_jnp(
-            tau_pad, n_pad, env, bounds, thresh, n_terms, cand_per_lane
+        cand_v, cand_i = _candidates_jnp_from(
+            state_fn, env, bounds, thresh, n_terms, cand_per_lane
         )
+        if dense_state is not None:
+            # One vectorized pass over every block beats the sequential
+            # per-block lax.map whenever the caller holds dense state (the
+            # per-round path) — elementwise-identical math, so exactness
+            # and the bit-equality with state_fn-only callers (the macro
+            # scan) are unaffected.
+            tau_pad, n_pad = dense_state
+
+            def dense_values():
+                tau3, n3 = layout.state_blocks(
+                    tau_pad, n_pad.astype(jnp.float32), block_rows)
+                return value_from_planes(tau3, n3, env, n_terms)
+        else:
+
+            def dense_values():
+                return _dense_values_from(state_fn, env, n_terms)
 
     flat_v = cand_v.reshape(-1)
     flat_i = cand_i.reshape(-1)
-    # Stable order: value descending, page id ascending on ties — exactly
-    # jax.lax.top_k's tie-breaking, so candidate selection is bit-identical
-    # to the dense pass whenever the exactness conditions hold.
-    order = jnp.lexsort((flat_i, -flat_v))
-    top_v = flat_v[order[:k]]
-    top_i = flat_i[order[:k]]
-    kth = top_v[k - 1]
+    # Top-k among the candidates. A full (value desc, id asc) lexsort over
+    # the candidate buffer reproduces dense tie order directly but costs a
+    # 2-key sort of n_cand elements every round (~40% of a warm round's time
+    # at production sizes); instead: top_k by value (ties broken by flat
+    # buffer position — NOT page id), then re-rank just the k selected pairs
+    # by (value desc, id asc). Whenever no value tie straddles the k-th
+    # boundary, the selected SET is forced (all candidates >= kth, counted
+    # exactly k) and the re-rank reproduces jax.lax.top_k's dense tie order
+    # bit-for-bit. Boundary ties (more candidates >= kth than k — e.g. the
+    # degenerate all-equal cold round) are detected below and routed to the
+    # dense fallback, which was already the behavior for saturated columns.
+    sel_v, pos = jax.lax.top_k(flat_v, k)
+    sel_i = flat_i[pos]
+    # The optimization_barrier keeps XLA-CPU's TopK rewriter applicable: the
+    # rewriter only fires while the underlying sort's sole consumers are the
+    # slice-to-k outputs, and slicing kth straight out of `sel_v` would fold
+    # into the sort and silently degrade top_k into a full stable sort of
+    # the candidate buffer (~30x slower at production sizes). The barrier
+    # wraps only the sliced values — never the (values, ids) pair — so the
+    # sort's users stay plain get-tuple-elements; a tuple-level barrier user
+    # crashes XLA's sort simplifier under sharded lowering.
+    sel_vb = jax.lax.optimization_barrier(sel_v)
+    kth = sel_vb[k - 1]
+    order = jnp.lexsort((sel_i, -sel_v))  # k elements — cheap
+    top_v = sel_v[order]
+    top_i = sel_i[order]
 
     # Exact-recovery check (module docstring): any lane column whose last
     # retained candidate could still beat (or tie) the k-th value may have
-    # dropped a winner; a threshold above kth may have skipped one.
+    # dropped a winner; a threshold above kth may have skipped one; a value
+    # tie straddling the k-th boundary makes the positional top_k ambiguous.
     col_last = cand_v[:, cand_per_lane - 1, :]
-    fell_back = (thresh > kth) | jnp.any(col_last >= kth)
+    tie_overflow = jnp.sum(flat_v >= kth) > k
+    fell_back = (thresh > kth) | jnp.any(col_last >= kth) | tie_overflow
 
     def dense(_):
         # Fallback diagnostics must describe the pass that actually ran:
@@ -307,8 +413,7 @@ def fused_select_local(
         # come from the dense values — the candidate buffers hold -inf for
         # skipped blocks and truncated columns, so reusing them would poison
         # the bound anchors (`sched.tiered.update_block_bounds`).
-        tau3, n3 = layout.state_blocks(tau_pad, n_pad, block_rows)
-        vals = value_from_planes(tau3, n3, env, n_terms)
+        vals = dense_values()
         dv, di = jax.lax.top_k(vals.reshape(-1), k)
         colw = _col_depth(vals, dv[k - 1])
         return (dv, di.astype(jnp.int32), vals.max(axis=(1, 2)),
@@ -329,6 +434,28 @@ def fused_select_local(
         fell_back=fell_back,
         frac_active=frac_active,
         col_winners=col_winners,
+    )
+
+
+def fused_select_local(
+    tau_pad: jax.Array,
+    n_pad: jax.Array,
+    env: jax.Array,
+    k: int,
+    thresh: jax.Array,
+    bounds: jax.Array,
+    n_terms: int = 8,
+    cand_per_lane: int | None = None,
+    impl: str = "jnp",
+    interpret: bool = True,
+) -> FusedSelection:
+    """Un-jitted core over flat padded state (safe inside shard_map). See
+    `fused_select`; thin wrapper over `fused_select_from`."""
+    n_pad = n_pad.astype(jnp.float32)  # accept the scheduler's int32 counts
+    return fused_select_from(
+        block_state_fn(tau_pad, n_pad, env.shape[2]), env, k, thresh, bounds,
+        n_terms=n_terms, cand_per_lane=cand_per_lane, impl=impl,
+        interpret=interpret, dense_state=(tau_pad, n_pad),
     )
 
 

@@ -7,10 +7,13 @@ from repro.sched.backends import (
     FusedBackend,
     FusedState,
     KernelBackend,
+    RoundDiagnostics,
     RoundState,
     SelectionBackend,
+    SparseFeeds,
     TableBackend,
     crawl_round,
+    crawl_rounds,
     init_round,
     refresh_pages,
 )
@@ -24,6 +27,7 @@ from repro.sched.service import CrawlScheduler
 from repro.sched.tiered import (
     BlockBounds,
     TierState,
+    accumulate_cis_mass,
     current_block_bounds,
     init_block_bounds,
     refresh_block_params,

@@ -40,12 +40,21 @@ The adaptive skip-control loop (ROADMAP "adaptive BlockBounds" / "adaptive
 hysteresis") closes entirely inside the jitted, donated round: `FusedState`
 additionally carries the refreshing per-block bound rows (slope / blk_max /
 last_eval — the `tiered.BlockBounds` construction), the per-shard
-hysteresis scalar, and the realized candidate-depth watermark. Each
-`crawl_round` folds the kernel's block maxima back into the anchors,
-re-marks CIS-receiving blocks stale (the re-evaluation rule that keeps
-refreshing bounds sound under signal jumps), and tightens/relaxes the
-warm-start threshold from the fallback diagnostic — no host round-trip, no
-extra pass over the pages. See `FusedBackend` for the flags.
+hysteresis scalar, the realized candidate-depth watermark, and the CIS-mass
+accumulator rows (beta_max / cis_mass). Each `crawl_round` folds the
+kernel's block maxima back into the anchors, accounts for every fed block's
+signals (the `cis_rule` that keeps refreshing bounds sound under signal
+jumps: accrue `beta_max * n_cis` bound growth by default, or re-mark the
+block stale), and tightens/relaxes the warm-start threshold from the
+fallback diagnostic — no host round-trip, no extra pass over the pages.
+See `FusedBackend` for the flags.
+
+Macro-rounds (`crawl_rounds`): a batch of R rounds runs inside ONE jitted,
+donated `lax.scan` — stacked `(page_ids, values)` out, `RoundDiagnostics`
+accumulated on device, selection bit-identical to R sequential
+`crawl_round` calls. The fused backend consumes the feed batch in sparse
+COO form (`SparseFeeds`) so a skip-heavy round costs O(active + k + nnz)
+instead of O(m); `CrawlScheduler.run_rounds` is the service surface.
 
 Parameter refresh (the paper's decentralized per-page refresh) is
 `refresh_pages(backend, bstate, page_ids, env_new, ...)`: each backend
@@ -71,6 +80,8 @@ from repro.core.values import DerivedEnv, Env, derive
 from repro.sched.distributed import (
     ShardedSchedState,
     _global_topk,
+    _global_winners,
+    _shard_linear_index,
     _shard_map,
     sharded_select,
 )
@@ -146,6 +157,10 @@ class FusedState(NamedTuple):
     hyst: jax.Array         # (n_shards,) adaptive hysteresis scalar
     col_winners: jax.Array  # (n_shards,) i32 running max winners observed
     #                         per lane column (candidate-depth sizing)
+    # --- CIS-mass re-evaluation planes (appended; `FusedBackend.cis_rule`) -
+    beta_max: jax.Array     # (n_blocks,) max time-equivalent of one CIS
+    cis_mass: jax.Array     # (n_blocks,) f32 accumulated worst-case clock
+    #                         displacement from CIS since last exact eval
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -271,6 +286,109 @@ class TableBackend:
         return bstate._replace(d=d, table=table)
 
 
+class _FusedShardCtx(NamedTuple):
+    """Shard-local skip-control state entering one fused round: the bound
+    rows ((nb_local,) each) + the scalar threshold (already warm_start-
+    resolved), hysteresis, column watermark, and round clock."""
+
+    asym: jax.Array
+    slope: jax.Array
+    blkmax: jax.Array
+    last_ev: jax.Array
+    betam: jax.Array
+    cmass: jax.Array
+    thresh: jax.Array
+    hyst: jax.Array
+    colw: jax.Array
+    clock: jax.Array
+
+
+class _FusedShardUpd(NamedTuple):
+    """What one fused round writes back (scalars + bound rows)."""
+
+    thresh: jax.Array
+    hyst: jax.Array
+    colw: jax.Array
+    blkmax: jax.Array
+    last_ev: jax.Array
+    cmass: jax.Array
+
+
+def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
+                       k_loc, cand, impl, dt):
+    """One shard-local fused selection + skip-control update — THE shared
+    body of the sequential `FusedBackend.select` and every round of the
+    macro scan (`crawl_rounds`), so the two paths are bit-identical by
+    construction.
+
+    state_fn/dense_state: per-block state access (`kernels.select
+    .fused_select_from`) — the macro scan passes an anchored-n state_fn.
+    blk_cis: (nb_local,) per-block CIS counts of this round's feed (None
+    when adaptive_bounds is off; counts are non-negative by the feed
+    contract)."""
+    from repro.kernels import select as ksel
+    from repro.sched import tiered
+
+    bb = tiered.BlockBounds(asym=ctx.asym, slope=ctx.slope,
+                            blk_max=ctx.blkmax, last_eval=ctx.last_ev)
+    if backend.adaptive_bounds:
+        bound = tiered.current_block_bounds(
+            bb, ctx.clock, dt,
+            cis_mass=ctx.cmass if backend.cis_rule == "mass" else None,
+        )
+    else:
+        bound = ctx.asym
+    sel = ksel.fused_select_from(
+        state_fn, env_shard, k_loc, ctx.thresh, bound,
+        n_terms=backend.n_terms, cand_per_lane=cand, impl=impl,
+        interpret=impl != "pallas", dense_state=dense_state,
+    )
+    # Hysteresis loop: tighten while the threshold proved safe, relax when
+    # it (or candidate overflow) forced a dense pass.
+    if backend.adaptive_hysteresis:
+        h = jnp.where(
+            sel.fell_back,
+            jnp.maximum(ctx.hyst - backend.hyst_relax, backend.hyst_min),
+            jnp.minimum(ctx.hyst + backend.hyst_tighten, backend.hyst_max),
+        )
+    else:
+        h = jnp.float32(backend.hysteresis)
+    new_thresh = sel.values[k_loc - 1] * h
+    if backend.adaptive_bounds:
+        # Fold the round's block maxima back into the bound anchors. On
+        # fallback rounds the dense pass evaluated every block (blk_max is
+        # recomputed from the dense values in kernels.select).
+        evaluated = (bound >= ctx.thresh) | sel.fell_back
+        bb = tiered.update_block_bounds(bb, sel.blk_max, evaluated,
+                                        ctx.clock)
+        if backend.cis_rule == "mass":
+            # CIS-mass rule: fed blocks accrue the worst-case clock
+            # displacement beta_max * n into the bound's elapsed term
+            # instead of losing their anchor — light feeds stay skipped.
+            new_cmass = tiered.accumulate_cis_mass(ctx.cmass, ctx.betam,
+                                                   blk_cis, evaluated)
+            new_last = bb.last_eval
+        else:
+            # Blanket re-mark: a CIS jumps exposure instantly, which the
+            # slope bound cannot see — blocks that received signals this
+            # round lose their anchor (+inf bound next round), so a
+            # skipped block can never hide a signal-jumped winner.
+            new_last = jnp.where(blk_cis > 0, jnp.int32(-1), bb.last_eval)
+            new_cmass = ctx.cmass
+        new_blkmax = bb.blk_max
+    else:
+        # Static bound: the anchors are never read — alias them through
+        # untouched (no per-round plane writes, no O(m) CIS reduction on
+        # the default path).
+        new_blkmax, new_last, new_cmass = ctx.blkmax, ctx.last_ev, ctx.cmass
+    # Running max of realized per-column winner depth: the host-side
+    # candidate-depth adaptation reads (and resets) this window.
+    colw = jnp.maximum(ctx.colw, sel.col_winners)
+    return sel, _FusedShardUpd(thresh=new_thresh, hyst=h, colw=colw,
+                               blkmax=new_blkmax, last_ev=new_last,
+                               cmass=new_cmass)
+
+
 @dataclasses.dataclass(frozen=True)
 class FusedBackend:
     """Packed planes + single-pass candidate select — the production path.
@@ -286,10 +404,16 @@ class FusedBackend:
       * adaptive_bounds (opt-in): each round's per-block maxima fold back
         into the refreshing `tiered.BlockBounds` carried in `FusedState`
         (slope-decayed anchor, capped by the static asymptote), replacing
-        the static asymptote-only bound. Soundness under CIS: any block
-        whose pages received `new_cis > 0` this round is re-marked
-        never-evaluated (+inf bound), so a skipped block can never hide a
-        signal-jumped winner — selection stays exactly dense top-k.
+        the static asymptote-only bound. Soundness under CIS is governed by
+        cis_rule: "mass" (default) accrues the worst-case exposure-clock
+        displacement beta_max * n_cis of every fed block into a per-block
+        accumulator added to the bound's elapsed term
+        (`tiered.accumulate_cis_mass`) — a weak signal bumps the bound one
+        beta-slope step and the block stays skipped under light feeds;
+        "remark" is the blunt rule it refines: any block receiving
+        `new_cis > 0` is re-marked never-evaluated (+inf bound). Either
+        way a skipped block can never hide a signal-jumped winner —
+        selection stays exactly dense top-k.
       * adaptive_hysteresis (default on): the per-shard warm-start
         threshold factor is carried in `FusedState.hyst` and adapted from
         the fallback diagnostic — tightened toward `hyst_max` while no
@@ -310,6 +434,7 @@ class FusedBackend:
     adaptive_bounds: bool = False
     adaptive_hysteresis: bool = True
     adaptive_cand: bool = False
+    cis_rule: str = "mass"  # "mass" | "remark" (see class docstring)
     cand_per_lane: int | None = None
     hyst_min: float = HYSTERESIS_MIN
     hyst_max: float = HYSTERESIS_MAX
@@ -320,6 +445,7 @@ class FusedBackend:
         from repro.kernels import layout
         from repro.sched import tiered
 
+        assert self.cis_rule in ("mass", "remark"), self.cis_rule
         block_rows = self.block_rows or layout.DEFAULT_BLOCK_ROWS
         m = env.m
         m_state = layout.padded_size(m, block_rows, n_shards=mesh.size)
@@ -353,6 +479,8 @@ class FusedBackend:
             hyst=_put(jnp.full((n_shards,), self.hysteresis, jnp.float32),
                       mesh, pspec),
             col_winners=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
+            beta_max=_put(layout.block_beta_max(shard.env), mesh, pspec),
+            cis_mass=_put(jnp.zeros(bb.asym.shape, jnp.float32), mesh, pspec),
         )
         return BackendInit(m_state, bstate, d, None)
 
@@ -388,83 +516,51 @@ class FusedBackend:
             new_cis = jnp.zeros_like(state.n_cis)
 
         def shard_fn(tau_elap, n_cis, cis_feed, env_shard, asym, slope,
-                     blkmax, last_ev, thresh_shard, hyst_shard, colw_shard,
-                     clock):
+                     blkmax, last_ev, betam, cmass, thresh_shard, hyst_shard,
+                     colw_shard, clock):
             # thresh_shard is this shard's OWN slice: the local k-th candidate
             # value of the previous round — sound to compare against local
             # block bounds (the ROADMAP per-shard threshold exchange).
-            bb = tiered.BlockBounds(asym=asym, slope=slope, blk_max=blkmax,
-                                    last_eval=last_ev)
-            bound = (tiered.current_block_bounds(bb, clock, dt)
-                     if self.adaptive_bounds else asym)
             thresh = (thresh_shard[0] if self.warm_start
                       else jnp.float32(-jnp.inf))
-            sel = ksel.fused_select_local(
-                tau_elap, n_cis, env_shard, k_loc, thresh, bound,
-                n_terms=self.n_terms, cand_per_lane=cand, impl=impl,
-                interpret=impl != "pallas",
+            blk_cis = (cis_feed.reshape(asym.shape[0], -1).sum(axis=1)
+                       if self.adaptive_bounds else None)
+            n_f = n_cis.astype(jnp.float32)
+            sel, upd = _fused_shard_round(
+                self, ksel.block_state_fn(tau_elap, n_f, env_shard.shape[2]),
+                (tau_elap, n_f), env_shard,
+                _FusedShardCtx(asym=asym, slope=slope, blkmax=blkmax,
+                               last_ev=last_ev, betam=betam, cmass=cmass,
+                               thresh=thresh, hyst=hyst_shard[0],
+                               colw=colw_shard[0], clock=clock),
+                blk_cis, k_loc, cand, impl, dt,
             )
             m_local = tau_elap.shape[0]
             top_g, top_v, mask = _global_topk(sel.values, sel.ids, axes,
                                               m_local, k)
-            # Hysteresis loop: tighten while the threshold proved safe,
-            # relax when it (or candidate overflow) forced a dense pass.
-            if self.adaptive_hysteresis:
-                h = jnp.where(
-                    sel.fell_back,
-                    jnp.maximum(hyst_shard[0] - self.hyst_relax,
-                                self.hyst_min),
-                    jnp.minimum(hyst_shard[0] + self.hyst_tighten,
-                                self.hyst_max),
-                )
-            else:
-                h = jnp.float32(self.hysteresis)
-            new_thresh = (sel.values[k_loc - 1] * h).reshape(1)
-            if self.adaptive_bounds:
-                # Fold the round's block maxima back into the bound anchors.
-                # On fallback rounds the dense pass evaluated every block
-                # (blk_max is recomputed from the dense values in
-                # kernels.select).
-                evaluated = (bound >= thresh) | sel.fell_back
-                bb = tiered.update_block_bounds(bb, sel.blk_max, evaluated,
-                                                clock)
-                # CIS-seen re-evaluation rule: a CIS jumps exposure
-                # instantly, which the slope bound cannot see — blocks that
-                # received signals this round lose their anchor (+inf bound
-                # next round), so a skipped block can never hide a
-                # signal-jumped winner.
-                cis_seen = (cis_feed.reshape(asym.shape[0], -1) > 0) \
-                    .any(axis=1)
-                new_blkmax = bb.blk_max
-                new_last = jnp.where(cis_seen, jnp.int32(-1), bb.last_eval)
-            else:
-                # Static bound: the anchors are never read — alias them
-                # through untouched (no per-round plane writes, no O(m)
-                # CIS reduction on the default path).
-                new_blkmax, new_last = blkmax, last_ev
-            # Running max of realized per-column winner depth: the host-side
-            # candidate-depth adaptation reads (and resets) this window.
-            colw = jnp.maximum(colw_shard[0], sel.col_winners)
-            return (top_g, top_v, mask, new_thresh,
+            return (top_g, top_v, mask, upd.thresh.reshape(1),
                     sel.frac_active.reshape(1), sel.fell_back.reshape(1),
-                    new_blkmax, new_last, h.reshape(1), colw.reshape(1))
+                    upd.blkmax, upd.last_ev, upd.cmass, upd.hyst.reshape(1),
+                    upd.colw.reshape(1))
 
         fn = _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(pspec, pspec, pspec, P(axes, None, None, None),
-                      pspec, pspec, pspec, pspec, pspec, pspec, pspec, P()),
+                      pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                      pspec, P()),
             out_specs=(P(), P(), pspec, pspec, pspec, pspec,
-                       pspec, pspec, pspec, pspec),
+                       pspec, pspec, pspec, pspec, pspec),
         )
-        top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, hyst, colw = fn(
+        (top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, cmass, hyst,
+         colw) = fn(
             state.tau_elap, state.n_cis, new_cis, bst.env_planes, bst.bounds,
-            bst.slope, bst.blk_max, bst.last_eval, bst.thresh, bst.hyst,
-            bst.col_winners, state.crawl_clock,
+            bst.slope, bst.blk_max, bst.last_eval, bst.beta_max, bst.cis_mass,
+            bst.thresh, bst.hyst, bst.col_winners, state.crawl_clock,
         )
         new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb,
-                               blk_max=blkmax, last_eval=last_ev, hyst=hyst,
-                               col_winners=colw)
+                               blk_max=blkmax, last_eval=last_ev,
+                               cis_mass=cmass, hyst=hyst, col_winners=colw)
         return top_g, top_v, mask, new_bst
 
     def update_pages(self, bstate, page_ids, d_new, block_ids=None):
@@ -485,9 +581,17 @@ class FusedBackend:
                                blk_max=bstate.blk_max,
                                last_eval=bstate.last_eval),
             env_planes, block_ids)
+        # The CIS-mass rows are env-dependent too: beta changed with the new
+        # (delta, lam, nu), and the accumulated mass described the old
+        # parameters (the dropped anchor re-evaluates the block exactly
+        # regardless).
+        beta_max = bstate.beta_max.at[block_ids].set(
+            layout.block_beta_max(env_planes, block_ids))
         return bstate._replace(env_planes=env_planes, bounds=bb.asym,
                                slope=bb.slope, blk_max=bb.blk_max,
-                               last_eval=bb.last_eval)
+                               last_eval=bb.last_eval, beta_max=beta_max,
+                               cis_mass=bstate.cis_mass.at[block_ids]
+                               .set(0.0))
 
 
 def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
@@ -503,6 +607,22 @@ def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
         crawl_clock=jnp.int32(0),
         backend=binit.state,
     ), binit
+
+
+def _round_body(backend, state, new_cis, mesh, k, dt):
+    """The one scheduling round, un-jitted: select k pages globally, reset
+    them, advance time, ingest the externally-fed CIS counts. Shared by
+    `crawl_round` (one jitted dispatch per round) and the generic macro scan
+    in `crawl_rounds`, so the two paths are identical by construction."""
+    top_g, top_v, mask, new_b = backend.select(state, mesh, k, dt=dt,
+                                               new_cis=new_cis)
+    tau = jnp.where(mask, 0.0, state.tau_elap) + dt
+    n = jnp.where(mask, 0, state.n_cis) + new_cis
+    new_state = RoundState(
+        tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + 1,
+        backend=new_b,
+    )
+    return new_state, (top_g, top_v)
 
 
 @functools.partial(
@@ -530,18 +650,228 @@ def crawl_round(
 
     The CIS feed and round period thread into `select` so stateful backends
     can close their skip-control loop in the same jitted round: the fused
-    adaptive bounds decay by `dt` and re-mark any block receiving
-    `new_cis > 0` as stale (see `FusedBackend`).
+    adaptive bounds decay by `dt` and account for every block's received
+    signals (the CIS-mass / re-mark rules — see `FusedBackend`).
     """
-    top_g, top_v, mask, new_b = backend.select(state, mesh, k, dt=dt,
-                                               new_cis=new_cis)
-    tau = jnp.where(mask, 0.0, state.tau_elap) + dt
-    n = jnp.where(mask, 0, state.n_cis) + new_cis
-    new_state = RoundState(
-        tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + 1,
-        backend=new_b,
+    return _round_body(backend, state, new_cis, mesh, k, dt)
+
+
+class RoundDiagnostics(NamedTuple):
+    """Per-round skip-control diagnostics of a macro-round, accumulated on
+    device as (R, n_shards) stacks and fetched once per macro-round — the
+    mid-loop `jax.device_get` sync the per-round loop paid for host-side
+    adaptation disappears. Row r holds the post-round-r values of the
+    matching `FusedState` fields (placeholders for stateless backends)."""
+
+    frac_active: jax.Array  # (R, n_shards) f32 blocks evaluated
+    fell_back: jax.Array    # (R, n_shards) bool dense recovery taken
+    hyst: jax.Array         # (R, n_shards) f32 hysteresis after the round
+    col_winners: jax.Array  # (R, n_shards) i32 running candidate watermark
+
+
+def _diag_rows(bstate, n_shards: int) -> RoundDiagnostics:
+    if isinstance(bstate, FusedState):
+        return RoundDiagnostics(bstate.frac_active, bstate.fell_back,
+                                bstate.hyst, bstate.col_winners)
+    return RoundDiagnostics(
+        frac_active=jnp.ones((n_shards,), jnp.float32),
+        fell_back=jnp.zeros((n_shards,), bool),
+        hyst=jnp.zeros((n_shards,), jnp.float32),
+        col_winners=jnp.zeros((n_shards,), jnp.int32),
     )
-    return new_state, (top_g, top_v)
+
+
+class SparseFeeds(NamedTuple):
+    """A CIS feed batch in per-round COO form: the page ids that received
+    signals each round and their counts, padded to a static width `cap`
+    with id = -1 rows (dropped). `CrawlScheduler.run_rounds` converts a
+    dense (R, m) batch once on the host — CIS feeds are overwhelmingly
+    sparse in production, so inside the macro scan the feed ingest becomes
+    an O(nnz) scatter-add instead of an O(m) pass per round, and the batch
+    never materializes densely on device. counts are non-negative; ids are
+    unique within a round (guaranteed by a dense->COO conversion)."""
+
+    ids: jax.Array     # (R, cap) i32 global (padded-flat) page ids, -1 pad
+    counts: jax.Array  # (R, cap) i32
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "mesh", "k", "dt"),
+    donate_argnames=("state",),
+)
+def crawl_rounds(
+    backend: SelectionBackend,
+    state: RoundState,
+    feeds: jax.Array | SparseFeeds,
+    *,
+    mesh: Mesh,
+    k: int,
+    dt: float,
+):
+    """A macro-round: R full scheduling rounds inside ONE jitted, donated
+    `lax.scan` — one host->device dispatch for the whole batch instead of
+    R, with every diagnostic accumulated on device.
+
+    feeds: a dense (R, m_state) int32 batch (one pre-padded row per round),
+    or a `SparseFeeds` COO batch for the fused backend (the production
+    path; `CrawlScheduler.run_rounds` converts). Returns
+    (new_round_state, (page_ids (R, k), values (R, k)), `RoundDiagnostics`).
+    The stacked selection equals R sequential `crawl_round` calls
+    page-id-for-page-id (property-tested):
+
+      * dense feeds scan the exact `_round_body` (any backend);
+      * the fused backend with `SparseFeeds` runs a dedicated
+        scan-inside-shard_map that also eliminates the per-round O(m) state
+        traffic: feed ingest is an O(nnz) scatter-add, winner resets touch
+        only the k crawled pages, block state is fetched per *active* block,
+        and the per-block CIS reductions ride the same sparse scatter — the
+        only remaining O(m) work per round is the tau clock advance. Every
+        arithmetic expression matches the sequential round's, so selection
+        is bit-identical, not just set-equal.
+
+    `state` is DONATED (as in `crawl_round`); `feeds` is not. R (and the
+    sparse cap) are static shapes — drive a deployment with one batch size
+    to avoid re-jits.
+    """
+    if isinstance(feeds, SparseFeeds):
+        if not isinstance(backend, FusedBackend):
+            raise ValueError(
+                "SparseFeeds macro-rounds require the fused backend; dense "
+                "oracle backends take the (R, m_state) batch")
+        return _fused_macro_rounds(backend, state, feeds, mesh, k, dt)
+
+    def step(st, feed):
+        st, (top_g, top_v) = _round_body(backend, st, feed, mesh, k, dt)
+        return st, (top_g, top_v, _diag_rows(st.backend, mesh.size))
+
+    state, (ids, vals, diag) = jax.lax.scan(step, state, feeds)
+    return state, (ids, vals), diag
+
+
+def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
+                        feeds: SparseFeeds, mesh: Mesh, k: int, dt: float):
+    """The fused macro-round scan (see `crawl_rounds`): one shard_map whose
+    body scans R rounds, reusing `_fused_shard_round` for the per-round
+    math so each round is bit-identical to the sequential path."""
+    from repro.kernels import select as ksel
+
+    axes = tuple(mesh.axis_names)
+    pspec = P(axes)
+    bst: FusedState = state.backend
+    R = feeds.ids.shape[0]
+    n_blocks, _, block_rows, lanes = bst.env_planes.shape
+    bp = block_rows * lanes
+    m = state.tau_elap.shape[0]
+    n_shards = mesh.size
+    assert m == n_blocks * bp, (
+        "fused path needs block-aligned padded state "
+        f"(m={m}, planes={bst.env_planes.shape})"
+    )
+    assert n_blocks % n_shards == 0, (
+        "fused path needs n_blocks divisible by the shard count"
+    )
+    assert feeds.counts.shape == feeds.ids.shape, feeds
+    nb_local = n_blocks // n_shards
+    k_loc, cand = ksel.shard_budget(
+        k, m // n_shards, nb_local, n_shards,
+        backend.k_local, backend.cand_per_lane,
+    )
+    impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+    def shard_fn(tau0, n0, fid, fcnt, env_shard, asym, slope, blkmax0, last0,
+                 betam, cmass0, thresh0, hyst0, colw0, clock0):
+        m_local = tau0.shape[0]
+        shard_lin = _shard_linear_index(axes)
+        local_start = shard_lin * m_local
+
+        def step(carry, xs):
+            (tau, n, thresh_s, hyst_s, colw_s, blkmax, last_ev, cmass,
+             clock) = carry
+            fid_r, fcnt_r = xs
+            # This shard's slice of the round's sparse feed: local indices
+            # with the out-of-bounds drop sentinel for other shards' pages
+            # and the -1 padding rows.
+            rel = fid_r - local_start
+            here = (rel >= 0) & (rel < m_local)
+            fidx = jnp.where(here, rel, m_local)
+            thresh = (thresh_s if backend.warm_start
+                      else jnp.float32(-jnp.inf))
+            if backend.adaptive_bounds:
+                # Per-block CIS counts via the same sparse scatter (exact:
+                # integer sums in any order equal the dense reduction).
+                blk_cis = jnp.zeros((nb_local,), jnp.int32).at[
+                    jnp.where(here, rel // bp, nb_local)].add(
+                        fcnt_r, mode="drop")
+            else:
+                blk_cis = None
+            # The Pallas grid streams dense f32 state; the jnp path only
+            # ever touches active blocks, so don't even trace the O(m) cast
+            # there.
+            dense_state = ((tau, n.astype(jnp.float32))
+                           if impl == "pallas" else None)
+            sel, upd = _fused_shard_round(
+                backend, ksel.block_state_fn(tau, n, block_rows),
+                dense_state, env_shard,
+                _FusedShardCtx(asym=asym, slope=slope, blkmax=blkmax,
+                               last_ev=last_ev, betam=betam, cmass=cmass,
+                               thresh=thresh, hyst=hyst_s, colw=colw_s,
+                               clock=clock),
+                blk_cis, k_loc, cand, impl, dt,
+            )
+            top_g, top_v, idx = _global_winners(sel.values, sel.ids, axes,
+                                                m_local, k)
+            # Winner resets touch only the k crawled pages and the feed
+            # ingest only the nnz fed pages (no O(m) mask / dense add):
+            # tau drops to one round period and n to 0-then-feed — both
+            # bit-equal to the sequential `where(mask, ...) + feed` forms.
+            tau = (tau + dt).at[idx].set(jnp.float32(dt), mode="drop")
+            n = n.at[idx].set(0, mode="drop").at[fidx].add(fcnt_r,
+                                                           mode="drop")
+            carry = (tau, n, upd.thresh, upd.hyst, upd.colw, upd.blkmax,
+                     upd.last_ev, upd.cmass, clock + 1)
+            ys = (top_g, top_v, sel.frac_active, sel.fell_back, upd.hyst,
+                  upd.colw)
+            return carry, ys
+
+        carry0 = (tau0, n0, thresh0[0], hyst0[0], colw0[0], blkmax0, last0,
+                  cmass0, clock0)
+        carry, ys = jax.lax.scan(step, carry0, (fid, fcnt))
+        (tau, n, thresh_s, hyst_s, colw_s, blkmax, last_ev, cmass,
+         _clock) = carry
+        top_g, top_v, frac, fb, hyst_r, colw_r = ys
+        return (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
+                colw_s.reshape(1), blkmax, last_ev, cmass, top_g, top_v,
+                frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
+                colw_r.reshape(R, 1))
+
+    fn = _shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(pspec, pspec, P(), P(), P(axes, None, None, None),
+                  pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                  pspec, P()),
+        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                   P(), P(), P(None, axes), P(None, axes), P(None, axes),
+                   P(None, axes)),
+    )
+    (tau, n, thresh, hyst, colw, blkmax, last_ev, cmass, ids, vals, frac,
+     fb, hyst_r, colw_r) = fn(
+        state.tau_elap, state.n_cis, feeds.ids, feeds.counts, bst.env_planes,
+        bst.bounds, bst.slope, bst.blk_max, bst.last_eval, bst.beta_max,
+        bst.cis_mass, bst.thresh, bst.hyst, bst.col_winners,
+        state.crawl_clock,
+    )
+    new_bst = bst._replace(thresh=thresh, frac_active=frac[-1],
+                           fell_back=fb[-1], blk_max=blkmax,
+                           last_eval=last_ev, cis_mass=cmass, hyst=hyst,
+                           col_winners=colw)
+    new_state = RoundState(
+        tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + R,
+        backend=new_bst,
+    )
+    return new_state, (ids, vals), RoundDiagnostics(
+        frac_active=frac, fell_back=fb, hyst=hyst_r, col_winners=colw_r)
 
 
 @functools.partial(

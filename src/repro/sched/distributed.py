@@ -107,9 +107,14 @@ def _shard_linear_index(axes):
     return shard_lin
 
 
-def _global_topk(loc_v, loc_i, axes, m_local, k):
-    """Candidate exchange + global top-k + local winner mask (shared by the
-    dense and fused paths). loc_i are shard-local page indices."""
+def _global_winners(loc_v, loc_i, axes, m_local, k):
+    """Candidate exchange + global top-k (shared by the dense and fused
+    paths). loc_i are shard-local page indices. Returns (global_ids, values,
+    local_idx) where local_idx holds each winner's shard-local index, or the
+    out-of-bounds sentinel m_local for winners living on other shards — made
+    for `.at[local_idx].set(..., mode="drop")` updates, so callers touching
+    only the k winners (the macro-round scan) never materialize an m-sized
+    mask."""
     shard_lin = _shard_linear_index(axes)
     gids = loc_i.astype(jnp.int32) + shard_lin * m_local
     # Tiny candidate exchange: (n_shards * k_loc) values + ids.
@@ -120,12 +125,18 @@ def _global_topk(loc_v, loc_i, axes, m_local, k):
         all_g = jax.lax.all_gather(all_g, ax, tiled=True)
     top_v, top_j = jax.lax.top_k(all_v, k)
     top_g = all_g[top_j]
-    # Per-shard crawl mask for the winners that live here.
     local_start = shard_lin * m_local
     rel = top_g - local_start
     here = (rel >= 0) & (rel < m_local)
-    # Out-of-bounds indices are dropped, so non-local winners are no-ops.
     idx = jnp.where(here, rel, m_local)
+    return top_g, top_v, idx
+
+
+def _global_topk(loc_v, loc_i, axes, m_local, k):
+    """`_global_winners` + the per-shard crawl mask for the winners that
+    live here (out-of-bounds indices are dropped, so non-local winners are
+    no-ops)."""
+    top_g, top_v, idx = _global_winners(loc_v, loc_i, axes, m_local, k)
     mask = jnp.zeros((m_local,), bool).at[idx].set(True, mode="drop")
     return top_g, top_v, mask
 

@@ -58,11 +58,18 @@ class BlockBounds(NamedTuple):
     that received signals can transiently hide a winner (the select-time
     fallback protects against over-aggressive thresholds and candidate
     overflow, not unsound bounds). Blocks that received fresh CIS must
-    therefore drop their anchor: mark them never-evaluated
-    (`last_eval = -1` -> +inf bound -> exact re-evaluation next round),
-    which is what `backends.FusedBackend(adaptive_bounds=True)` does with
-    the round's CIS feed — selection then stays exactly equal to dense
-    top-k. The static `layout.asym_block_bounds` alone (the default) is a
+    therefore account for the jump, one of two ways (both keep selection
+    exactly equal to dense top-k; `backends.FusedBackend.cis_rule`):
+
+      * "mass" (default): accrue the worst-case clock displacement
+        beta_max * n_cis into a per-block accumulator added to the elapsed
+        term (`accumulate_cis_mass` / `current_block_bounds`) — the bound
+        stays finite and lightly-fed blocks stay skipped;
+      * "remark": drop the anchor — mark the block never-evaluated
+        (`last_eval = -1` -> +inf bound -> exact re-evaluation next round),
+        the blunt rule the mass accumulator refines.
+
+    The static `layout.asym_block_bounds` alone (the default) is a
     true upper bound with no re-evaluation rule needed.
 
     Sentinel convention: `last_eval = -1` means "never evaluated" (+inf
@@ -91,15 +98,51 @@ def init_block_bounds(env_planes: jax.Array) -> BlockBounds:
 
 
 def current_block_bounds(
-    bb: BlockBounds, round_idx: jax.Array, dt: float
+    bb: BlockBounds,
+    round_idx: jax.Array,
+    dt: float,
+    cis_mass: jax.Array | None = None,
 ) -> jax.Array:
     """Optimistic per-block bound for this round. Values only shrink on crawl
     and grow at most `slope` per unit time since the last exact evaluation,
     capped by the static asymptote; never-evaluated blocks (`last_eval = -1`,
-    NOT 0 — round 0 is a valid evaluation round) get +inf."""
+    NOT 0 — round 0 is a valid evaluation round) get +inf.
+
+    cis_mass (the CIS-mass re-evaluation rule, `accumulate_cis_mass`):
+    accumulated exposure-clock displacement from signals the block received
+    since its last exact evaluation, in the same time units as `elapsed` —
+    an ingested CIS advances a page's effective clock iota = tau + beta * n
+    by beta instantly, which the elapsed term (d iota / dt = 1) cannot see.
+    Adding the mass to the elapsed displacement keeps the slope bound a true
+    upper bound under signal jumps WITHOUT dropping the anchor to +inf the
+    way the blanket re-mark does, so lightly-fed blocks stay skipped."""
     elapsed = (round_idx - bb.last_eval).astype(jnp.float32) * dt
+    if cis_mass is not None:
+        elapsed = elapsed + cis_mass
     bound = jnp.minimum(bb.blk_max + bb.slope * elapsed, bb.asym)
     return jnp.where(bb.last_eval < 0, jnp.inf, bound)
+
+
+def accumulate_cis_mass(
+    cis_mass: jax.Array,
+    beta_max: jax.Array,
+    blk_cis: jax.Array,
+    evaluated: jax.Array,
+) -> jax.Array:
+    """Fold one round's CIS feed into the per-block mass accumulators.
+
+    blk_cis: (n_blocks,) integer CIS counts received by each block's pages
+    this round. Evaluated blocks reset first (their fresh anchor reflects
+    values *before* this round's feed was ingested, so this round's mass
+    still applies to them), then every block accrues beta_max * n — the
+    worst-case exposure-clock displacement of its best page. The mass is
+    consumed by `current_block_bounds` and resolves the ROADMAP
+    "adaptive-bounds steady-state tuning" item: a single weak signal now
+    bumps the bound by one beta-slope step instead of forcing a whole-block
+    re-evaluation, while heavy feeds still grow the bound past the threshold
+    (or to +inf via the BIG-guarded beta) and re-evaluate exactly."""
+    mass = jnp.where(evaluated, 0.0, cis_mass)
+    return mass + beta_max * blk_cis.astype(jnp.float32)
 
 
 def update_block_bounds(

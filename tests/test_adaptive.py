@@ -82,12 +82,14 @@ def test_adaptive_bounds_exact_and_skips_more_than_static():
 
 
 def test_cis_seen_blocks_lose_their_anchor():
-    """The re-evaluation rule: any block whose pages received CIS this round
-    must be re-marked never-evaluated (+inf bound -> exact re-evaluation),
-    so a skipped block can never hide a signal-jumped winner."""
+    """The blanket re-evaluation rule (cis_rule="remark"): any block whose
+    pages received CIS this round is re-marked never-evaluated (+inf bound
+    -> exact re-evaluation), so a skipped block can never hide a
+    signal-jumped winner. The default CIS-mass rule refines this (see
+    tests/test_macro.py); the blunt rule stays available and sound."""
     m, k = 30_000, 32
     env = _sorted_env(jax.random.PRNGKey(1), m)
-    fused, dense = _schedulers(env, k)
+    fused, dense = _schedulers(env, k, cis_rule="remark")
     zero = jnp.zeros((m,), jnp.int32)
     for _ in range(10):
         fused.ingest_and_schedule(zero)

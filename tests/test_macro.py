@@ -1,0 +1,349 @@
+"""Macro-round scan pipeline (`backends.crawl_rounds` /
+`CrawlScheduler.run_rounds`): stacked selection equal to sequential rounds
+page-id-for-page-id, device-resident diagnostics, the CIS-mass re-evaluation
+rule, feed-batch validation, and adaptation-counter persistence."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.sched import backends as be
+from repro.sched import tiered
+from repro.sched.service import CrawlScheduler
+from repro.sim import uniform_instance
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _sorted_env(key, m):
+    env = uniform_instance(key, m)
+    order = jnp.argsort(-(env.mu / env.delta))
+    return jax.tree.map(lambda x: x[order], env)
+
+
+def _pair(env, k, backend, dt=0.05, tau_max=2.0, seed=99):
+    """Two identically-seeded schedulers on the same warm trajectory,
+    crawling exactly k pages per round (bandwidth = k / dt)."""
+    out = []
+    for _ in range(2):
+        s = CrawlScheduler(env, _mesh1(), bandwidth=float(k) / dt,
+                           round_period=dt, backend=backend)
+        tau = jax.random.uniform(jax.random.PRNGKey(seed), (env.m,),
+                                 maxval=tau_max)
+        s.round = dataclasses.replace(
+            s.round,
+            tau_elap=jnp.zeros((s.m_state,)).at[:env.m].set(tau))
+        out.append(s)
+    return out
+
+
+def _cis_feeds(rng, n_rounds, m, rounds, n_pages=200, jump=40):
+    feeds = np.zeros((n_rounds, m), np.int32)
+    for r in rounds:
+        idx = rng.choice(m, n_pages, replace=False)
+        feeds[r, idx] = rng.integers(1, jump, n_pages)
+    return feeds
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: run_rounds == R sequential rounds, page-id-for-page-id.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**16), period=st.integers(2, 4))
+def test_property_run_rounds_equals_sequential(seed, period):
+    """Property: with adaptive bounds on and CIS jumps mid-batch, the macro
+    scan's stacked (ids, values) are bit-identical to sequential
+    ingest_and_schedule calls on an identically-seeded scheduler — not just
+    set-equal: every float expression in the scan matches the per-round
+    path."""
+    m, k, R = 12_000, 16, 8
+    env = _sorted_env(jax.random.PRNGKey(seed), m)
+    seq, mac = _pair(env, k, be.FusedBackend(block_rows=8,
+                                             adaptive_bounds=True))
+    rng = np.random.default_rng(seed)
+    feeds = _cis_feeds(rng, R, m, rounds=range(period - 1, R, period))
+    ids_m, vals_m = mac.run_rounds(jnp.asarray(feeds))
+    for r in range(R):
+        ids_s, vals_s = seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+        np.testing.assert_array_equal(np.asarray(ids_m)[r],
+                                      np.asarray(ids_s), err_msg=str(r))
+        np.testing.assert_array_equal(np.asarray(vals_m)[r],
+                                      np.asarray(vals_s), err_msg=str(r))
+    assert int(mac.round.crawl_clock) == int(seq.round.crawl_clock) == R
+
+
+def test_run_rounds_equals_sequential_all_adaptive():
+    """The full production config (adaptive bounds + hysteresis + candidate
+    depth): selection stays identical even though the sequential loop takes
+    its host-side depth decisions mid-stream and the macro path at the
+    boundary (exactness never depends on the depth)."""
+    m, k, R = 20_000, 64, CrawlScheduler.CAND_ADAPT_INTERVAL + 4
+    env = _sorted_env(jax.random.PRNGKey(3), m)
+    backend = be.FusedBackend(block_rows=8, adaptive_bounds=True,
+                              adaptive_cand=True)
+    seq, mac = _pair(env, k, backend)
+    feeds = _cis_feeds(np.random.default_rng(3), R, m, rounds=[5, 11])
+    ids_m, _ = mac.run_rounds(jnp.asarray(feeds))
+    for r in range(R):
+        ids_s, _ = seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+        assert set(map(int, np.asarray(ids_m)[r])) == set(map(int, ids_s)), r
+    # The macro boundary took a depth decision from the device-resident
+    # watermark (window >= interval after one batch).
+    assert mac.backend.cand_per_lane is not None
+
+
+def test_run_rounds_dense_backend_generic_scan():
+    """Stateless backends ride the generic `_round_body` scan — bit-equal to
+    the per-round path by construction."""
+    m, k, R = 8_000, 16, 5
+    env = _sorted_env(jax.random.PRNGKey(4), m)
+    seq, mac = _pair(env, k, be.DenseBackend())
+    feeds = _cis_feeds(np.random.default_rng(4), R, m, rounds=[2])
+    ids_m, vals_m = mac.run_rounds(jnp.asarray(feeds))
+    assert ids_m.shape == (R, k)
+    for r in range(R):
+        ids_s, vals_s = seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+        np.testing.assert_array_equal(np.asarray(ids_m)[r],
+                                      np.asarray(ids_s), err_msg=str(r))
+    # Placeholder diagnostics still stack to (R, n_shards).
+    assert mac.macro_diagnostics.frac_active.shape == (R, 1)
+
+
+def test_run_rounds_multishard_cis_subprocess():
+    """Acceptance property on a 4-shard mesh: macro == sequential across
+    rounds with CIS jumps, while blocks are actually skipped."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.sched.service import CrawlScheduler
+        from repro.sched import backends as be
+        from repro.sim import uniform_instance
+        mesh = jax.make_mesh((4,), ("data",))
+        m, k, R = 30_000, 32, 10
+        env = uniform_instance(jax.random.PRNGKey(0), m)
+        order = jnp.argsort(-(env.mu / env.delta))
+        env = jax.tree.map(lambda x: x[order], env)
+        scheds = []
+        for _ in range(2):
+            s = CrawlScheduler(env, mesh, bandwidth=float(k),
+                               round_period=0.05,
+                               backend=be.FusedBackend(block_rows=8,
+                                                       adaptive_bounds=True))
+            tau = jax.random.uniform(jax.random.PRNGKey(9), (m,), maxval=2.0)
+            s.round = dataclasses.replace(
+                s.round, tau_elap=jnp.zeros((s.m_state,)).at[:m].set(tau))
+            scheds.append(s)
+        seq, mac = scheds
+        rng = np.random.default_rng(0)
+        feeds = np.zeros((R, m), np.int32)
+        for r in (4, 7):
+            idx = rng.choice(m, 300, replace=False)
+            feeds[r, idx] = rng.integers(1, 40, 300)
+        ids_m, vals_m = mac.run_rounds(jnp.asarray(feeds))
+        for r in range(R):
+            ids_s, _ = seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+            np.testing.assert_array_equal(np.asarray(ids_m)[r],
+                                          np.asarray(ids_s), err_msg=str(r))
+        frac = np.asarray(mac.macro_diagnostics.frac_active)
+        assert frac.shape == (R, 4)
+        assert frac.min() < 1.0, frac
+        print("MACRO_MULTISHARD_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       env=env, timeout=900)
+    assert "MACRO_MULTISHARD_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: device-resident diagnostics match the per-round values.
+# ---------------------------------------------------------------------------
+
+def test_macro_diagnostics_match_per_round():
+    m, k, R = 20_000, 32, 8
+    env = _sorted_env(jax.random.PRNGKey(5), m)
+    seq, mac = _pair(env, k, be.FusedBackend(block_rows=8,
+                                             adaptive_bounds=True))
+    feeds = _cis_feeds(np.random.default_rng(5), R, m, rounds=[3, 6])
+    mac.run_rounds(jnp.asarray(feeds))
+    diag = mac.macro_diagnostics
+    for r in range(R):
+        seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+        b = seq.round.backend
+        for got, want, name in (
+            (diag.frac_active, b.frac_active, "frac_active"),
+            (diag.fell_back, b.fell_back, "fell_back"),
+            (diag.hyst, b.hyst, "hyst"),
+            (diag.col_winners, b.col_winners, "col_winners"),
+        ):
+            np.testing.assert_array_equal(np.asarray(got)[r],
+                                          np.asarray(want),
+                                          err_msg=f"{name}@{r}")
+
+
+def test_macro_keeps_donated_planes_aliased():
+    m, k, R = 12_000, 16, 4
+    env = _sorted_env(jax.random.PRNGKey(6), m)
+    _, mac = _pair(env, k, be.FusedBackend(block_rows=8,
+                                           adaptive_bounds=True))
+    p0 = mac.round.backend.env_planes.unsafe_buffer_pointer()
+    feeds = jnp.zeros((R, m), jnp.int32)
+    mac.run_rounds(feeds)
+    mac.run_rounds(feeds)
+    assert mac.round.backend.env_planes.unsafe_buffer_pointer() == p0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: the CIS-mass re-evaluation rule (ROADMAP steady-state item).
+# ---------------------------------------------------------------------------
+
+def test_cis_mass_bound_math():
+    """Unit: the accumulator resets on evaluation, accrues beta_max * n, and
+    widens the bound by slope * mass."""
+    bb = tiered.BlockBounds(
+        asym=jnp.asarray([10.0, 10.0]), slope=jnp.asarray([1.0, 1.0]),
+        blk_max=jnp.asarray([2.0, 2.0]), last_eval=jnp.asarray([0, 0]),
+    )
+    beta_max = jnp.asarray([0.5, 0.5])
+    mass = tiered.accumulate_cis_mass(
+        jnp.asarray([3.0, 3.0]), beta_max, jnp.asarray([4, 0]),
+        evaluated=jnp.asarray([True, False]))
+    # evaluated block: reset then accrue 4 * 0.5; skipped block: keep 3.0
+    np.testing.assert_allclose(np.asarray(mass), [2.0, 3.0])
+    b0 = tiered.current_block_bounds(bb, jnp.int32(2), 1.0)
+    bm = tiered.current_block_bounds(bb, jnp.int32(2), 1.0, cis_mass=mass)
+    np.testing.assert_allclose(np.asarray(bm - b0), [2.0, 3.0])
+
+
+def test_cis_mass_skips_more_than_remark_on_sparse_feeds():
+    """The resolved ROADMAP item: under sparse weak signals the mass rule
+    must evaluate strictly fewer blocks than the blanket re-mark — while
+    both stay exactly equal to dense top-k."""
+    m, k, R = 30_000, 32, 24
+    env = _sorted_env(jax.random.PRNGKey(7), m)
+    mass_s, _ = _pair(env, k, be.FusedBackend(block_rows=8,
+                                              adaptive_bounds=True))
+    remark_s, _ = _pair(env, k, be.FusedBackend(block_rows=8,
+                                                adaptive_bounds=True,
+                                                cis_rule="remark"))
+    dense_s, _ = _pair(env, k, be.DenseBackend())
+    rng = np.random.default_rng(7)
+    fr_mass, fr_remark = [], []
+    for r in range(R):
+        feed = np.zeros((m,), np.int32)
+        # one weak signal somewhere every round — the blanket rule re-marks
+        # (and so re-evaluates) that block; the mass rule only bumps its
+        # bound by one beta-slope step
+        feed[rng.integers(0, m)] = 1
+        feed = jnp.asarray(feed)
+        ids_a, _ = mass_s.ingest_and_schedule(feed)
+        ids_b, _ = remark_s.ingest_and_schedule(feed)
+        ids_d, _ = dense_s.ingest_and_schedule(feed)
+        assert set(map(int, ids_a)) == set(map(int, ids_d)), r
+        assert set(map(int, ids_b)) == set(map(int, ids_d)), r
+        fr_mass.append(float(mass_s.round.backend.frac_active.mean()))
+        fr_remark.append(float(remark_s.round.backend.frac_active.mean()))
+    assert np.mean(fr_mass[-12:]) < np.mean(fr_remark[-12:]), (
+        fr_mass, fr_remark)
+    # Mass accrued on (at least) the fed, skipped blocks.
+    assert float(mass_s.round.backend.cis_mass.max()) > 0.0
+
+
+def test_cis_mass_resets_on_update_pages():
+    from repro.core import Env
+
+    m, k = 12_000, 16
+    env = _sorted_env(jax.random.PRNGKey(8), m)
+    s, _ = _pair(env, k, be.FusedBackend(block_rows=8, adaptive_bounds=True))
+    feed = jnp.zeros((m,), jnp.int32).at[jnp.arange(32)].set(1)
+    for _ in range(6):
+        s.ingest_and_schedule(feed)
+    bst = s.round.backend
+    bp = bst.env_planes.shape[2] * bst.env_planes.shape[3]
+    hot = np.arange(0, 64)
+    upd = Env(delta=jnp.full((64,), 2.0), mu=jnp.full((64,), 300.0),
+              lam=jnp.full((64,), 0.5), nu=jnp.full((64,), 0.1))
+    s.update_pages(hot, upd)
+    touched = np.unique(hot // bp)
+    bst = s.round.backend
+    assert (np.asarray(bst.cis_mass)[touched] == 0.0).all()
+    # beta_max refreshed from the new planes for the touched blocks
+    from repro.kernels import layout
+
+    np.testing.assert_allclose(
+        np.asarray(bst.beta_max),
+        np.asarray(layout.block_beta_max(bst.env_planes)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: feed-batch validation.
+# ---------------------------------------------------------------------------
+
+def test_run_rounds_feed_validation():
+    m, k = 8_000, 16
+    env = _sorted_env(jax.random.PRNGKey(10), m)
+    s, _ = _pair(env, k, be.FusedBackend(block_rows=8))
+    with pytest.raises(TypeError, match="integer"):
+        s.run_rounds(jnp.zeros((3, m), jnp.float32))
+    with pytest.raises(ValueError, match="feed batch"):
+        s.run_rounds(jnp.zeros((m,), jnp.int32))  # missing round axis
+    with pytest.raises(ValueError, match="entries"):
+        s.run_rounds(jnp.zeros((3, m + 7), jnp.int32))
+    # (R, m) rows are zero-padded to m_state; bool casts like _pad_feed.
+    ids, vals = s.run_rounds(np.ones((2, m), bool))
+    assert ids.shape == (2, k)
+    assert s.round.n_cis.dtype == jnp.int32
+    assert int(ids.max()) < m
+
+
+# ---------------------------------------------------------------------------
+# Satellite: adaptation counters survive a checkpoint round-trip.
+# ---------------------------------------------------------------------------
+
+def test_adapt_counters_persist_across_restore(tmp_path):
+    from repro import checkpoint as ckpt
+
+    m, k = 20_000, 128
+    env = uniform_instance(jax.random.PRNGKey(11), m)  # well-mixed
+    backend = be.FusedBackend(block_rows=8, adaptive_cand=True)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k), backend=backend)
+    zero = jnp.zeros((m,), jnp.int32)
+    # Adapt, then advance partway into the next observation window.
+    for _ in range(CrawlScheduler.CAND_ADAPT_INTERVAL + 3):
+        s.ingest_and_schedule(zero)
+    adapted = s.backend.cand_per_lane
+    assert adapted is not None
+    window = s._rounds_since_cand_adapt
+    assert window == 3
+    sd = jax.device_get(s.state_dict())
+    ckpt.save(str(tmp_path), 1, sd)
+
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=float(k), backend=backend)
+    got, _ = ckpt.restore(str(tmp_path), 1,
+                          jax.device_get(s2.state_dict()))
+    s2.load_state_dict(got)
+    # The restored service resumes with the adapted static buffer shape and
+    # the partially-elapsed window — no auto-depth revert, no restart.
+    assert s2.backend.cand_per_lane == adapted
+    assert s2._rounds_since_cand_adapt == window
+    ids, _ = s2.ingest_and_schedule(zero)
+    assert ids.shape == (k,)
+    # Old snapshots without the adapt key keep the configured depth.
+    s3 = CrawlScheduler(env, _mesh1(), bandwidth=float(k), backend=backend)
+    legacy = {kk: v for kk, v in sd.items() if kk != "adapt"}
+    s3.load_state_dict(legacy)
+    assert s3.backend.cand_per_lane is None
