@@ -273,11 +273,12 @@ def macro_round_bench():
     env = jax.tree.map(lambda x: x[order], env)
     tau0 = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=2.0)
 
-    def build(**kw):
+    def build(feed_cap=None, **kw):
         s = CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
                            round_period=dt,
                            backend=be.FusedBackend(adaptive_bounds=True,
-                                                   **kw))
+                                                   **kw),
+                           feed_cap=feed_cap)
         s.round = dataclasses.replace(s.round, tau_elap=jnp.copy(tau0))
         return s
 
@@ -297,14 +298,14 @@ def macro_round_bench():
     # "timed" call is a memcpy). The sparse (ids, counts) arrays must both
     # appear in the entry computation's signature.
     sf = mac._sparse_feed_batch(feeds)
-    cap = sf.ids.shape[1]
+    n_sh, cap = sf.ids.shape[1], sf.ids.shape[2]
     lowered = be.crawl_rounds.lower(
         mac.backend, mac.round, sf, mesh=mesh, k=mac.k_per_round, dt=dt)
     import re
 
     txt = lowered.as_text()
     n_feed_params = len(re.findall(
-        rf"%arg\d+: tensor<{R}x{cap}xi32>", txt))
+        rf"%arg\d+: tensor<{R}x{n_sh}x{cap}xi32>", txt))
     assert n_feed_params >= 2, (
         "feed batch is not a jit argument of the macro-round — timings "
         "would be constant-folded fiction")
@@ -338,13 +339,32 @@ def macro_round_bench():
     # Guard (3): no state-plane copy across the whole run.
     aliased = mac.round.backend.env_planes.unsafe_buffer_pointer() == p_env
     assert aliased, "macro-round copied the donated env planes"
+
+    # Guard (4): the per-host capacity contract — with feed_cap pinned, a
+    # hot-shard feed batch (32x the steady nnz) must reuse the compiled
+    # macro-round bit for bit: zero recompiles across hot-shard feed
+    # rounds. (Without the contract the pow2 capacity bucket grows and
+    # re-jits — on a multi-process mesh, on every host.)
+    capd = build(feed_cap=4096)
+    capd.run_rounds(np.copy(feeds_np))
+    capd.run_rounds(np.copy(feeds_np))  # donated state now committed
+    c0 = be.crawl_rounds._cache_size()
+    hot_np = np.zeros((R, m), np.int32)
+    hot_np[:, :2048] = 1
+    capd.run_rounds(hot_np)
+    no_rejit = int(be.crawl_rounds._cache_size() == c0)
+    assert no_rejit, (
+        "hot-shard feed batch re-jitted the macro-round despite the "
+        "feed_cap contract")
+
     frac = float(np.asarray(mac.macro_diagnostics.frac_active).mean())
     emit("sched/macro_round", us_mac,
          f"m={m};k={k};R={R};dt={dt};pages_per_s={m/(us_mac/1e6):.3e};"
          f"speedup_vs_sequential={us_seq/us_mac:.2f}x;"
          f"seq_us_per_round={us_seq:.1f};frac_active={frac:.3f};"
          f"feed_nnz_per_round={nnz};feeds_as_jit_args=1;exact_equal=1;"
-         f"state_planes_donated_alias={int(aliased)}")
+         f"state_planes_donated_alias={int(aliased)};"
+         f"feed_cap_no_rejit_hot_shard={no_rejit}")
 
     # --- CIS-mass rule vs blanket re-mark on the same sparse feed --------
     mass_s = build()

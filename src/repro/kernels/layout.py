@@ -237,6 +237,11 @@ def repack_pages(
     columns are written; with the env buffer donated (`backends.crawl_round`
     / `backends.refresh_pages`) the scatter is in-place — O(n_upd * n_planes)
     writes instead of the O(m * n_planes) of a full `pack_shard`.
+
+    Out-of-range ids are DROPPED (scatter mode="drop"): the shard-local
+    repack (`sched.backends.FusedBackend.update_pages`) pads each shard's
+    update batch to a common static width with a sentinel id one past the
+    shard's page count, so padding rows write nothing.
     """
     n_blocks, np_, block_rows, lanes = env.shape
     n_terms = np_ - N_ENV
@@ -252,7 +257,7 @@ def repack_pages(
     blk = ids // bp
     row = (ids % bp) // lanes
     lane = ids % lanes
-    return env.at[blk, :, row, lane].set(cols)
+    return env.at[blk, :, row, lane].set(cols, mode="drop")
 
 
 def refresh_block_bounds(
@@ -260,9 +265,11 @@ def refresh_block_bounds(
 ) -> jax.Array:
     """Recompute the static asymptote bound for the touched blocks only
     (block-granular: O(touched * block_pages) reads, everything else keeps
-    its bound). Companion to `repack_pages`."""
+    its bound). Companion to `repack_pages`; like it, out-of-range sentinel
+    ids are dropped (the gather clamps, the scatter drops) so per-shard
+    padded block batches pass through unchanged."""
     new = env[block_ids, V_INF].max(axis=(1, 2))
-    return bounds.at[block_ids].set(new)
+    return bounds.at[block_ids].set(new, mode="drop")
 
 
 def pad_state(

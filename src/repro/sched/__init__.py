@@ -19,6 +19,8 @@ from repro.sched.backends import (
 )
 from repro.sched.distributed import (
     ShardedSchedState,
+    host_local_array,
+    host_shard_range,
     make_sharded_env,
     sharded_crawl_step,
     sharded_select,

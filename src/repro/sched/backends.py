@@ -98,6 +98,13 @@ HYSTERESIS_MAX = 0.98
 HYSTERESIS_TIGHTEN = 0.01   # additive step per clean round
 HYSTERESIS_RELAX = 0.1      # additive step back per fallback round
 
+# Saturation cap of the in-scan depth-saturation counter
+# (`FusedState.depth_hot`): the counter only ever needs to distinguish "a
+# few hot rounds" from "most rounds hot" within one observation window, so
+# it saturates instead of growing without bound across a very long run
+# between boundary decisions.
+DEPTH_HOT_CAP = 1 << 20
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +168,14 @@ class FusedState(NamedTuple):
     beta_max: jax.Array     # (n_blocks,) max time-equivalent of one CIS
     cis_mass: jax.Array     # (n_blocks,) f32 accumulated worst-case clock
     #                         displacement from CIS since last exact eval
+    # --- depth-cadence plane (appended; macro depth adaptation) -----------
+    depth_hot: jax.Array    # (n_shards,) i32 saturating count of rounds in
+    #                         the current observation window whose realized
+    #                         candidate depth reached the configured buffer
+    #                         depth — lets the boundary decision distinguish
+    #                         "one hot round" from "every round saturated"
+    #                         (a lone spike must not pin the depth high for
+    #                         a whole large-R macro-round)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -207,10 +222,14 @@ class SelectionBackend(Protocol):
         ...
 
     def update_pages(self, bstate, page_ids: jax.Array, d_new: DerivedEnv,
-                     block_ids: jax.Array | None):
+                     block_ids: jax.Array | None, *, mesh: Mesh | None = None):
         """Scatter the refreshed derived parameters of `page_ids` into the
-        backend state (shard-local / block-granular where the layout allows);
-        `block_ids` are the touched blocks (fused layout only)."""
+        backend state (shard-local / block-granular where the layout allows).
+        Dense/table backends take flat global ids; the fused backend takes
+        per-shard padded batches (relative ids + touched `block_ids`) and
+        repacks inside a collective-free shard_map over `mesh`, so on a
+        multi-process mesh no cross-host index is ever shipped (see
+        `FusedBackend.update_pages` / `CrawlScheduler.update_pages`)."""
         ...
 
 
@@ -236,7 +255,8 @@ class DenseBackend:
         )
         return top_g, top_v, mask, state.backend
 
-    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None, *,
+                     mesh=None):
         return bstate._replace(d=_scatter_derived(bstate.d, page_ids, d_new))
 
 
@@ -274,7 +294,8 @@ class TableBackend:
         )
         return top_g, top_v, mask, state.backend
 
-    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None, *,
+                     mesh=None):
         d = _scatter_derived(bstate.d, page_ids, d_new)
         rows = tables.build_ncis_table(
             d_new, n_terms=self.n_terms, n_grid=bstate.table.vals.shape[-1],
@@ -300,6 +321,7 @@ class _FusedShardCtx(NamedTuple):
     thresh: jax.Array
     hyst: jax.Array
     colw: jax.Array
+    dhot: jax.Array
     clock: jax.Array
 
 
@@ -309,6 +331,7 @@ class _FusedShardUpd(NamedTuple):
     thresh: jax.Array
     hyst: jax.Array
     colw: jax.Array
+    dhot: jax.Array
     blkmax: jax.Array
     last_ev: jax.Array
     cmass: jax.Array
@@ -384,9 +407,17 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
     # Running max of realized per-column winner depth: the host-side
     # candidate-depth adaptation reads (and resets) this window.
     colw = jnp.maximum(ctx.colw, sel.col_winners)
+    # Depth-saturation counter (bounded, in-scan): one tick per round whose
+    # realized depth reached the retained buffer depth. The watermark alone
+    # cannot tell a lone hot round (absorbed by the dense fallback, depth
+    # should stay put) from persistent saturation (the buffer really is too
+    # small) once R rounds share one boundary decision.
+    dhot = jnp.minimum(
+        ctx.dhot + (sel.col_winners >= cand).astype(jnp.int32),
+        DEPTH_HOT_CAP)
     return sel, _FusedShardUpd(thresh=new_thresh, hyst=h, colw=colw,
-                               blkmax=new_blkmax, last_ev=new_last,
-                               cmass=new_cmass)
+                               dhot=dhot, blkmax=new_blkmax,
+                               last_ev=new_last, cmass=new_cmass)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -481,6 +512,7 @@ class FusedBackend:
             col_winners=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
             beta_max=_put(layout.block_beta_max(shard.env), mesh, pspec),
             cis_mass=_put(jnp.zeros(bb.asym.shape, jnp.float32), mesh, pspec),
+            depth_hot=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
         )
         return BackendInit(m_state, bstate, d, None)
 
@@ -517,7 +549,7 @@ class FusedBackend:
 
         def shard_fn(tau_elap, n_cis, cis_feed, env_shard, asym, slope,
                      blkmax, last_ev, betam, cmass, thresh_shard, hyst_shard,
-                     colw_shard, clock):
+                     colw_shard, dhot_shard, clock):
             # thresh_shard is this shard's OWN slice: the local k-th candidate
             # value of the previous round — sound to compare against local
             # block bounds (the ROADMAP per-shard threshold exchange).
@@ -532,7 +564,8 @@ class FusedBackend:
                 _FusedShardCtx(asym=asym, slope=slope, blkmax=blkmax,
                                last_ev=last_ev, betam=betam, cmass=cmass,
                                thresh=thresh, hyst=hyst_shard[0],
-                               colw=colw_shard[0], clock=clock),
+                               colw=colw_shard[0], dhot=dhot_shard[0],
+                               clock=clock),
                 blk_cis, k_loc, cand, impl, dt,
             )
             m_local = tau_elap.shape[0]
@@ -541,57 +574,98 @@ class FusedBackend:
             return (top_g, top_v, mask, upd.thresh.reshape(1),
                     sel.frac_active.reshape(1), sel.fell_back.reshape(1),
                     upd.blkmax, upd.last_ev, upd.cmass, upd.hyst.reshape(1),
-                    upd.colw.reshape(1))
+                    upd.colw.reshape(1), upd.dhot.reshape(1))
 
         fn = _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(pspec, pspec, pspec, P(axes, None, None, None),
                       pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                      pspec, P()),
+                      pspec, pspec, P()),
             out_specs=(P(), P(), pspec, pspec, pspec, pspec,
-                       pspec, pspec, pspec, pspec, pspec),
+                       pspec, pspec, pspec, pspec, pspec, pspec),
         )
         (top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, cmass, hyst,
-         colw) = fn(
+         colw, dhot) = fn(
             state.tau_elap, state.n_cis, new_cis, bst.env_planes, bst.bounds,
             bst.slope, bst.blk_max, bst.last_eval, bst.beta_max, bst.cis_mass,
-            bst.thresh, bst.hyst, bst.col_winners, state.crawl_clock,
+            bst.thresh, bst.hyst, bst.col_winners, bst.depth_hot,
+            state.crawl_clock,
         )
         new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb,
                                blk_max=blkmax, last_eval=last_ev,
-                               cis_mass=cmass, hyst=hyst, col_winners=colw)
+                               cis_mass=cmass, hyst=hyst, col_winners=colw,
+                               depth_hot=dhot)
         return top_g, top_v, mask, new_bst
 
-    def update_pages(self, bstate, page_ids, d_new, block_ids=None):
+    def update_pages(self, bstate, page_ids, d_new, block_ids=None, *,
+                     mesh=None):
+        """Shard-local ("local-range") repack: the multi-host refresh path.
+
+        page_ids: (n_shards, u_cap) i32 shard-RELATIVE page ids, one padded
+        row per shard (sentinel = shard page count, dropped by every
+        scatter); d_new: DerivedEnv of (n_shards, u_cap) fields;
+        block_ids: (n_shards, b_cap) i32 shard-relative touched-block ids
+        (sentinel = blocks per shard). `CrawlScheduler.update_pages` builds
+        these from its `host_slice`, so on a multi-process mesh each host
+        materializes only its own shards' rows and the repack below — a
+        shard_map with NO collectives — never ships a cross-host index:
+        hosts can even apply refresh batches asynchronously.
+        """
         from repro.kernels import layout
         from repro.sched import tiered
 
-        env_planes = layout.repack_pages(bstate.env_planes, page_ids, d_new)
         assert block_ids is not None, (
             "fused update_pages needs the touched block ids "
-            "(page_ids // block_pages, deduplicated)"
+            "(per-shard relative, padded; see CrawlScheduler.update_pages)"
         )
-        # Refresh every env-dependent bound row of the touched blocks
-        # (asymptote AND slope), and drop their anchors: the repacked pages'
-        # values are unrelated to the recorded block max, so the blocks
-        # re-evaluate exactly next round (last_eval = -1 -> +inf bound).
-        bb = tiered.refresh_block_params(
-            tiered.BlockBounds(asym=bstate.bounds, slope=bstate.slope,
-                               blk_max=bstate.blk_max,
-                               last_eval=bstate.last_eval),
-            env_planes, block_ids)
-        # The CIS-mass rows are env-dependent too: beta changed with the new
-        # (delta, lam, nu), and the accumulated mass described the old
-        # parameters (the dropped anchor re-evaluates the block exactly
-        # regardless).
-        beta_max = bstate.beta_max.at[block_ids].set(
-            layout.block_beta_max(env_planes, block_ids))
-        return bstate._replace(env_planes=env_planes, bounds=bb.asym,
-                               slope=bb.slope, blk_max=bb.blk_max,
-                               last_eval=bb.last_eval, beta_max=beta_max,
-                               cis_mass=bstate.cis_mass.at[block_ids]
-                               .set(0.0))
+        assert mesh is not None, "fused update_pages needs the mesh"
+        axes = tuple(mesh.axis_names)
+        pspec = P(axes)
+
+        def shard_fn(env_s, asym, slope, blkmax, last_ev, betam, cmass,
+                     ids_s, blk_s, d_n):
+            ids = ids_s[0]
+            blks = blk_s[0]
+            d_loc = DerivedEnv(*[f[0] for f in d_n])
+            env_s = layout.repack_pages(env_s, ids, d_loc)
+            # Refresh every env-dependent bound row of the touched blocks
+            # (asymptote AND slope), and drop their anchors: the repacked
+            # pages' values are unrelated to the recorded block max, so the
+            # blocks re-evaluate exactly next round (last_eval = -1 ->
+            # +inf bound).
+            bb = tiered.refresh_block_params(
+                tiered.BlockBounds(asym=asym, slope=slope, blk_max=blkmax,
+                                   last_eval=last_ev),
+                env_s, blks)
+            # The CIS-mass rows are env-dependent too: beta changed with
+            # the new (delta, lam, nu), and the accumulated mass described
+            # the old parameters (the dropped anchor re-evaluates the block
+            # exactly regardless).
+            betam = betam.at[blks].set(
+                layout.block_beta_max(env_s, blks), mode="drop")
+            cmass = cmass.at[blks].set(0.0, mode="drop")
+            return (env_s, bb.asym, bb.slope, bb.blk_max, bb.last_eval,
+                    betam, cmass)
+
+        plane_spec = P(axes, None, None, None)
+        row_spec = P(axes, None)
+        d_specs = DerivedEnv(*([row_spec] * len(d_new)))
+        fn = _shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(plane_spec, pspec, pspec, pspec, pspec, pspec, pspec,
+                      row_spec, row_spec, d_specs),
+            out_specs=(plane_spec, pspec, pspec, pspec, pspec, pspec, pspec),
+        )
+        (env_planes, asym, slope, blk_max, last_eval, beta_max, cis_mass
+         ) = fn(bstate.env_planes, bstate.bounds, bstate.slope,
+                bstate.blk_max, bstate.last_eval, bstate.beta_max,
+                bstate.cis_mass, page_ids, block_ids, d_new)
+        return bstate._replace(env_planes=env_planes, bounds=asym,
+                               slope=slope, blk_max=blk_max,
+                               last_eval=last_eval, beta_max=beta_max,
+                               cis_mass=cis_mass)
 
 
 def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
@@ -667,32 +741,52 @@ class RoundDiagnostics(NamedTuple):
     fell_back: jax.Array    # (R, n_shards) bool dense recovery taken
     hyst: jax.Array         # (R, n_shards) f32 hysteresis after the round
     col_winners: jax.Array  # (R, n_shards) i32 running candidate watermark
+    depth_hot: jax.Array    # (R, n_shards) i32 bounded in-scan counter of
+    #                         depth-saturated rounds (FusedState.depth_hot
+    #                         after each round) — lets the boundary depth
+    #                         decision tell "one hot round" from "every
+    #                         round saturated" at large R
 
 
 def _diag_rows(bstate, n_shards: int) -> RoundDiagnostics:
     if isinstance(bstate, FusedState):
         return RoundDiagnostics(bstate.frac_active, bstate.fell_back,
-                                bstate.hyst, bstate.col_winners)
+                                bstate.hyst, bstate.col_winners,
+                                bstate.depth_hot)
     return RoundDiagnostics(
         frac_active=jnp.ones((n_shards,), jnp.float32),
         fell_back=jnp.zeros((n_shards,), bool),
         hyst=jnp.zeros((n_shards,), jnp.float32),
         col_winners=jnp.zeros((n_shards,), jnp.int32),
+        depth_hot=jnp.zeros((n_shards,), jnp.int32),
     )
 
 
 class SparseFeeds(NamedTuple):
-    """A CIS feed batch in per-round COO form: the page ids that received
-    signals each round and their counts, padded to a static width `cap`
-    with id = -1 rows (dropped). `CrawlScheduler.run_rounds` converts a
-    dense (R, m) batch once on the host — CIS feeds are overwhelmingly
-    sparse in production, so inside the macro scan the feed ingest becomes
-    an O(nnz) scatter-add instead of an O(m) pass per round, and the batch
-    never materializes densely on device. counts are non-negative; ids are
-    unique within a round (guaranteed by a dense->COO conversion)."""
+    """A CIS feed batch in per-SHARD, per-round COO form: for every round
+    and every shard, the page ids of that shard's local range that received
+    signals and their counts, padded to a static width `cap` with id = -1
+    rows (dropped). `CrawlScheduler.run_rounds` converts a dense batch once
+    on the host — CIS feeds are overwhelmingly sparse in production, so
+    inside the macro scan the feed ingest becomes an O(nnz) scatter-add
+    instead of an O(m) pass per round, and the batch never materializes
+    densely on device.
 
-    ids: jax.Array     # (R, cap) i32 global (padded-flat) page ids, -1 pad
-    counts: jax.Array  # (R, cap) i32
+    The shard axis is the multi-host data-path contract (sharded alongside
+    the pages, spec P(None, axes, None)): each process converts only its
+    OWN page range and materializes only its own shards' rows
+    (`distributed.host_local_array`), so feed bytes never cross hosts. With
+    the scheduler's `feed_cap` capacity contract, `cap` is a fixed static
+    shape: a hot shard on one host changes no compiled signature and
+    therefore triggers zero recompiles on any host.
+
+    ids are global (padded-flat) page ids — each shard's slice holds only
+    ids inside that shard's local range; counts are non-negative; ids are
+    unique within a (round, shard) cell (guaranteed by a dense->COO
+    conversion)."""
+
+    ids: jax.Array     # (R, n_shards, cap) i32 global page ids, -1 pad
+    counts: jax.Array  # (R, n_shards, cap) i32
 
 
 @functools.partial(
@@ -714,8 +808,9 @@ def crawl_rounds(
     R, with every diagnostic accumulated on device.
 
     feeds: a dense (R, m_state) int32 batch (one pre-padded row per round),
-    or a `SparseFeeds` COO batch for the fused backend (the production
-    path; `CrawlScheduler.run_rounds` converts). Returns
+    or a per-shard `SparseFeeds` COO batch for the fused backend (the
+    production path; `CrawlScheduler.run_rounds` converts, host-locally on
+    multi-process meshes). Returns
     (new_round_state, (page_ids (R, k), values (R, k)), `RoundDiagnostics`).
     The stacked selection equals R sequential `crawl_round` calls
     page-id-for-page-id (property-tested):
@@ -772,6 +867,10 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
         "fused path needs n_blocks divisible by the shard count"
     )
     assert feeds.counts.shape == feeds.ids.shape, feeds
+    assert feeds.ids.ndim == 3 and feeds.ids.shape[1] == n_shards, (
+        f"SparseFeeds must be per-shard (R, n_shards={n_shards}, cap); got "
+        f"{feeds.ids.shape} — see CrawlScheduler._sparse_feed_batch"
+    )
     nb_local = n_blocks // n_shards
     k_loc, cand = ksel.shard_budget(
         k, m // n_shards, nb_local, n_shards,
@@ -780,14 +879,17 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
     impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
 
     def shard_fn(tau0, n0, fid, fcnt, env_shard, asym, slope, blkmax0, last0,
-                 betam, cmass0, thresh0, hyst0, colw0, clock0):
+                 betam, cmass0, thresh0, hyst0, colw0, dhot0, clock0):
         m_local = tau0.shape[0]
         shard_lin = _shard_linear_index(axes)
         local_start = shard_lin * m_local
+        # This shard's feed rows: (R, 1, cap) -> (R, cap).
+        fid = fid.reshape(R, -1)
+        fcnt = fcnt.reshape(R, -1)
 
         def step(carry, xs):
-            (tau, n, thresh_s, hyst_s, colw_s, blkmax, last_ev, cmass,
-             clock) = carry
+            (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev,
+             cmass, clock) = carry
             fid_r, fcnt_r = xs
             # This shard's slice of the round's sparse feed: local indices
             # with the out-of-bounds drop sentinel for other shards' pages
@@ -816,7 +918,7 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                 _FusedShardCtx(asym=asym, slope=slope, blkmax=blkmax,
                                last_ev=last_ev, betam=betam, cmass=cmass,
                                thresh=thresh, hyst=hyst_s, colw=colw_s,
-                               clock=clock),
+                               dhot=dhot_s, clock=clock),
                 blk_cis, k_loc, cand, impl, dt,
             )
             top_g, top_v, idx = _global_winners(sel.values, sel.ids, axes,
@@ -828,55 +930,58 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             tau = (tau + dt).at[idx].set(jnp.float32(dt), mode="drop")
             n = n.at[idx].set(0, mode="drop").at[fidx].add(fcnt_r,
                                                            mode="drop")
-            carry = (tau, n, upd.thresh, upd.hyst, upd.colw, upd.blkmax,
-                     upd.last_ev, upd.cmass, clock + 1)
+            carry = (tau, n, upd.thresh, upd.hyst, upd.colw, upd.dhot,
+                     upd.blkmax, upd.last_ev, upd.cmass, clock + 1)
             ys = (top_g, top_v, sel.frac_active, sel.fell_back, upd.hyst,
-                  upd.colw)
+                  upd.colw, upd.dhot)
             return carry, ys
 
-        carry0 = (tau0, n0, thresh0[0], hyst0[0], colw0[0], blkmax0, last0,
-                  cmass0, clock0)
+        carry0 = (tau0, n0, thresh0[0], hyst0[0], colw0[0], dhot0[0],
+                  blkmax0, last0, cmass0, clock0)
         carry, ys = jax.lax.scan(step, carry0, (fid, fcnt))
-        (tau, n, thresh_s, hyst_s, colw_s, blkmax, last_ev, cmass,
+        (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev, cmass,
          _clock) = carry
-        top_g, top_v, frac, fb, hyst_r, colw_r = ys
+        top_g, top_v, frac, fb, hyst_r, colw_r, dhot_r = ys
         return (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
-                colw_s.reshape(1), blkmax, last_ev, cmass, top_g, top_v,
+                colw_s.reshape(1), dhot_s.reshape(1), blkmax, last_ev,
+                cmass, top_g, top_v,
                 frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
-                colw_r.reshape(R, 1))
+                colw_r.reshape(R, 1), dhot_r.reshape(R, 1))
 
     fn = _shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(pspec, pspec, P(), P(), P(axes, None, None, None),
+        in_specs=(pspec, pspec, P(None, axes, None), P(None, axes, None),
+                  P(axes, None, None, None),
                   pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                  pspec, P()),
+                  pspec, pspec, P()),
         out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                   P(), P(), P(None, axes), P(None, axes), P(None, axes),
-                   P(None, axes)),
+                   pspec, P(), P(), P(None, axes), P(None, axes),
+                   P(None, axes), P(None, axes), P(None, axes)),
     )
-    (tau, n, thresh, hyst, colw, blkmax, last_ev, cmass, ids, vals, frac,
-     fb, hyst_r, colw_r) = fn(
+    (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
+     frac, fb, hyst_r, colw_r, dhot_r) = fn(
         state.tau_elap, state.n_cis, feeds.ids, feeds.counts, bst.env_planes,
         bst.bounds, bst.slope, bst.blk_max, bst.last_eval, bst.beta_max,
-        bst.cis_mass, bst.thresh, bst.hyst, bst.col_winners,
+        bst.cis_mass, bst.thresh, bst.hyst, bst.col_winners, bst.depth_hot,
         state.crawl_clock,
     )
     new_bst = bst._replace(thresh=thresh, frac_active=frac[-1],
                            fell_back=fb[-1], blk_max=blkmax,
                            last_eval=last_ev, cis_mass=cmass, hyst=hyst,
-                           col_winners=colw)
+                           col_winners=colw, depth_hot=dhot)
     new_state = RoundState(
         tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + R,
         backend=new_bst,
     )
     return new_state, (ids, vals), RoundDiagnostics(
-        frac_active=frac, fell_back=fb, hyst=hyst_r, col_winners=colw_r)
+        frac_active=frac, fell_back=fb, hyst=hyst_r, col_winners=colw_r,
+        depth_hot=dhot_r)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("backend",),
+    static_argnames=("backend", "mesh"),
     donate_argnames=("bstate",),
 )
 def refresh_pages(
@@ -885,8 +990,13 @@ def refresh_pages(
     page_ids: jax.Array,
     d_new: DerivedEnv,
     block_ids: jax.Array | None = None,
+    *,
+    mesh: Mesh | None = None,
 ):
     """Jitted decentralized parameter refresh: scatter `d_new` (derived with
     the frozen construction-time mu_total) into the donated backend state.
-    Fused backends repack only the touched plane columns + block bounds."""
-    return backend.update_pages(bstate, page_ids, d_new, block_ids)
+    Fused backends repack only the touched plane columns + block bounds,
+    shard-locally (per-shard batches inside a collective-free shard_map over
+    `mesh` — required for the fused backend, ignored by the rest)."""
+    return backend.update_pages(bstate, page_ids, d_new, block_ids,
+                                mesh=mesh)

@@ -107,6 +107,50 @@ def _shard_linear_index(axes):
     return shard_lin
 
 
+def host_shard_range(mesh: Mesh) -> tuple[int, int]:
+    """The contiguous [s0, s1) range of linear shard indices whose devices
+    are addressable from this process — the basis of the scheduler's
+    `host_slice` (multi-host data path: each process touches only the pages
+    of its own shards). The linearization is row-major over the mesh axes,
+    matching `_shard_linear_index`, so shard s owns pages
+    [s * m_shard, (s+1) * m_shard) of the flat padded page space.
+
+    On a single-process mesh this is (0, mesh.size). Raises if this
+    process's devices are not contiguous in the linearization — the
+    host-local data path needs one contiguous page range per host (the
+    default `jax.distributed` device assignment satisfies this)."""
+    devs = mesh.devices.reshape(-1)
+    pid = jax.process_index()
+    mine = [i for i, d in enumerate(devs) if d.process_index == pid]
+    if not mine:
+        raise ValueError(
+            f"process {pid} owns no devices of this mesh; every "
+            "participating process must contribute devices")
+    s0, s1 = mine[0], mine[-1] + 1
+    if mine != list(range(s0, s1)):
+        raise ValueError(
+            f"process {pid}'s mesh devices occupy non-contiguous linear "
+            f"shard slots {mine}; the host-local data path needs one "
+            "contiguous page range per host — reorder the mesh devices")
+    return s0, s1
+
+
+def host_local_array(local, mesh: Mesh, spec: P) -> jax.Array:
+    """Build a (possibly multi-process) global array from this process's
+    local data. `local` holds exactly this process's addressable slice of
+    the global array (for a single-process mesh, the whole array).
+
+    This is THE device-put of the host-local data path: on a multi-process
+    mesh each host materializes only its own shards
+    (`jax.make_array_from_process_local_data`), so a feed or refresh batch
+    never leaves the host that produced it; single-process meshes take the
+    plain sharded `device_put`."""
+    sharding = NamedSharding(mesh, spec)
+    if jax.process_count() == 1:
+        return jax.device_put(local, sharding)
+    return jax.make_array_from_process_local_data(sharding, local)
+
+
 def _global_winners(loc_v, loc_i, axes, m_local, k):
     """Candidate exchange + global top-k (shared by the dense and fused
     paths). loc_i are shard-local page indices. Returns (global_ids, values,

@@ -15,6 +15,14 @@ highlights:
   * **closed estimation loop** (App. E): `ingest_crawl_results` fits the
     CIS-quality MLE (`core.estimation.fit_mle_pages`) on crawl logs and
     feeds the refreshed parameters straight back through `update_pages`;
+  * **host-local data path** (§5.2's decentralization, multi-process): the
+    scheduler's `host_slice` (the page range whose shards live on this
+    process) threads through feed conversion, parameter refresh, and
+    crawl-log ingestion — each host converts only its local feed rows
+    (per-shard `SparseFeeds` + the `feed_cap` capacity contract, so a hot
+    shard re-jits no one), repacks only its local plane columns
+    (collective-free shard_map; `update_cap`), and estimates only its own
+    crawl logs. See README "Multi-host deployment";
   * **adaptive skip control** (App. G): with
     `FusedBackend(adaptive_bounds=True)` the per-block bounds refresh from
     each round's block maxima and the warm-start hysteresis adapts per
@@ -50,7 +58,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import estimation
 from repro.core.values import DerivedEnv, Env, derive
 from repro.sched import backends as be
-from repro.sched.distributed import ShardedSchedState
+from repro.sched.distributed import (
+    ShardedSchedState,
+    host_local_array,
+    host_shard_range,
+)
 
 # Legacy constant, re-exported for back-compat (now lives per backend:
 # `FusedBackend.hysteresis`).
@@ -81,6 +93,8 @@ class CrawlScheduler:
         use_fused: bool = False,
         block_rows: int | None = None,
         backend: be.SelectionBackend | None = None,
+        feed_cap: int | None = None,
+        update_cap: int | None = None,
     ):
         if backend is None:
             if use_kernel or use_fused:
@@ -97,8 +111,23 @@ class CrawlScheduler:
         self.round_period = float(round_period)
         self.bandwidth = float(bandwidth)
         self.m = env.m
+        # Per-host capacity contracts (multi-host data path): feed_cap is
+        # the static COO width per (round, shard) cell of a SparseFeeds
+        # batch, update_cap the static per-shard width of an update_pages
+        # batch. Fixing them makes every compiled shape independent of feed
+        # / refresh content, so a hot shard on one host can never force a
+        # re-jit — on any host. None = derive a pow2 bucket per batch
+        # (single-process convenience; multi-process meshes require
+        # explicit caps, since all hosts must agree on the static shapes).
+        self.feed_cap = feed_cap
+        self.update_cap = update_cap
         self.round, binit = be.init_round(backend, env, mesh)
         self.m_state = binit.m_state
+        # Process-local shard/page range (the `host_slice` view): on a
+        # multi-process mesh this process's devices own the contiguous
+        # shard range [s0, s1) and therefore pages
+        # [s0 * m_shard, s1 * m_shard) of the flat padded page space.
+        self._host_shards = host_shard_range(mesh)
         # Host-side conveniences: the derived (padded) env oracle and the
         # frozen importance normalizer (see backends module docstring). For
         # dense/table backends `d`/`table` read through to the live backend
@@ -140,6 +169,34 @@ class CrawlScheduler:
             crawl_clock=self.round.crawl_clock,
         )
 
+    # -- the host-local view (multi-host data path) ------------------------
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.size
+
+    @property
+    def m_shard(self) -> int:
+        """Pages per shard of the flat padded page space."""
+        return self.m_state // self.n_shards
+
+    @property
+    def host_slice(self) -> slice:
+        """The process-local page range [lo, hi) in the padded page space.
+
+        Single-process meshes see the whole corpus (`slice(0, m_state)`).
+        On a multi-process mesh this is the contiguous range of pages whose
+        state shards live on this process's devices; the data path —
+        `_sparse_feed_batch`, `update_pages`, `ingest_crawl_results` — is
+        threaded through it, so each host converts/applies only its own
+        range and no feed or refresh bytes ever cross hosts."""
+        s0, s1 = self._host_shards
+        return slice(s0 * self.m_shard, s1 * self.m_shard)
+
+    @property
+    def is_multiprocess(self) -> bool:
+        s0, s1 = self._host_shards
+        return (s1 - s0) != self.n_shards
+
     # -- bandwidth ---------------------------------------------------------
     @property
     def k_per_round(self) -> int:
@@ -152,16 +209,31 @@ class CrawlScheduler:
         self.bandwidth = float(bandwidth)
 
     # -- the round ---------------------------------------------------------
+    def _feed_widths(self) -> tuple[int, ...]:
+        """Accepted per-round feed widths: the full corpus (m), pre-padded
+        (m_state), or — on a multi-process mesh — this host's local page
+        range (the host-local feed contract)."""
+        lo, hi = self.host_slice.start, self.host_slice.stop
+        if self.is_multiprocess:
+            return (self.m, self.m_state, hi - lo)
+        return (self.m, self.m_state)
+
     def _pad_feed(self, new_cis: jax.Array) -> jax.Array:
         """Validate + zero-pad a per-page feed to the packed state size (the
         one shared padding path). A feed must cover exactly the corpus
-        (length m) or be pre-padded (length m_state); anything else is an
-        error — a longer feed would silently credit its tail counts to
-        padding pages, a shorter one would starve real pages. CIS counts
-        are integral by definition, and the round ADDS the feed to the
-        donated int32 n_cis state: a float feed would silently promote it
-        to f32 and break the donated-buffer dtype contract on the next
-        round, so non-integer dtypes are rejected (bool counts are cast)."""
+        (length m), be pre-padded (length m_state), or — multi-process —
+        cover exactly this host's local range; anything else is an error —
+        a longer feed would silently credit its tail counts to padding
+        pages, a shorter one would starve real pages. CIS counts are
+        integral by definition, and the round ADDS the feed to the donated
+        int32 n_cis state: a float feed would silently promote it to f32
+        and break the donated-buffer dtype contract on the next round, so
+        non-integer dtypes are rejected (bool counts are cast).
+
+        On a multi-process mesh the returned array is built from this
+        host's slice only (`distributed.host_local_array`): a full-width
+        feed is sliced to the local range first, so no feed bytes cross
+        hosts either way."""
         from repro.kernels import layout
 
         new_cis = jnp.asarray(new_cis)
@@ -173,12 +245,18 @@ class CrawlScheduler:
                 "the donated int32 n_cis state to f32"
             )
         n = new_cis.shape[0]
-        if n not in (self.m, self.m_state):
+        if n not in self._feed_widths():
             raise ValueError(
                 f"new_cis has {n} entries but the scheduler holds {self.m} "
                 f"pages ({self.m_state} padded); feed one count per page"
             )
-        return layout.pad_to(new_cis, self.m_state, 0, dtype=jnp.int32)
+        if not self.is_multiprocess:
+            return layout.pad_to(new_cis, self.m_state, 0, dtype=jnp.int32)
+        lo, hi = self.host_slice.start, self.host_slice.stop
+        if n in (self.m, self.m_state) and n != hi - lo:
+            new_cis = new_cis[lo:min(hi, n)]
+        local = layout.pad_to(new_cis, hi - lo, 0, dtype=jnp.int32)
+        return host_local_array(np.asarray(local), self.mesh, P(self.axes))
 
     def ingest_and_schedule(self, new_cis: jax.Array):
         """One round: ingest the CIS feed counts, pick k pages to crawl."""
@@ -206,55 +284,138 @@ class CrawlScheduler:
                 "the donated int32 n_cis state to f32"
             )
         n = feeds.shape[1]
-        if n not in (self.m, self.m_state):
+        if n not in self._feed_widths():
             raise ValueError(
                 f"feed rows have {n} entries but the scheduler holds "
                 f"{self.m} pages ({self.m_state} padded); feed one count "
                 "per page"
             )
 
+    def _resolve_cap(self, need: int, cap: int | None, name: str,
+                     what: str) -> int:
+        """THE per-host capacity rule, shared by the feed conversion and
+        the update-batch packer: a pinned contract cap (over-cap raises),
+        or a pow2 bucket of the observed per-shard need (single-process
+        only — all hosts of a multi-process mesh must agree on static
+        shapes, which local data alone cannot guarantee).
+
+        NOTE (multi-process): `need` is computed from THIS host's rows, so
+        the over-cap ValueError is host-local — peer hosts whose rows fit
+        the contract will enter the round and wait at its collectives. A
+        multi-host driver must treat this error as fatal fleet-wide (it is
+        a configuration/contract violation, not a per-host condition to
+        swallow)."""
+        if cap is not None:
+            if need > cap:
+                raise ValueError(
+                    f"{what.format(need=need)}, over the {name} contract "
+                    f"({cap}); raise {name} (one re-jit) or split the "
+                    "batch — on a multi-process mesh, treat this as fatal "
+                    "fleet-wide: hosts under the cap are already waiting"
+                )
+            return cap
+        if self.is_multiprocess:
+            raise ValueError(
+                f"multi-process meshes require an explicit {name}: the "
+                "per-host conversion cannot derive a capacity bucket all "
+                "hosts agree on from local data alone"
+            )
+        return int(max(1, 1 << max(0, (need - 1).bit_length())))
+
+    def _local_feed_rows(self, feeds_np: np.ndarray) -> np.ndarray:
+        """This host's (R, hi - lo) slice of a validated dense feed batch:
+        full-width batches are sliced to the local range (and the padded
+        tail zero-filled), local-width batches pass through."""
+        lo, hi = self.host_slice.start, self.host_slice.stop
+        n = feeds_np.shape[1]
+        if n in (self.m, self.m_state) and n != hi - lo:
+            feeds_np = feeds_np[:, lo:min(hi, n)]
+        if feeds_np.shape[1] != hi - lo:
+            feeds_np = np.concatenate(
+                [feeds_np,
+                 np.zeros((feeds_np.shape[0],
+                           (hi - lo) - feeds_np.shape[1]), np.int32)],
+                axis=1)
+        return feeds_np
+
     def _pad_feeds(self, feeds) -> jax.Array:
         """Validate + pad a (R, m) feed batch to (R, m_state), sharded like
-        the page state along the page axis (replicated over rounds)."""
-        feeds = jnp.asarray(feeds)
+        the page state along the page axis (replicated over rounds). On a
+        multi-process mesh each host contributes only its local rows
+        (`host_local_array`); single-process keeps device-resident batches
+        on device (no host round trip)."""
+        if not self.is_multiprocess:
+            feeds = jnp.asarray(feeds)
+            self._check_feed_batch(feeds)
+            feeds = feeds.astype(jnp.int32)
+            if feeds.shape[1] != self.m_state:
+                feeds = jnp.concatenate(
+                    [feeds, jnp.zeros((feeds.shape[0],
+                                       self.m_state - feeds.shape[1]),
+                                      jnp.int32)], axis=1)
+            return jax.device_put(
+                feeds, NamedSharding(self.mesh, P(None, self.axes)))
+        feeds = np.asarray(feeds)
         self._check_feed_batch(feeds)
-        feeds = feeds.astype(jnp.int32)
-        if feeds.shape[1] != self.m_state:
-            feeds = jnp.concatenate(
-                [feeds, jnp.zeros((feeds.shape[0],
-                                   self.m_state - feeds.shape[1]),
-                                  jnp.int32)], axis=1)
-        return jax.device_put(
-            feeds, NamedSharding(self.mesh, P(None, self.axes)))
+        local = self._local_feed_rows(feeds.astype(np.int32, copy=False))
+        return host_local_array(local, self.mesh, P(None, self.axes))
 
     def _sparse_feed_batch(self, feeds) -> be.SparseFeeds:
-        """Convert a dense (R, m) feed batch to the per-round COO form the
-        fused macro scan consumes (`backends.SparseFeeds`): one host pass
-        over the batch, with the column capacity rounded up to a power of
-        two so repeated batch shapes reuse one compiled macro-round. The
-        conversion is memoized on the batch's object identity (the cache
-        retains the batch, so its id cannot be recycled while cached) —
-        production drivers that re-send one mutated-in-place buffer should
-        pass a fresh array per batch; the cache only short-circuits the
-        exact same immutable batch object (e.g. benchmark reps)."""
+        """Convert a dense CIS feed batch to the per-SHARD COO form the
+        fused macro scan consumes (`backends.SparseFeeds`, (R, n_shards,
+        cap)): one host pass over this host's local page range only — on a
+        multi-process mesh each host converts its own range and
+        materializes its own shards' rows, so a feed batch never crosses
+        hosts.
+
+        Capacity: the `feed_cap` contract when set (a fixed static shape —
+        feed content can never change a compiled signature, so a hot shard
+        triggers zero recompiles on any host; a cell over the contract
+        raises). Without a contract the per-(round, shard) capacity is
+        rounded up to a power of two so repeated batch shapes reuse one
+        compiled macro-round (single-process only: multi-process meshes
+        must pin feed_cap, since all hosts must agree on static shapes).
+
+        The conversion is memoized on the batch's object identity (the
+        cache retains the batch, so its id cannot be recycled while
+        cached) — production drivers that re-send one mutated-in-place
+        buffer should pass a fresh array per batch; the cache only
+        short-circuits the exact same immutable batch object (e.g.
+        benchmark reps)."""
         cached = getattr(self, "_sparse_feed_cache", None)
-        if cached is not None and cached[0] is feeds:
-            return cached[1]
+        if (cached is not None and cached[0] is feeds
+                and cached[1] == self.feed_cap):
+            return cached[2]
         feeds_np = np.asarray(feeds)
         self._check_feed_batch(feeds_np)
-        feeds_np = feeds_np.astype(np.int32, copy=False)
-        rr, cc = np.nonzero(feeds_np)
-        n_rounds = feeds_np.shape[0]
-        nnz = np.bincount(rr, minlength=n_rounds)
-        cap = int(max(1, 1 << (int(nnz.max()) - 1).bit_length()
-                      if nnz.max() else 1))
-        ids = np.full((n_rounds, cap), -1, np.int32)
-        cnt = np.zeros((n_rounds, cap), np.int32)
-        col = np.concatenate([np.arange(x) for x in nnz]) if rr.size else rr
-        ids[rr, col] = cc
-        cnt[rr, col] = feeds_np[rr, cc]
-        sf = be.SparseFeeds(ids=jnp.asarray(ids), counts=jnp.asarray(cnt))
-        self._sparse_feed_cache = (feeds, sf)
+        local = self._local_feed_rows(feeds_np.astype(np.int32, copy=False))
+        lo = self.host_slice.start
+        ms = self.m_shard
+        s0, s1 = self._host_shards
+        n_loc = s1 - s0
+        n_rounds = local.shape[0]
+        loc3 = local.reshape(n_rounds, n_loc, ms)
+        rr, ss, cc = np.nonzero(loc3)
+        nnz = np.zeros((n_rounds, n_loc), np.int64)
+        np.add.at(nnz, (rr, ss), 1)
+        need = int(nnz.max()) if rr.size else 0
+        cap = self._resolve_cap(need, self.feed_cap, "feed_cap",
+                                "a feed round carries {need} signalled "
+                                "pages on one shard")
+        ids = np.full((n_rounds, n_loc, cap), -1, np.int32)
+        cnt = np.zeros((n_rounds, n_loc, cap), np.int32)
+        if rr.size:
+            # np.nonzero is row-major, so entries of one (round, shard)
+            # cell are consecutive; their within-cell positions:
+            col = np.concatenate([np.arange(x) for x in nnz.reshape(-1)])
+            ids[rr, ss, col] = lo + ss * ms + cc
+            cnt[rr, ss, col] = loc3[rr, ss, cc]
+        spec = P(None, self.axes, None)
+        sf = be.SparseFeeds(ids=host_local_array(ids, self.mesh, spec),
+                            counts=host_local_array(cnt, self.mesh, spec))
+        # Keyed on (batch identity, cap contract): a feed_cap change must
+        # re-validate and re-shape even for the exact same batch object.
+        self._sparse_feed_cache = (feeds, self.feed_cap, sf)
         return sf
 
     def run_rounds(self, feeds):
@@ -290,6 +451,13 @@ class CrawlScheduler:
     # -- from observed concentration") --------------------------------------
     CAND_ADAPT_INTERVAL = 16  # rounds between host-side depth decisions
     CAND_ADAPT_MARGIN = 2     # retained slack above the observed watermark
+    # A window is "persistently saturated" when more than this fraction of
+    # its rounds hit the retained depth (`FusedState.depth_hot`); rarer
+    # saturation is treated as a lone hot round the dense fallback already
+    # absorbed, and the watermark spike is NOT chased (ROADMAP macro
+    # depth-cadence item: one hot round in a large-R macro-round must not
+    # pin the depth high for the whole batch).
+    CAND_HOT_FRAC = 1 / 8
 
     def _cand_floor(self, k: int) -> int:
         """Smallest candidate depth whose per-shard buffer capacity still
@@ -339,13 +507,25 @@ class CrawlScheduler:
 
         rounds: how many rounds just ran — a macro-round credits its whole
         batch, so the blocking `device_get` of the watermark happens at most
-        once per macro-round boundary, never inside the scan."""
+        once per macro-round boundary, never inside the scan.
+
+        Cadence (the ROADMAP macro depth-cadence item): the watermark is a
+        running max, so with large R one hot round would pin it — and the
+        depth — high for the whole batch. The bounded in-scan saturation
+        counter (`FusedState.depth_hot`, surfaced per round in
+        `RoundDiagnostics`) disambiguates: if at most CAND_HOT_FRAC of the
+        window's rounds saturated the retained depth, the spike was
+        exceptional — the dense fallback already restored exactness for
+        those rounds — and the current depth is kept; only persistent
+        saturation (or a clean window) re-targets the depth from the
+        watermark."""
         b = self.backend
         if not (isinstance(b, be.FusedBackend) and b.adaptive_cand):
             return
         self._rounds_since_cand_adapt = getattr(
             self, "_rounds_since_cand_adapt", 0) + rounds
-        if self._rounds_since_cand_adapt < self.CAND_ADAPT_INTERVAL:
+        window = self._rounds_since_cand_adapt
+        if window < self.CAND_ADAPT_INTERVAL:
             return
         self._rounds_since_cand_adapt = 0
         from repro.kernels import select as ksel
@@ -361,45 +541,132 @@ class CrawlScheduler:
         )
         cur = b.cand_per_lane or auto
         obs = int(np.asarray(jax.device_get(bst.col_winners)).max())
-        target = min(max(obs + self.CAND_ADAPT_MARGIN, 2,
-                         self._cand_floor(k)), auto)
+        hot = int(np.asarray(jax.device_get(bst.depth_hot)).max())
+        if 0 < hot <= max(1, int(window * self.CAND_HOT_FRAC)):
+            # A lone hot round: hold the steady-state depth instead of
+            # chasing the watermark spike.
+            target = min(max(cur, self._cand_floor(k)), auto)
+        else:
+            target = min(max(obs + self.CAND_ADAPT_MARGIN, 2,
+                             self._cand_floor(k)), auto)
         if target != cur:
             self.backend = dataclasses.replace(b, cand_per_lane=target)
         # Fresh observation window either way.
         self.round = dataclasses.replace(
             self.round,
-            backend=bst._replace(col_winners=jnp.zeros_like(bst.col_winners)),
+            backend=bst._replace(
+                col_winners=jnp.zeros_like(bst.col_winners),
+                depth_hot=jnp.zeros_like(bst.depth_hot)),
         )
 
     # -- decentralized parameter refresh (§5.2 / App. E) -------------------
-    def update_pages(self, page_ids, env_updates: Env):
-        """Refresh the environment parameters of `page_ids` in place.
+    # Benign DerivedEnv fill values for the sentinel rows of a per-shard
+    # update batch: every packed plane derived from them is finite, and the
+    # sentinel ids drop the rows from every scatter anyway.
+    _D_FILL = dict(delta=1.0, mu_t=0.0, lam=0.0, nu=0.0, gamma=1.0,
+                   alpha=1.0, b=0.0, beta=0.0)
 
-        env_updates: raw Env fields of shape (n_upd,) (new delta/mu/lam/nu
-        per updated page). Shard-local and block-granular: only the touched
-        rows of the backend state are rewritten (fused: the touched plane
-        columns + the touched blocks' bounds), with the state buffer donated
-        so nothing else is copied. Normalization uses the frozen
-        construction-time mu_total — greedy selection is scale-invariant, so
-        no global renormalization pass is ever needed.
-        """
-        ids_np = np.asarray(page_ids)
+    def _shard_update_batches(self, ids_np: np.ndarray, d_new: DerivedEnv):
+        """Pack a flat host-local update batch into the per-shard padded
+        form the fused local-range repack consumes: shard-relative page ids
+        (n_local_shards, u_cap) with sentinel = m_shard, the matching
+        DerivedEnv columns, and the per-shard touched-block ids
+        (n_local_shards, b_cap) with sentinel = blocks-per-shard. Each host
+        builds only its own shards' rows; `host_local_array` materializes
+        them in place, so refresh jobs never ship cross-host indices."""
+        ms = self.m_shard
+        s0, s1 = self._host_shards
+        n_loc = s1 - s0
+        bst = self.round.backend
+        bp = bst.env_planes.shape[2] * bst.env_planes.shape[3]
+        nb_local = bst.env_planes.shape[0] // self.n_shards
+        lo = self.host_slice.start
+        rel = ids_np - lo
+        shard_row = rel // ms            # local shard row in [0, n_loc)
+        rel_in_shard = rel - shard_row * ms
+        counts = np.bincount(shard_row, minlength=n_loc) if rel.size else (
+            np.zeros((n_loc,), np.int64))
+        need = int(counts.max()) if rel.size else 0
+        u_cap = self._resolve_cap(need, self.update_cap, "update_cap",
+                                  "a refresh batch touches {need} pages "
+                                  "on one shard")
+        b_cap = min(u_cap, nb_local)
+        ids_arr = np.full((n_loc, u_cap), ms, np.int32)       # sentinel
+        d_cols = [np.full((n_loc, u_cap), self._D_FILL[f], np.float32)
+                  for f in DerivedEnv._fields]
+        blk_arr = np.full((n_loc, b_cap), nb_local, np.int32)  # sentinel
+        if rel.size:
+            order = np.argsort(shard_row, kind="stable")
+            col = np.concatenate([np.arange(c) for c in counts])
+            rows = shard_row[order]
+            ids_arr[rows, col] = rel_in_shard[order]
+            for dst, field in zip(d_cols, d_new):
+                dst[rows, col] = np.asarray(field, np.float32)[order]
+            blk = np.unique(
+                np.stack([shard_row, rel_in_shard // bp], axis=1), axis=0)
+            bcnt = np.bincount(blk[:, 0], minlength=n_loc)
+            bcol = np.concatenate([np.arange(c) for c in bcnt])
+            blk_arr[blk[:, 0], bcol] = blk[:, 1]
+        row_spec = P(self.axes, None)
+        return (
+            host_local_array(ids_arr, self.mesh, row_spec),
+            DerivedEnv(*[host_local_array(c, self.mesh, row_spec)
+                         for c in d_cols]),
+            host_local_array(blk_arr, self.mesh, row_spec),
+        )
+
+    def _local_update_rows(self, page_ids, env_updates: Env):
+        """Validate a refresh batch and keep only this host's local rows
+        (the `host_slice` filter of the multi-host data path; single-process
+        meshes keep everything)."""
+        ids_np = np.asarray(page_ids).astype(np.int64, copy=False).reshape(-1)
         if ids_np.size and (ids_np.min() < 0 or ids_np.max() >= self.m):
             raise ValueError(
                 f"page ids must be in [0, {self.m}); got "
                 f"[{ids_np.min()}, {ids_np.max()}]"
             )
-        ids = jnp.asarray(ids_np, jnp.int32)
-        d_new = derive(env_updates, mu_total=self.mu_total)
-        block_ids = None
+        env_np = Env(*[np.asarray(f) for f in env_updates])
+        if self.is_multiprocess:
+            lo, hi = self.host_slice.start, self.host_slice.stop
+            keep = (ids_np >= lo) & (ids_np < hi)
+            if not keep.all():
+                ids_np = ids_np[keep]
+                env_np = Env(*[f[keep] for f in env_np])
+        return ids_np, env_np
+
+    def update_pages(self, page_ids, env_updates: Env):
+        """Refresh the environment parameters of `page_ids` in place.
+
+        env_updates: raw Env fields of shape (n_upd,) (new delta/mu/lam/nu
+        per updated page). Shard-local and block-granular: only the touched
+        rows of the backend state are rewritten — for the fused backend via
+        the local-range repack (`FusedBackend.update_pages`): per-shard
+        padded batches inside a collective-free shard_map, so each mesh
+        shard scatters only its own plane columns and touched-block bounds.
+        On a multi-process mesh the batch is first filtered to this host's
+        `host_slice` (hosts outside the range contribute nothing), each
+        host materializes only its own shards' rows, and — since the repack
+        contains no collectives — hosts may apply refresh batches
+        asynchronously. The state buffer is donated so nothing else is
+        copied. Normalization uses the frozen construction-time mu_total —
+        greedy selection is scale-invariant, so no global renormalization
+        pass is ever needed.
+        """
+        ids_np, env_np = self._local_update_rows(page_ids, env_updates)
+        d_new = derive(env_np, mu_total=self.mu_total)
         if isinstance(self.round.backend, be.FusedState):
-            bp = (self.round.backend.env_planes.shape[2] *
-                  self.round.backend.env_planes.shape[3])
-            block_ids = jnp.asarray(np.unique(ids_np // bp), jnp.int32)
             # The host-side dense oracle syncs lazily on `.d` access.
-            self._d_pending.append((ids, d_new))
-        new_bstate = be.refresh_pages(self.backend, self.round.backend, ids,
-                                      d_new, block_ids)
+            self._d_pending.append(
+                (jnp.asarray(ids_np, jnp.int32), d_new))
+            ids, d_shard, block_ids = self._shard_update_batches(ids_np,
+                                                                 d_new)
+            new_bstate = be.refresh_pages(self.backend, self.round.backend,
+                                          ids, d_shard, block_ids,
+                                          mesh=self.mesh)
+        else:
+            new_bstate = be.refresh_pages(self.backend, self.round.backend,
+                                          jnp.asarray(ids_np, jnp.int32),
+                                          d_new, None, mesh=self.mesh)
         self.round = dataclasses.replace(self.round, backend=new_bstate)
 
     def ingest_crawl_results(self, page_ids, tau, n_cis, fresh):
@@ -411,16 +678,29 @@ class CrawlScheduler:
         (`core.estimation.fit_mle_pages`), maps it back to raw env
         parameters (importance mu is unchanged — it comes from request logs,
         not crawl logs), and applies `update_pages`. Returns the fitted
-        `CISQuality` for observability.
+        `CISQuality` for observability (of the rows this host processed).
+
+        Host-local: on a multi-process mesh the crawl-log rows are first
+        filtered to this host's `host_slice` — each host estimates and
+        refreshes only its own pages, so neither the MLE input nor the
+        refresh scatter ever crosses hosts.
         """
+        ids_np = np.asarray(page_ids).reshape(-1)
+        tau, n_cis, fresh = (np.asarray(x) for x in (tau, n_cis, fresh))
+        if self.is_multiprocess:
+            lo, hi = self.host_slice.start, self.host_slice.stop
+            keep = (ids_np >= lo) & (ids_np < hi)
+            ids_np = ids_np[keep]
+            tau, n_cis, fresh = tau[keep], n_cis[keep], fresh[keep]
         q = estimation.fit_mle_pages(tau, n_cis, fresh)
-        ids = jnp.asarray(np.asarray(page_ids), jnp.int32)
+        ids = jnp.asarray(ids_np, jnp.int32)
         mu = self._gather_mu_t(ids) * self.mu_total
-        self.update_pages(page_ids, estimation.quality_to_env(q, mu))
+        self.update_pages(ids_np, estimation.quality_to_env(q, mu))
         return q
 
     def _gather_mu_t(self, ids: jax.Array) -> jax.Array:
-        """Normalized importance of `ids`, read from the live backend state.
+        """Normalized importance of `ids` (host-local by contract), read
+        from the live backend state.
 
         For the fused backend this gathers the MU_T plane columns of the
         packed tensor directly — an O(n_upd) gather. Going through the `.d`
@@ -428,15 +708,35 @@ class CrawlScheduler:
         full-plane scatter per queued `update_pages` batch — pathologically
         slow on CPU for large scatter windows) just to read a handful of mu
         values; the packed planes are always current because `update_pages`
-        writes them eagerly."""
+        writes them eagerly. On a multi-process mesh the gather walks this
+        host's addressable plane shards (ids outside the host range are not
+        supported there — the data-path contract filters them first), so it
+        ships no cross-host indices either."""
         from repro.kernels import layout
 
         b = self.round.backend
         if not isinstance(b, be.FusedState):
             return self.d.mu_t[ids]
         bp = b.env_planes.shape[2] * b.env_planes.shape[3]
-        return b.env_planes[ids // bp, layout.MU_T,
-                            (ids % bp) // layout.LANES, ids % layout.LANES]
+        if not self.is_multiprocess:
+            return b.env_planes[ids // bp, layout.MU_T,
+                                (ids % bp) // layout.LANES,
+                                ids % layout.LANES]
+        # Per-addressable-shard gather: each id lives in a block whose
+        # plane shard is local to this host (the host_slice contract).
+        ids_np = np.asarray(ids)
+        out = np.zeros(ids_np.shape, np.float32)
+        for shard in b.env_planes.addressable_shards:
+            blk0 = shard.index[0].start or 0
+            blk1 = blk0 + shard.data.shape[0]
+            sel = (ids_np // bp >= blk0) & (ids_np // bp < blk1)
+            if not sel.any():
+                continue
+            rel = ids_np[sel] - blk0 * bp
+            out[sel] = np.asarray(
+                shard.data[rel // bp, layout.MU_T,
+                           (rel % bp) // layout.LANES, rel % layout.LANES])
+        return jnp.asarray(out)
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self):

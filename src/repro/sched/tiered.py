@@ -170,15 +170,18 @@ def refresh_block_params(
     with the new (Delta, mu) and the stale block max is no longer an anchor,
     so last_eval resets to the never-evaluated sentinel -1 — the next
     round's bound is +inf and the block re-evaluates exactly.
-    Block-granular: untouched rows are not rewritten."""
+    Block-granular: untouched rows are not rewritten. Out-of-range sentinel
+    block ids (the shard-local repack pads each shard's touched-block batch
+    to a static width with id = n_blocks_local) are dropped by every
+    scatter, so padding rows touch nothing."""
     from repro.kernels import layout
 
     mu_new = layout.block_mu_max(env_planes, block_ids)
     return BlockBounds(
         asym=layout.refresh_block_bounds(env_planes, bb.asym, block_ids),
-        slope=bb.slope.at[block_ids].set(_block_slope(mu_new)),
-        blk_max=bb.blk_max.at[block_ids].set(0.0),
-        last_eval=bb.last_eval.at[block_ids].set(-1),
+        slope=bb.slope.at[block_ids].set(_block_slope(mu_new), mode="drop"),
+        blk_max=bb.blk_max.at[block_ids].set(0.0, mode="drop"),
+        last_eval=bb.last_eval.at[block_ids].set(-1, mode="drop"),
     )
 
 

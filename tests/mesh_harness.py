@@ -1,0 +1,139 @@
+"""Reusable mesh test harness.
+
+Two launchers factor the subprocess pattern every sharded/multi-host test
+needs (previously duplicated across test_adaptive.py / test_macro.py):
+
+  * `run_forced_shards(body, n_devices)` — one process whose host platform
+    is forced to expose `n_devices` CPU devices (`XLA_FLAGS=
+    --xla_force_host_platform_device_count`), the classic single-host
+    multi-shard setup. A fresh process is required because the flag must be
+    set before jax initializes.
+
+  * `run_distributed(body, n_procs, devices_per_proc)` — a GENUINE
+    multi-process `jax.distributed` mesh: n_procs separate processes, each
+    owning devices_per_proc forced CPU devices, coordinated over localhost
+    with the gloo CPU collectives backend. This is a real SPMD deployment —
+    per-process jit caches, per-process addressable shards, cross-host
+    collectives — not an emulation, so it can prove host-locality claims
+    (e.g. "a hot shard on one host triggers zero recompiles on the other
+    host") that a forced-device-count mesh cannot.
+
+Bodies are plain Python source (dedented automatically) run with
+`PYTHONPATH=src` from the repo root. They must print `token` on success —
+`run_distributed` requires the token from EVERY process. Distributed bodies
+see `PROC_ID`, `N_PROCS`, `N_DEVICES` (global device count) predefined and
+jax already initialized; use `tmpdir` (also predefined, shared across the
+processes) to exchange reference data with the parent.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_FORCED_PRELUDE = """\
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={n} "
+    + os.environ.get("XLA_FLAGS", ""))
+tmpdir = {tmpdir!r}
+import jax
+"""
+
+_DIST_PRELUDE = """\
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={d} "
+    + os.environ.get("XLA_FLAGS", ""))
+PROC_ID = {pid}
+N_PROCS = {n}
+N_DEVICES = {d} * {n}
+tmpdir = {tmpdir!r}
+import jax
+try:
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+except Exception:
+    pass  # newer jax enables CPU collectives without the flag
+jax.distributed.initialize(coordinator_address="127.0.0.1:{port}",
+                           num_processes={n}, process_id={pid})
+"""
+
+
+def _env(extra_env=None):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.update(extra_env or {})
+    return env
+
+
+def run_forced_shards(body: str, n_devices: int = 4, timeout: int = 900,
+                      token: str = "OK", extra_env: dict | None = None,
+                      tmpdir: str | None = None) -> str:
+    """Run `body` in one fresh process with `n_devices` forced CPU devices.
+    Asserts `token` appears on its stdout; returns the stdout."""
+    tmpdir = tmpdir or tempfile.mkdtemp(prefix="mesh_harness_")
+    code = (_FORCED_PRELUDE.format(n=n_devices, tmpdir=tmpdir)
+            + textwrap.dedent(body))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, env=_env(extra_env),
+                       timeout=timeout)
+    assert token in r.stdout, (
+        f"forced-shard body did not print {token!r}:\n"
+        f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr}")
+    return r.stdout
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_distributed(body: str, n_procs: int = 2, devices_per_proc: int = 2,
+                    timeout: int = 900, token: str = "OK",
+                    extra_env: dict | None = None,
+                    tmpdir: str | None = None) -> list[str]:
+    """Run `body` as a genuine `jax.distributed` mesh of `n_procs`
+    processes x `devices_per_proc` CPU devices each (gloo collectives).
+    Asserts `token` appears on EVERY process's stdout; returns the stdouts
+    in process order."""
+    tmpdir = tmpdir or tempfile.mkdtemp(prefix="mesh_harness_")
+    port = _free_port()
+    body = textwrap.dedent(body)
+    procs = []
+    for pid in range(n_procs):
+        code = _DIST_PRELUDE.format(d=devices_per_proc, n=n_procs, pid=pid,
+                                    port=port, tmpdir=tmpdir) + body
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", code], stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True, cwd=ROOT,
+            env=_env(extra_env)))
+    outs: list[str | None] = [None] * n_procs
+    hung = []
+    for i, p in enumerate(procs):
+        try:
+            outs[i], _ = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            hung.append(i)
+            # Kill the whole fleet — a peer blocked in a collective will
+            # never finish once one process is gone — then collect
+            # whatever each process printed before the hang, so the
+            # failure is diagnosable.
+            for q in procs:
+                if q.poll() is None:
+                    q.kill()
+    for i, p in enumerate(procs):
+        if outs[i] is None:
+            outs[i], _ = p.communicate()
+    joined = "\n".join(
+        f"--- proc {i} ---\n{o}" for i, o in enumerate(outs))
+    assert not hung, (
+        f"process(es) {hung} hung past {timeout}s (killed):\n{joined}")
+    for i, out in enumerate(outs):
+        assert token in out, (
+            f"process {i} did not print {token!r}:\n{joined}")
+    return outs

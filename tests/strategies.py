@@ -1,0 +1,87 @@
+"""Shared hypothesis strategies for synthetic CIS feed batches.
+
+One place for the feed shapes the scheduler must survive — used by the
+macro-round properties (test_macro), the adaptive-round properties
+(test_adaptive), and the multi-host data-path properties (test_multihost):
+
+  * empty      — all-zero rounds (the steady-state common case)
+  * sparse     — a few signalled pages per round (production regime)
+  * dense      — most pages signalled (stress; also exercises the COO cap)
+  * hot_shard  — all signals concentrated in one contiguous page range
+                 (the per-host capacity-contract scenario: one shard's
+                 feed must not re-shape anyone else's compiled rounds)
+
+plus dtype variants (int32 / int16 / bool) covering the `_pad_feed`
+integer-feed contract.
+
+Degrades gracefully when hypothesis is not installed (`_hypothesis_compat`):
+the builders return None and `given` skips the test.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+FEED_KINDS = ("empty", "sparse", "dense", "hot_shard")
+FEED_DTYPES = (np.int32, np.int16, np.bool_)
+
+
+def build_feed_batch(m: int, n_rounds: int, kind: str, dtype, seed: int,
+                     max_count: int = 40) -> np.ndarray:
+    """Deterministically build one (n_rounds, m) CIS feed batch of the given
+    kind/dtype — shared by the hypothesis strategies and by deterministic
+    tests that want the same shapes without hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    feeds = np.zeros((n_rounds, m), np.int64)
+    if kind == "sparse":
+        for r in range(n_rounds):
+            nnz = int(rng.integers(1, max(2, m // 100)))
+            idx = rng.choice(m, nnz, replace=False)
+            feeds[r, idx] = rng.integers(1, max_count, nnz)
+    elif kind == "dense":
+        mask = rng.random((n_rounds, m)) < 0.7
+        feeds[mask] = rng.integers(1, max_count, int(mask.sum()))
+    elif kind == "hot_shard":
+        # Everything lands in one contiguous quarter of the page range —
+        # on a sharded mesh, (at most) one shard's feed runs hot.
+        lo = int(rng.integers(0, max(1, 3 * m // 4)))
+        hi = min(m, lo + m // 4 + 1)
+        for r in range(n_rounds):
+            nnz = int(rng.integers(1, max(2, (hi - lo) // 2)))
+            idx = lo + rng.choice(hi - lo, nnz, replace=False)
+            feeds[r, idx] = rng.integers(1, max_count, nnz)
+    elif kind != "empty":
+        raise ValueError(f"unknown feed kind {kind!r}")
+    if dtype == np.bool_:
+        return feeds > 0
+    info = np.iinfo(dtype)
+    return np.clip(feeds, 0, info.max).astype(dtype)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import strategies as st
+
+    @st.composite
+    def feed_batches(draw, m: int, max_rounds: int = 6,
+                     kinds=FEED_KINDS, dtypes=FEED_DTYPES,
+                     max_count: int = 40):
+        """A (n_rounds, m) synthetic CIS feed batch (numpy array)."""
+        n_rounds = draw(st.integers(1, max_rounds))
+        kind = draw(st.sampled_from(list(kinds)))
+        dtype = draw(st.sampled_from(list(dtypes)))
+        seed = draw(st.integers(0, 2**16))
+        return build_feed_batch(m, n_rounds, kind, dtype, seed,
+                                max_count=max_count)
+
+    def feed_rows(m: int, kinds=FEED_KINDS, dtypes=FEED_DTYPES,
+                  max_count: int = 40):
+        """A single-round (m,) feed drawn from the same shapes."""
+        return feed_batches(m, max_rounds=1, kinds=kinds, dtypes=dtypes,
+                            max_count=max_count).map(lambda f: f[0])
+else:  # pragma: no cover - exercised in minimal environments
+    def feed_batches(*_a, **_k):
+        return None
+
+    def feed_rows(*_a, **_k):
+        return None

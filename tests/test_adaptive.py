@@ -4,17 +4,15 @@ in-jit per-shard hysteresis tighten/relax, host-side candidate-depth
 adaptation, fallback-round diagnostics, the round-0 sentinel, feed-dtype
 validation, and the k ~ m budget edge."""
 import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import strategies
 from _hypothesis_compat import given, settings, st
+from mesh_harness import run_forced_shards
 from repro.core import Env, derive
 from repro.kernels import layout, select
 from repro.sched import backends as be
@@ -140,13 +138,29 @@ def test_property_adaptive_equals_dense_under_cis_jumps(seed, jump, period):
                                    np.sort(np.asarray(vals_d)), rtol=1e-5)
 
 
+@settings(max_examples=6, deadline=None)
+@given(feed=strategies.feed_rows(m=9_000))
+def test_property_adaptive_round_exact_on_shared_feed_shapes(feed):
+    """Property over the shared single-round feed strategies: one adaptive
+    fused round stays exactly equal to dense top-k for every feed shape and
+    integer dtype the ingest contract accepts."""
+    m = feed.shape[0]
+    env = _sorted_env(jax.random.PRNGKey(21), m)
+    fused, dense = _schedulers(env, 16)
+    for _ in range(3):  # warm the skip loop, then hit it with the feed
+        zero = jnp.zeros((m,), jnp.int32)
+        fused.ingest_and_schedule(zero)
+        dense.ingest_and_schedule(zero)
+    ids_f, _ = fused.ingest_and_schedule(feed)
+    ids_d, _ = dense.ingest_and_schedule(np.asarray(feed, np.int32))
+    assert set(map(int, ids_f)) == set(map(int, ids_d))
+
+
 def test_adaptive_multishard_cis_property_subprocess():
     """Acceptance property on a 4-shard mesh: adaptive-bounds selection
     equals dense top-k across rounds with CIS jumps, while blocks are
     actually skipped."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    run_forced_shards("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.sched.service import CrawlScheduler
@@ -179,13 +193,7 @@ def test_adaptive_multishard_cis_property_subprocess():
                 fracs.append(float(fused.round.backend.frac_active.mean()))
             assert min(fracs) < 1.0, fracs
         print("ADAPTIVE_MULTISHARD_OK")
-    """)
-    env = dict(os.environ, PYTHONPATH="src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True,
-                       cwd=os.path.join(os.path.dirname(__file__), ".."),
-                       env=env, timeout=600)
-    assert "ADAPTIVE_MULTISHARD_OK" in r.stdout, r.stdout + r.stderr
+    """, n_devices=4, timeout=600, token="ADAPTIVE_MULTISHARD_OK")
 
 
 # ---------------------------------------------------------------------------
@@ -453,9 +461,7 @@ def test_budget_above_shard_size_subprocess():
     """Regression (k ~ m edge): a budget larger than one shard's page count
     used to fire the in-jit k <= n_cand assert / local top_k error; the
     shard-local k must clamp to the shard size and stay exact."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    run_forced_shards("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.sched.service import CrawlScheduler
         from repro.sched import backends as be
@@ -475,13 +481,7 @@ def test_budget_above_shard_size_subprocess():
             assert int(ids_f.max()) < m
             assert set(map(int, ids_f)) == set(map(int, ids_d))
         print("BUDGET_EDGE_OK")
-    """)
-    env = dict(os.environ, PYTHONPATH="src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True,
-                       cwd=os.path.join(os.path.dirname(__file__), ".."),
-                       env=env, timeout=600)
-    assert "BUDGET_EDGE_OK" in r.stdout, r.stdout + r.stderr
+    """, n_devices=4, timeout=600, token="BUDGET_EDGE_OK")
 
 
 # ---------------------------------------------------------------------------

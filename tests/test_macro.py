@@ -3,17 +3,15 @@
 page-id-for-page-id, device-resident diagnostics, the CIS-mass re-evaluation
 rule, feed-batch validation, and adaptation-counter persistence."""
 import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import strategies
 from _hypothesis_compat import given, settings, st
+from mesh_harness import run_forced_shards
 from repro.sched import backends as be
 from repro.sched import tiered
 from repro.sched.service import CrawlScheduler
@@ -102,6 +100,29 @@ def test_run_rounds_equals_sequential_all_adaptive():
     assert mac.backend.cand_per_lane is not None
 
 
+@settings(max_examples=6, deadline=None)
+@given(feeds=strategies.feed_batches(m=9_000, max_rounds=4))
+def test_property_macro_equals_sequential_on_shared_feed_shapes(feeds):
+    """Property over the shared feed-shape strategies (empty / sparse /
+    dense / hot-shard, int and bool dtypes): the macro scan's stacked
+    selection is bit-identical to sequential rounds for EVERY feed shape
+    the data path accepts — including the dense-ish batches that stress the
+    COO capacity bucketing and hot-shard batches that concentrate all
+    signals in one page range."""
+    m = feeds.shape[1]
+    env = _sorted_env(jax.random.PRNGKey(11), m)
+    seq, mac = _pair(env, 16, be.FusedBackend(block_rows=8,
+                                              adaptive_bounds=True))
+    ids_m, vals_m = mac.run_rounds(feeds)
+    for r in range(feeds.shape[0]):
+        ids_s, vals_s = seq.ingest_and_schedule(jnp.asarray(feeds[r]))
+        np.testing.assert_array_equal(np.asarray(ids_m)[r],
+                                      np.asarray(ids_s), err_msg=str(r))
+        np.testing.assert_array_equal(np.asarray(vals_m)[r],
+                                      np.asarray(vals_s), err_msg=str(r))
+    assert seq.round.n_cis.dtype == jnp.int32
+
+
 def test_run_rounds_dense_backend_generic_scan():
     """Stateless backends ride the generic `_round_body` scan — bit-equal to
     the per-round path by construction."""
@@ -122,9 +143,7 @@ def test_run_rounds_dense_backend_generic_scan():
 def test_run_rounds_multishard_cis_subprocess():
     """Acceptance property on a 4-shard mesh: macro == sequential across
     rounds with CIS jumps, while blocks are actually skipped."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    run_forced_shards("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.sched.service import CrawlScheduler
@@ -160,13 +179,7 @@ def test_run_rounds_multishard_cis_subprocess():
         assert frac.shape == (R, 4)
         assert frac.min() < 1.0, frac
         print("MACRO_MULTISHARD_OK")
-    """)
-    env = dict(os.environ, PYTHONPATH="src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True,
-                       cwd=os.path.join(os.path.dirname(__file__), ".."),
-                       env=env, timeout=900)
-    assert "MACRO_MULTISHARD_OK" in r.stdout, r.stdout + r.stderr
+    """, n_devices=4, timeout=900, token="MACRO_MULTISHARD_OK")
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +300,70 @@ def test_cis_mass_resets_on_update_pages():
     np.testing.assert_allclose(
         np.asarray(bst.beta_max),
         np.asarray(layout.block_beta_max(bst.env_planes)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: macro depth cadence — one hot round must not pin the depth.
+# ---------------------------------------------------------------------------
+
+def test_macro_depth_cadence_one_hot_round_vs_saturated():
+    """Regression for the ROADMAP macro depth-cadence item at large R: the
+    candidate-depth watermark is a running max, so a single hot round in a
+    32-round macro-round used to re-target the depth to the spike for the
+    whole next window. The bounded in-scan saturation counter
+    (`FusedState.depth_hot`) lets the boundary decision hold the
+    steady-state depth for a lone spike — and still grow it when every
+    round saturates."""
+    from repro.core import Env
+    from repro.kernels import select as ksel
+
+    block_rows, lanes = 32, 128
+    bp = block_rows * lanes
+    m, k, R = 4 * bp, 16, 32
+    # Ordinary pages everywhere; 32 "CIS bomb" pages down lane column 0 of
+    # block 0: tiny delta (huge value asymptote, slow time-driven growth —
+    # never winners on their own) and a huge beta, so a small CIS burst
+    # jumps all 32 to the top of one lane column at once.
+    delta = np.full((m,), 1.0, np.float32)
+    mu = (1.0 + np.arange(m, dtype=np.float32) * 1e-4)
+    hot = np.arange(block_rows) * lanes
+    delta[hot] = 0.01
+    env = Env(delta=jnp.asarray(delta), mu=jnp.asarray(mu),
+              lam=jnp.full((m,), 0.5), nu=jnp.full((m,), 0.3))
+    s = CrawlScheduler(env, _mesh1(), bandwidth=float(k),
+                       backend=be.FusedBackend(block_rows=block_rows,
+                                               adaptive_cand=True))
+    auto = ksel.auto_cand_per_lane(k)
+    zero = np.zeros((R, m), np.int32)
+
+    # Steady state: winners are well-spread, the depth shrinks below auto.
+    s.run_rounds(zero)
+    d0 = s.backend.cand_per_lane
+    assert d0 is not None and d0 < auto, (d0, auto)
+
+    # One hot round mid-batch: the burst concentrates the whole top-k in
+    # one lane column (realized depth ~k), the round falls back (exactness
+    # kept), the watermark spikes — but the saturation counter reads "a
+    # lone spike" and the boundary decision HOLDS the steady-state depth.
+    one_hot = zero.copy()
+    one_hot[10, hot] = 5
+    s.run_rounds(one_hot)
+    diag = s.macro_diagnostics
+    assert int(np.asarray(diag.col_winners).max()) > d0  # watermark spiked
+    assert 1 <= int(np.asarray(diag.depth_hot).max()) <= max(1, R // 8)
+    assert s.backend.cand_per_lane == d0, (
+        "a single hot round re-targeted the depth to the spike")
+    # The observation window was reset for the next decision.
+    assert int(np.asarray(s.round.backend.depth_hot).max()) == 0
+
+    # Every round saturated: the counter reads persistent saturation and
+    # the boundary decision grows the depth.
+    every_hot = zero.copy()
+    every_hot[:, hot] = 5
+    s.run_rounds(every_hot)
+    assert int(np.asarray(s.macro_diagnostics.depth_hot).max()) > R // 8
+    assert s.backend.cand_per_lane > d0, (
+        "persistent saturation failed to grow the depth")
 
 
 # ---------------------------------------------------------------------------
