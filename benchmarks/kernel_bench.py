@@ -76,6 +76,7 @@ def kernel_bench():
     refresh_repack_bench()
     fused_adaptive_bench()
     macro_round_bench()
+    ckpt_roundtrip_bench()
 
 
 def refresh_repack_bench():
@@ -240,6 +241,78 @@ def fused_adaptive_bench():
          f"hyst={float(adaptive.round.backend.hyst[0]):.2f};"
          f"speedup_vs_static_bound={us[1]/us[0]:.2f}x;"
          f"state_planes_donated_alias={int(aliased)}")
+
+
+def ckpt_roundtrip_bench():
+    """Per-host shard checkpoint round-trip (`sched/ckpt_roundtrip`):
+    `state_dict` -> sharded-v1 `save` -> `restore_latest` ->
+    `load_state_dict` on a warm fused scheduler.
+
+    Guards: (1) no-global-gather — `jax.device_get` is poisoned for the
+    whole round trip, so neither save nor restore may assemble a global
+    array through the public gather path (per-host shard files only);
+    (2) restore-equivalence — the restored scheduler's next macro-round
+    selection must be bit-identical to the original's."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import store as ckpt_store
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
+
+    m = prof(1 << 18, 1 << 20)
+    k, dt, R = 256, 1.0, 8
+    mesh = jax.make_mesh((1,), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+
+    def build():
+        return CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
+                              round_period=dt,
+                              backend=be.FusedBackend(adaptive_bounds=True),
+                              feed_cap=4096)
+
+    s = build()
+    rng = np.random.default_rng(0)
+    feeds_np = np.zeros((R, m), np.int32)
+    for r in range(R):
+        feeds_np[r, rng.choice(m, 64, replace=False)] = 1
+    s.run_rounds(np.copy(feeds_np))
+
+    tmp = tempfile.mkdtemp(prefix="ckpt_bench_")
+    s2 = build()
+
+    def die(*_a, **_kw):
+        raise AssertionError(
+            "checkpoint round-trip called jax.device_get (global gather)")
+
+    real, jax.device_get = jax.device_get, die
+    try:
+        _, us_save = timed(
+            lambda: ckpt_store.save(tmp, 1, s.state_dict(), sharded=True),
+            reps=prof(3, 5))
+        (tree, step, _), us_rest = timed(
+            lambda: ckpt_store.restore_latest(tmp, s2.state_dict()),
+            reps=prof(3, 5))
+        assert step == 1
+        s2.load_state_dict(tree)
+    finally:
+        jax.device_get = real
+
+    nxt = np.zeros((R, m), np.int32)
+    for r in range(R):
+        nxt[r, rng.choice(m, 64, replace=False)] = 1
+    ia, va = s.run_rounds(np.copy(nxt))
+    ib, vb = s2.run_rounds(np.copy(nxt))
+    equiv = int(np.array_equal(np.asarray(ia), np.asarray(ib))
+                and np.array_equal(np.asarray(va), np.asarray(vb)))
+    assert equiv, "restored scheduler diverged from the original"
+
+    n_leaves = len(jax.tree.leaves(s.state_dict()))
+    emit("sched/ckpt_roundtrip", us_save + us_rest,
+         f"m={m};k={k};leaves={n_leaves};save_us={us_save:.1f};"
+         f"restore_us={us_rest:.1f};restore_equivalent={equiv};"
+         f"no_global_gather=1")
 
 
 def macro_round_bench():

@@ -1,4 +1,5 @@
 from repro.checkpoint.store import (
+    CheckpointCorruptError,
     latest_step,
     restore,
     restore_latest,

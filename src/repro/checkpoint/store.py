@@ -1,24 +1,66 @@
 """Fault-tolerant checkpointing: atomic, sharded, resumable.
 
-Layout: <dir>/step_<N>/
-    manifest.json        tree structure + shapes/dtypes + save metadata
-    shard_<proc>.npz     flat arrays owned by this host process
+Two on-disk formats share one directory layout, <dir>/step_<N>/:
 
-Writes go to a temp directory then an atomic rename — a preempted save never
-corrupts the latest checkpoint. `restore_latest` + the train loop's
-auto-resume give restartability; `keep` bounds disk usage. (Single-process
-here; the per-process sharding hook is the `process_index` suffix.)
+  legacy (single-process, `sharded=False`):
+    manifest.json        tree structure + shapes/dtypes + save metadata
+    shard_0.npz          ALL flat arrays, gathered to the host
+
+  sharded-v1 (`sharded=True`; the default on multi-process meshes):
+    manifest.json        tree structure + GLOBAL shapes/dtypes + process
+                         topology + per-shard checksums (embedded from the
+                         shard_<proc>.json done-markers)
+    shard_<proc>.npz     each process's ADDRESSABLE slab of every leaf —
+                         written from `jax.Array.addressable_shards`, so no
+                         host ever materializes (or device_get's) a
+                         non-addressable global array
+    shard_<proc>.json    per-process done-marker: crc32 per array + slab
+                         offsets/shapes (embedded into the manifest by
+                         process 0, then deleted from view by the rename)
+
+Commit protocol: every process writes into the shared `step_<N>.tmp`
+directory; its shard_<proc>.json is the done-marker. Process 0 waits for
+all markers, embeds them into manifest.json, and atomically renames the
+temp dir over the final one — a preempted save never corrupts the latest
+checkpoint, and a step directory WITHOUT a manifest.json is by definition
+a partially-renamed/partially-written step. Non-zero processes wait for
+the final directory to appear (save returns only once the checkpoint is
+durable on every host).
+
+Integrity: restore verifies each array against the manifest's per-shard
+crc32 and raises `CheckpointCorruptError` on any damage — truncated or
+bit-flipped npz, unreadable manifest, missing shard file. `restore_latest`
+catches it, warns, and falls back to the previous step instead of
+crashing. (On a multi-process mesh all processes see the same manifest, so
+a damaged manifest falls back consistently; per-host npz damage is
+host-local — a driver that needs fleet agreement on the restored step
+should broadcast process 0's step.)
+
+Restore of a sharded-v1 checkpoint reassembles each leaf from the local
+slab via `jax.make_array_from_process_local_data` against the reference
+tree's sharding — committed sharded arrays come back without any global
+gather. `strict=False` path-matching compat with old snapshots (and old
+single-file layouts) is preserved.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-import tempfile
+import time
+import warnings
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step directory is damaged: unreadable/missing manifest
+    (partially-renamed step), truncated/corrupt shard npz, or a checksum
+    mismatch. `restore_latest` treats it as 'skip this step and fall back
+    to the previous one'."""
 
 
 def _flatten_with_paths(tree):
@@ -31,55 +73,203 @@ def _flatten_with_paths(tree):
     return paths, [v for _, v in flat], treedef
 
 
-def save(ckpt_dir: str, step: int, tree, keep: int = 3, extra: dict | None = None):
-    proc = jax.process_index()
-    paths, leaves, _ = _flatten_with_paths(tree)
-    final = os.path.join(ckpt_dir, f"step_{step:09d}")
-    tmp = final + f".tmp{proc}"
-    os.makedirs(tmp, exist_ok=True)
-    raw = [np.asarray(jax.device_get(v)) for v in leaves]
-    dtypes = [str(a.dtype) for a in raw]
+def _storable(a: np.ndarray) -> np.ndarray:
     # numpy's savez cannot serialize ml_dtypes (bfloat16, fp8): store a raw
     # byte view and re-view on restore via the manifest dtype.
-    arrays = {
-        f"a{i}": (a if a.dtype.kind in "fiub?" and a.dtype.name != "bfloat16"
-                  else a.view(np.uint8))
-        for i, a in enumerate(raw)
-    }
-    np.savez(os.path.join(tmp, f"shard_{proc}.npz"), **arrays)
-    manifest = {
-        "step": step,
-        "paths": paths,
-        "dtypes": dtypes,
-        "shapes": [list(a.shape) for a in raw],
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    _gc(ckpt_dir, keep)
+    if a.dtype.kind in "fiub?" and a.dtype.name != "bfloat16":
+        return a
+    return a.view(np.uint8)
+
+
+def _local_slab(v):
+    """This process's contiguous slab of a leaf + its global offsets.
+
+    Returns (array, offsets): offsets is None when the slab IS the whole
+    (global) array — non-jax leaves, fully-addressable arrays, and
+    fully-replicated arrays (one addressable copy suffices) — else the
+    per-axis global start indices of the slab. Never touches a
+    non-addressable shard and never calls `jax.device_get`, so saving can
+    run under a no-global-gather guard."""
+    if not isinstance(v, jax.Array):
+        return np.asarray(v), None
+    if v.is_fully_replicated:
+        return np.asarray(v.addressable_shards[0].data), None
+    if v.is_fully_addressable:
+        return np.asarray(v), None
+    shards = v.addressable_shards
+    ndim = v.ndim
+    lo = list(v.shape)
+    hi = [0] * ndim
+    uniq = {}
+    for s in shards:
+        key = tuple(
+            (sl.start or 0, v.shape[i] if sl.stop is None else sl.stop)
+            for i, sl in enumerate(s.index))
+        if key in uniq:  # one entry per distinct index (replica devices)
+            continue
+        uniq[key] = s
+        for i, (a, b) in enumerate(key):
+            lo[i] = min(lo[i], a)
+            hi[i] = max(hi[i], b)
+    box = np.empty([h - l for l, h in zip(lo, hi)], dtype=v.dtype)
+    filled = 0
+    for key, s in uniq.items():
+        idx = tuple(slice(a - l, b - l) for (a, b), l in zip(key, lo))
+        box[idx] = np.asarray(s.data)
+        filled += int(np.prod([b - a for a, b in key], dtype=np.int64))
+    if filled != box.size:
+        raise ValueError(
+            f"addressable shards of a {v.shape} array do not tile a "
+            "contiguous slab; the sharded checkpoint path needs the "
+            "contiguous host-slice layout")
+    return box, [int(l) for l in lo]
+
+
+def _write_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+def _poll(predicate, what: str, timeout: float = 120.0):
+    t0 = time.monotonic()
+    while True:
+        got = predicate()
+        if got is not None:
+            return got
+        if time.monotonic() - t0 > timeout:
+            raise TimeoutError(f"timed out waiting for {what}")
+        time.sleep(0.05)
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         extra: dict | None = None, sharded: bool | None = None):
+    """Write one atomic checkpoint step. `sharded=None` auto-selects: the
+    per-host sharded-v1 format on a multi-process mesh, the legacy
+    single-file format otherwise (exact old layout — old readers keep
+    working). `sharded=True` forces the new format on one process too."""
+    proc = jax.process_index()
+    n_procs = jax.process_count()
+    if sharded is None:
+        sharded = n_procs > 1
+    if not sharded and n_procs > 1:
+        raise ValueError(
+            "sharded=False cannot represent a multi-process mesh: a host "
+            "cannot serialize the non-addressable shards of its peers")
+    paths, leaves, _ = _flatten_with_paths(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+
+    if not sharded:
+        tmp = final + f".tmp{proc}"
+        os.makedirs(tmp, exist_ok=True)
+        raw = [np.asarray(jax.device_get(v)) for v in leaves]
+        stored = [_storable(a) for a in raw]
+        np.savez(os.path.join(tmp, f"shard_{proc}.npz"),
+                 **{f"a{i}": a for i, a in enumerate(stored)})
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "dtypes": [str(a.dtype) for a in raw],
+            "shapes": [list(a.shape) for a in raw],
+            "crcs": [zlib.crc32(a.tobytes()) for a in stored],
+            "extra": extra or {},
+        }
+        _write_json(os.path.join(tmp, "manifest.json"), manifest)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+        return final
+
+    # -- sharded-v1: shared temp dir, per-process slabs ------------------
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    slabs = [_local_slab(v) for v in leaves]
+    stored = [_storable(a) for a, _ in slabs]
+    np.savez(os.path.join(tmp, f"shard_{proc}.npz"),
+             **{f"a{i}": a for i, a in enumerate(stored)})
+    # The done-marker: written only after the npz is fully on disk.
+    _write_json(os.path.join(tmp, f"shard_{proc}.json"), {
+        "proc": proc,
+        "crcs": [zlib.crc32(a.tobytes()) for a in stored],
+        "offsets": [off for _, off in slabs],
+        "local_shapes": [list(a.shape) for a, _ in slabs],
+    })
+
+    if proc == 0:
+        def _read_marker(p):
+            def attempt():
+                try:
+                    with open(os.path.join(tmp, f"shard_{p}.json")) as f:
+                        return json.load(f)
+                except (OSError, ValueError):
+                    return None  # not written / mid-write yet
+            return attempt
+
+        shards_meta = {
+            str(p): _poll(_read_marker(p), f"shard_{p}.json in {tmp}")
+            for p in range(n_procs)
+        }
+        manifest = {
+            "format": "sharded-v1",
+            "step": step,
+            "paths": paths,
+            "dtypes": [str(v.dtype) if isinstance(v, jax.Array)
+                       else str(np.asarray(v).dtype) for v in leaves],
+            "shapes": [list(v.shape) if isinstance(v, jax.Array)
+                       else list(np.asarray(v).shape) for v in leaves],
+            "topology": {"n_procs": n_procs,
+                         "n_devices": jax.device_count()},
+            "shards": shards_meta,
+            "extra": extra or {},
+        }
+        _write_json(os.path.join(tmp, "manifest.json"), manifest)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+    else:
+        # The rename is the commit: returning early would let this host
+        # act on a checkpoint that does not exist yet.
+        _poll(lambda: True if os.path.isdir(final) else None,
+              f"process 0 to commit {final}")
     return final
 
 
 def _gc(ckpt_dir: str, keep: int):
+    # "." filters BOTH legacy ".tmp<proc>" dirs (any proc, not just 0) and
+    # the shared sharded ".tmp" dir — never collect an in-flight save.
     steps = sorted(
         d for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp0")
+        if d.startswith("step_") and "." not in d
     )
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def _step_dirs(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
         if d.startswith("step_") and "." not in d
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _step_dirs(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+class _Slab:
+    """A process-local contiguous slab of a sharded leaf, pending
+    reassembly against the reference tree's sharding."""
+
+    __slots__ = ("local", "offsets", "shape")
+
+    def __init__(self, local, offsets, shape):
+        self.local = local
+        self.offsets = offsets
+        self.shape = tuple(shape)
 
 
 def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
@@ -93,20 +283,94 @@ def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
     old checkpoints), checkpoint paths absent from tree_like are ignored,
     and a matched path whose stored shape no longer fits tree_like keeps
     the current value too (with a warning) instead of failing the restore.
-    """
-    proc = jax.process_index()
+
+    Integrity: a missing/unreadable manifest (a partially-renamed step
+    dir), a truncated or corrupt shard npz, and any crc mismatch raise
+    `CheckpointCorruptError`. Sharded-v1 checkpoints additionally require
+    the saving process topology (restore with the same process count) and
+    reassemble each sharded leaf from this process's slab via
+    `jax.make_array_from_process_local_data` — no global gather."""
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, f"shard_{proc}.npz"))
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"{d} has no readable manifest.json (partially renamed or "
+            f"damaged step): {e}") from e
+    if manifest.get("format") == "sharded-v1":
+        leaves = _load_sharded_leaves(d, manifest)
+    else:
+        leaves = _load_legacy_leaves(d, manifest)
+    return _pair_and_rebuild(leaves, manifest, tree_like, strict)
+
+
+def _load_npz(d: str, proc: int, n: int) -> list[np.ndarray]:
+    path = os.path.join(d, f"shard_{proc}.npz")
+    try:
+        data = np.load(path)
+        return [data[f"a{i}"] for i in range(n)]
+    except Exception as e:  # missing file, truncated/corrupt zip, bad member
+        raise CheckpointCorruptError(
+            f"shard_{proc}.npz in {d} is missing or unreadable: {e}") from e
+
+
+def _verify_crcs(arrays, crcs, d: str, proc: int) -> None:
+    if crcs is None:  # pre-checksum legacy snapshot
+        return
+    for i, (a, want) in enumerate(zip(arrays, crcs)):
+        got = zlib.crc32(a.tobytes())
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checksum mismatch on array a{i} of shard_{proc}.npz in "
+                f"{d} (crc32 {got} != recorded {want})")
+
+
+def _load_legacy_leaves(d: str, manifest):
+    proc = jax.process_index()
+    arrays = _load_npz(d, proc, len(manifest["paths"]))
+    _verify_crcs(arrays, manifest.get("crcs"), d, proc)
     import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
 
     leaves = []
-    for i, (dt, shp) in enumerate(zip(manifest["dtypes"], manifest["shapes"])):
-        a = data[f"a{i}"]
+    for a, dt, shp in zip(arrays, manifest["dtypes"], manifest["shapes"]):
         if a.dtype == np.uint8 and dt != "uint8":
             a = a.view(np.dtype(dt)).reshape(shp)
         leaves.append(a)
+    return leaves
+
+
+def _load_sharded_leaves(d: str, manifest):
+    proc = jax.process_index()
+    n_procs = jax.process_count()
+    topo = manifest.get("topology", {})
+    if topo.get("n_procs") != n_procs:
+        raise ValueError(
+            f"checkpoint in {d} was saved by {topo.get('n_procs')} "
+            f"process(es) but {n_procs} are running; restore with the "
+            "saving process topology")
+    try:
+        smeta = manifest["shards"][str(proc)]
+    except KeyError as e:
+        raise CheckpointCorruptError(
+            f"manifest in {d} has no shard metadata for process "
+            f"{proc}") from e
+    arrays = _load_npz(d, proc, len(manifest["paths"]))
+    _verify_crcs(arrays, smeta.get("crcs"), d, proc)
+    import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+
+    leaves = []
+    for i, (dt, gshp) in enumerate(zip(manifest["dtypes"],
+                                       manifest["shapes"])):
+        a = arrays[i]
+        if a.dtype == np.uint8 and dt != "uint8":
+            a = a.view(np.dtype(dt)).reshape(smeta["local_shapes"][i])
+        off = smeta["offsets"][i]
+        leaves.append(a if off is None else _Slab(a, off, gshp))
+    return leaves
+
+
+def _pair_and_rebuild(leaves, manifest, tree_like, strict: bool):
     if strict:
         ref_leaves, treedef = jax.tree.flatten(tree_like)
         assert len(leaves) == len(ref_leaves), "checkpoint/tree mismatch"
@@ -116,32 +380,59 @@ def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
         ref_paths, ref_leaves, treedef = _flatten_with_paths(tree_like)
         pairs = [(by_path.get(p, ref), ref)
                  for p, ref in zip(ref_paths, ref_leaves)]
+
+    def keep_ref(got, ref, out):
+        if got is not ref:
+            if strict:
+                raise AssertionError(
+                    (got.shape, getattr(ref, "shape", None)))
+            warnings.warn(
+                f"checkpoint leaf shape {tuple(got.shape)} does not fit "
+                f"{tuple(np.shape(ref))}; keeping the current value",
+                stacklevel=3,
+            )
+        # Keep the reference leaf AS IS — no host round-trip, and its
+        # device placement/sharding survives.
+        out.append(ref)
+
     out = []
     for got, ref in pairs:
-        if got is not ref:
-            got = np.asarray(jax.device_get(got))
-        if got is ref or tuple(got.shape) != tuple(ref.shape):
-            if got is not ref:
-                if strict:
-                    raise AssertionError((got.shape, ref.shape))
-                import warnings
-
-                warnings.warn(
-                    f"checkpoint leaf shape {got.shape} does not fit "
-                    f"{tuple(ref.shape)}; keeping the current value",
-                    stacklevel=2,
-                )
-            # Keep the reference leaf AS IS — no host round-trip, and its
-            # device placement/sharding survives.
+        if got is ref:
             out.append(ref)
+            continue
+        if isinstance(got, _Slab):
+            # Reassemble the committed sharded leaf from this process's
+            # slab — every process contributes its own, nobody gathers.
+            if (isinstance(ref, jax.Array)
+                    and got.shape == tuple(ref.shape)):
+                local = got.local.astype(ref.dtype, copy=False)
+                out.append(jax.make_array_from_process_local_data(
+                    ref.sharding, local))
+            else:
+                keep_ref(got, ref, out)
+            continue
+        got = np.asarray(got)
+        if tuple(got.shape) != tuple(np.shape(ref)):
+            keep_ref(got, ref, out)
             continue
         out.append(jnp.asarray(got, dtype=ref.dtype))
     return jax.tree.unflatten(treedef, out), manifest["extra"]
 
 
 def restore_latest(ckpt_dir: str, tree_like, strict: bool = True):
-    step = latest_step(ckpt_dir)
-    if step is None:
-        return None, None, None
-    tree, extra = restore(ckpt_dir, step, tree_like, strict=strict)
-    return tree, step, extra
+    """Restore the newest intact step: a step that raises
+    `CheckpointCorruptError` (partially-renamed dir, truncated npz, crc
+    mismatch) is skipped with a warning and the previous step is tried —
+    a damaged latest checkpoint degrades to the one before it, it does not
+    take the service down. Returns (None, None, None) when no intact step
+    exists."""
+    for step in reversed(_step_dirs(ckpt_dir)):
+        try:
+            tree, extra = restore(ckpt_dir, step, tree_like, strict=strict)
+        except CheckpointCorruptError as e:
+            warnings.warn(
+                f"checkpoint step {step} is damaged ({e}); falling back "
+                "to the previous step", stacklevel=2)
+            continue
+        return tree, step, extra
+    return None, None, None

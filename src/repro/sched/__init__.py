@@ -17,6 +17,12 @@ from repro.sched.backends import (
     init_round,
     refresh_pages,
 )
+from repro.sched.errors import (
+    CapacityExceeded,
+    FeedDtypeError,
+    FeedValidationError,
+    SchedulerError,
+)
 from repro.sched.distributed import (
     ShardedSchedState,
     host_local_array,

@@ -73,6 +73,7 @@ from typing import Any, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import tables
@@ -83,6 +84,7 @@ from repro.sched.distributed import (
     _global_winners,
     _shard_linear_index,
     _shard_map,
+    host_local_array,
     sharded_select,
 )
 
@@ -515,6 +517,70 @@ class FusedBackend:
             depth_hot=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
         )
         return BackendInit(m_state, bstate, d, None)
+
+    def init_local(self, env_local: Env, mesh: Mesh, *, m: int,
+                   host_shards: tuple[int, int],
+                   mu_total) -> tuple[int, "FusedState"]:
+        """Host-local `init`: build THIS process's rows of the fused state
+        from its local raw-env slice alone — no host ever materializes the
+        global env. `env_local` covers exactly the raw pages
+        [s0 * m_shard, min(s1 * m_shard, m)) of host_shards = (s0, s1);
+        `mu_total` is the frozen global importance normalizer (the caller's
+        one mu psum — see `CrawlScheduler.from_local_env`).
+
+        Bit-compatible with the global path: `derive` is elementwise given
+        an explicit mu_total, a host's local page range is always
+        block-aligned (`layout.padded_size` makes blocks divisible by the
+        shard count), and every per-block row (`tiered.init_block_bounds`,
+        `layout.block_beta_max`) is a block-local reduction — so each
+        assembled shard equals the same shard of `init` bit-for-bit.
+        Returns (m_state, state); there is no `BackendInit.d` — host-local
+        construction has no dense oracle by design."""
+        from repro.kernels import layout
+        from repro.sched import tiered
+
+        assert self.cis_rule in ("mass", "remark"), self.cis_rule
+        block_rows = self.block_rows or layout.DEFAULT_BLOCK_ROWS
+        m_state = layout.padded_size(m, block_rows, n_shards=mesh.size)
+        m_shard = m_state // mesh.size
+        s0, s1 = host_shards
+        local_len = (s1 - s0) * m_shard
+        # Pad the local slice exactly like `init` pads the global tail
+        # (only the last host has a tail): padding pages (mu = 0)
+        # normalize away and score -inf in the fused kernel.
+        env_l = Env(
+            delta=layout.pad_to(env_local.delta, local_len, 1.0),
+            mu=layout.pad_to(env_local.mu, local_len, 0.0),
+            lam=layout.pad_to(env_local.lam, local_len, 0.0),
+            nu=layout.pad_to(env_local.nu, local_len, 0.0),
+        )
+        d_l = derive(env_l, mu_total=mu_total)
+        # local_len is block-aligned, so pack_shard adds no extra padding
+        # and its valid plane is all-ones — identical to the global path,
+        # which pads before packing.
+        shard = layout.pack_shard(d_l, n_terms=self.n_terms,
+                                  block_rows=block_rows)
+        bb = tiered.init_block_bounds(shard.env)
+        n_loc = s1 - s0
+        axes = tuple(mesh.axis_names)
+        row = P(axes)
+        hla = lambda x, spec: host_local_array(np.asarray(x), mesh, spec)
+        bstate = FusedState(
+            env_planes=hla(shard.env, P(axes, None, None, None)),
+            thresh=hla(jnp.full((n_loc,), -jnp.inf, jnp.float32), row),
+            bounds=hla(bb.asym, row),
+            frac_active=hla(jnp.ones((n_loc,), jnp.float32), row),
+            fell_back=hla(jnp.zeros((n_loc,), bool), row),
+            slope=hla(bb.slope, row),
+            blk_max=hla(bb.blk_max, row),
+            last_eval=hla(bb.last_eval, row),
+            hyst=hla(jnp.full((n_loc,), self.hysteresis, jnp.float32), row),
+            col_winners=hla(jnp.zeros((n_loc,), jnp.int32), row),
+            beta_max=hla(layout.block_beta_max(shard.env), row),
+            cis_mass=hla(jnp.zeros(bb.asym.shape, jnp.float32), row),
+            depth_hot=hla(jnp.zeros((n_loc,), jnp.int32), row),
+        )
+        return m_state, bstate
 
     def select(self, state: RoundState, mesh: Mesh, k: int, *,
                dt: float = 0.0, new_cis: jax.Array | None = None):

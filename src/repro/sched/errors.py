@@ -1,0 +1,76 @@
+"""Typed scheduler errors: host-local vs fleet-fatal.
+
+A multi-process deployment needs to know, when one host's driver catches an
+exception, whether the rest of the fleet is still healthy. Bare ValueErrors
+cannot carry that distinction, so the service raises these instead. Every
+class subclasses the builtin it replaced (ValueError / TypeError), so
+existing `except ValueError` handlers and tests keep working.
+
+The contract is the `fleet_fatal` class attribute:
+
+  * `fleet_fatal=False` (host-local, recoverable): the error was raised
+    during host-side validation/conversion, BEFORE this host dispatched any
+    device work or entered any collective. No peer host is affected — the
+    driver may fix the offending batch (reshape it, cast it, drop bad rows)
+    and retry on this host alone.
+
+  * `fleet_fatal=True` (must abort the fleet): the condition violates a
+    cross-host static contract (capacity caps are compiled shapes all hosts
+    agree on). Peer hosts whose data fit the contract have already entered
+    the round and are waiting at its collectives; they will never complete.
+    The driver must tear down / restart the whole fleet (restore from the
+    per-host shard checkpoints — see README "Fault tolerance & recovery").
+
+Hierarchy:
+
+    SchedulerError
+    ├── FeedValidationError(ValueError)    host-local: bad feed/update shape
+    │   └── FeedDtypeError(TypeError)      host-local: non-integer CIS feed
+    └── CapacityExceeded(ValueError)       FLEET-FATAL: cap contract broken
+"""
+from __future__ import annotations
+
+
+class SchedulerError(Exception):
+    """Base of the scheduler's typed errors.
+
+    `fleet_fatal` tells a multi-host driver whether peers are affected:
+    False = raised before any device work on this host, fix-and-retry
+    locally; True = a cross-host contract is broken, tear down the fleet.
+    """
+
+    fleet_fatal = False
+
+
+class FeedValidationError(SchedulerError, ValueError):
+    """A CIS feed / refresh batch failed host-side validation (shape,
+    width, page-id range). Host-local and recoverable: raised before any
+    device work, so the driver can fix the batch and retry — no peer host
+    saw anything."""
+
+    fleet_fatal = False
+
+
+class FeedDtypeError(FeedValidationError, TypeError):
+    """A CIS feed carried a non-integer dtype (would promote the donated
+    int32 n_cis state). Host-local and recoverable, like its parent; also a
+    TypeError because the legacy dtype checks raised TypeError."""
+
+    fleet_fatal = False
+
+
+class CapacityExceeded(SchedulerError, ValueError):
+    """A per-host capacity contract (`feed_cap` / `update_cap`) cannot be
+    satisfied: either a batch exceeds the pinned cap, or a multi-process
+    mesh was driven without an explicit cap. FLEET-FATAL: caps are compiled
+    static shapes all hosts agree on — peer hosts whose data fit are
+    already waiting at the round's collectives and will never complete.
+    Tear the fleet down and restore from the per-host shard checkpoints.
+
+    (The one exception the service handles itself: an over-`update_cap`
+    refresh batch is chunked host-side in `update_pages` — the local-range
+    repack is collective-free, so hosts need not agree on chunk count.
+    This error therefore only escapes for feed batches and for missing
+    caps on multi-process meshes.)"""
+
+    fleet_fatal = True

@@ -63,6 +63,11 @@ from repro.sched.distributed import (
     host_local_array,
     host_shard_range,
 )
+from repro.sched.errors import (
+    CapacityExceeded,
+    FeedDtypeError,
+    FeedValidationError,
+)
 
 # Legacy constant, re-exported for back-compat (now lives per backend:
 # `FusedBackend.hysteresis`).
@@ -137,6 +142,92 @@ class CrawlScheduler:
                                                be.FusedState) else None
         self._d_pending = []  # (ids, d_new) updates not yet folded into it
 
+    @classmethod
+    def from_local_env(
+        cls,
+        env_local: Env,
+        mesh: Mesh,
+        bandwidth: float,
+        *,
+        m: int,
+        round_period: float = 1.0,
+        backend: be.SelectionBackend | None = None,
+        feed_cap: int | None = None,
+        update_cap: int | None = None,
+    ) -> "CrawlScheduler":
+        """Host-local construction (the elastic-lifecycle cold start): each
+        process supplies ONLY its `host_slice` of the raw env — the raw
+        pages [s0 * m_shard, min(s1 * m_shard, m)) its devices will own —
+        plus the corpus size `m`. No host ever materializes the global env;
+        the one global quantity construction needs is the frozen importance
+        normalizer mu_total = sum(mu), computed here from per-shard partial
+        sums via a single psum-shaped reduction over the assembled sharded
+        vector (fully replicated result, readable on every host).
+
+        Fused backend only (the production path). The resulting scheduler
+        is state-identical to `__init__` shard by shard, except that
+        mu_total may differ from the global summation order in the last ulp
+        — greedy selection is scale-invariant in mu_total, so selections
+        match regardless — and the dense `.d` oracle does not exist (its
+        accessor raises). Restore a checkpoint on top with
+        `load_state_dict` to rejoin a running fleet (README "Fault
+        tolerance & recovery")."""
+        from repro.kernels import layout
+
+        backend = backend if backend is not None else be.FusedBackend()
+        if not isinstance(backend, be.FusedBackend):
+            raise ValueError(
+                "from_local_env supports FusedBackend only: host-local "
+                "construction needs the packed-plane state layout"
+            )
+        self = cls.__new__(cls)
+        self.backend = backend
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.round_period = float(round_period)
+        self.bandwidth = float(bandwidth)
+        self.m = int(m)
+        self.feed_cap = feed_cap
+        self.update_cap = update_cap
+        self._host_shards = host_shard_range(mesh)
+        block_rows = backend.block_rows or layout.DEFAULT_BLOCK_ROWS
+        m_state = layout.padded_size(m, block_rows, n_shards=mesh.size)
+        m_shard = m_state // mesh.size
+        s0, s1 = self._host_shards
+        lo, hi = s0 * m_shard, s1 * m_shard
+        expect = max(0, min(hi, self.m) - lo)
+        if env_local.m != expect:
+            raise ValueError(
+                f"env_local must cover exactly this host's raw page range "
+                f"[{lo}, {min(hi, self.m)}) = {expect} pages; got "
+                f"{env_local.m}"
+            )
+        # THE one collective of construction: per-shard partial mu sums,
+        # assembled into a sharded (n_shards,) vector whose global sum is
+        # fully replicated — every host reads the same scalar without ever
+        # holding the global mu.
+        mu_pad = np.zeros((hi - lo,), np.float32)
+        mu_pad[:expect] = np.asarray(env_local.mu, np.float32)[:expect]
+        per_shard = mu_pad.reshape(s1 - s0, m_shard).sum(
+            axis=1, dtype=np.float32)
+        total = host_local_array(per_shard, mesh, P(self.axes))
+        self.mu_total = jnp.float32(np.asarray(jnp.sum(total)))
+        self.m_state, bstate = backend.init_local(
+            env_local, mesh, m=self.m, host_shards=(s0, s1),
+            mu_total=self.mu_total)
+        self.round = be.RoundState(
+            tau_elap=host_local_array(
+                np.zeros((hi - lo,), np.float32), mesh, P(self.axes)),
+            n_cis=host_local_array(
+                np.zeros((hi - lo,), np.int32), mesh, P(self.axes)),
+            crawl_clock=jnp.int32(0),
+            backend=bstate,
+        )
+        # No dense oracle under host-local construction (`.d` raises).
+        self._d_oracle = None
+        self._d_pending = []
+        return self
+
     # -- legacy views ------------------------------------------------------
     @property
     def d(self) -> DerivedEnv:
@@ -147,6 +238,12 @@ class CrawlScheduler:
         b = self.round.backend
         if hasattr(b, "d"):
             return b.d
+        if self._d_oracle is None:
+            raise RuntimeError(
+                "the dense derived-env oracle is unavailable under "
+                "host-local construction (from_local_env): no host ever "
+                "holds the global env. Read the packed planes instead"
+            )
         for ids, d_new in self._d_pending:
             self._d_oracle = DerivedEnv(
                 *[f.at[ids].set(n.astype(f.dtype))
@@ -239,14 +336,14 @@ class CrawlScheduler:
         new_cis = jnp.asarray(new_cis)
         if not (jnp.issubdtype(new_cis.dtype, jnp.integer)
                 or new_cis.dtype == jnp.bool_):
-            raise TypeError(
+            raise FeedDtypeError(
                 f"new_cis must have an integer dtype, got {new_cis.dtype}: "
                 "CIS counts are integral, and a float feed would promote "
                 "the donated int32 n_cis state to f32"
             )
         n = new_cis.shape[0]
         if n not in self._feed_widths():
-            raise ValueError(
+            raise FeedValidationError(
                 f"new_cis has {n} entries but the scheduler holds {self.m} "
                 f"pages ({self.m_state} padded); feed one count per page"
             )
@@ -273,19 +370,19 @@ class CrawlScheduler:
         """Shared (R, m) feed-batch validation (dtype/shape contract of
         `_pad_feed`, row-wise)."""
         if feeds.ndim != 2:
-            raise ValueError(
+            raise FeedValidationError(
                 f"feed batch must be (n_rounds, pages), got {feeds.shape}"
             )
         if not (jnp.issubdtype(feeds.dtype, jnp.integer)
                 or feeds.dtype == jnp.bool_):
-            raise TypeError(
+            raise FeedDtypeError(
                 f"feeds must have an integer dtype, got {feeds.dtype}: "
                 "CIS counts are integral, and a float feed would promote "
                 "the donated int32 n_cis state to f32"
             )
         n = feeds.shape[1]
         if n not in self._feed_widths():
-            raise ValueError(
+            raise FeedValidationError(
                 f"feed rows have {n} entries but the scheduler holds "
                 f"{self.m} pages ({self.m_state} padded); feed one count "
                 "per page"
@@ -300,14 +397,17 @@ class CrawlScheduler:
         shapes, which local data alone cannot guarantee).
 
         NOTE (multi-process): `need` is computed from THIS host's rows, so
-        the over-cap ValueError is host-local — peer hosts whose rows fit
-        the contract will enter the round and wait at its collectives. A
-        multi-host driver must treat this error as fatal fleet-wide (it is
-        a configuration/contract violation, not a per-host condition to
-        swallow)."""
+        the over-cap error is raised host-locally — but peer hosts whose
+        rows fit the contract will enter the round and wait at its
+        collectives, which is why `CapacityExceeded.fleet_fatal` is True: a
+        multi-host driver must treat it as fatal fleet-wide (it is a
+        configuration/contract violation, not a per-host condition to
+        swallow). The one caller that recovers instead is `update_pages`,
+        which chunks an over-cap refresh batch before this rule ever sees
+        an oversized need."""
         if cap is not None:
             if need > cap:
-                raise ValueError(
+                raise CapacityExceeded(
                     f"{what.format(need=need)}, over the {name} contract "
                     f"({cap}); raise {name} (one re-jit) or split the "
                     "batch — on a multi-process mesh, treat this as fatal "
@@ -315,7 +415,7 @@ class CrawlScheduler:
                 )
             return cap
         if self.is_multiprocess:
-            raise ValueError(
+            raise CapacityExceeded(
                 f"multi-process meshes require an explicit {name}: the "
                 "per-host conversion cannot derive a capacity bucket all "
                 "hosts agree on from local data alone"
@@ -540,8 +640,15 @@ class CrawlScheduler:
             b.k_local,
         )
         cur = b.cand_per_lane or auto
-        obs = int(np.asarray(jax.device_get(bst.col_winners)).max())
-        hot = int(np.asarray(jax.device_get(bst.depth_hot)).max())
+        # Global (not host-local) maxima: jnp reductions of a sharded array
+        # produce a fully-replicated result every host can read — a
+        # device_get of the raw watermark would fail on a multi-process
+        # mesh (non-addressable shards), and host-local maxima would let
+        # hosts take DIFFERENT depth decisions (different static buffer
+        # shapes → collective mismatch). One global max keeps the fleet's
+        # compiled shapes in lockstep.
+        obs = int(np.asarray(jnp.max(bst.col_winners)))
+        hot = int(np.asarray(jnp.max(bst.depth_hot)))
         if 0 < hot <= max(1, int(window * self.CAND_HOT_FRAC)):
             # A lone hot round: hold the steady-state depth instead of
             # chasing the watermark spike.
@@ -615,13 +722,45 @@ class CrawlScheduler:
             host_local_array(blk_arr, self.mesh, row_spec),
         )
 
+    def _update_chunks(self, ids_np: np.ndarray, d_new: DerivedEnv):
+        """Split a host-local refresh batch whose per-shard row count
+        exceeds `update_cap` into a sequence of under-cap chunks (ROADMAP
+        item iii: an oversized batch used to raise). Chunking is legal
+        precisely because the fused local-range repack is collective-free:
+        hosts apply their own chunk sequences independently and need not
+        agree on chunk count — a host with no over-cap shard applies one
+        chunk while its peer applies three. Within a shard the original row
+        order is preserved across chunks, so duplicate-id batches keep
+        their last-write-wins semantics. No-cap and under-cap batches pass
+        through untouched (the exact legacy packing)."""
+        cap = self.update_cap
+        if cap is None or not ids_np.size:
+            return [(ids_np, d_new)]
+        ms = self.m_shard
+        lo = self.host_slice.start
+        shard_row = (ids_np - lo) // ms
+        counts = np.bincount(shard_row)
+        if int(counts.max()) <= cap:
+            return [(ids_np, d_new)]
+        order = np.argsort(shard_row, kind="stable")
+        # Within-shard position of each (sorted) row; rows land in chunk
+        # position // cap, so each chunk holds at most cap rows per shard.
+        col = np.concatenate([np.arange(c) for c in counts])
+        chunk_of = col // cap
+        d_np = DerivedEnv(*[np.asarray(f) for f in d_new])
+        return [
+            (ids_np[take], DerivedEnv(*[f[take] for f in d_np]))
+            for c in range(int(chunk_of.max()) + 1)
+            for take in (order[chunk_of == c],)
+        ]
+
     def _local_update_rows(self, page_ids, env_updates: Env):
         """Validate a refresh batch and keep only this host's local rows
         (the `host_slice` filter of the multi-host data path; single-process
         meshes keep everything)."""
         ids_np = np.asarray(page_ids).astype(np.int64, copy=False).reshape(-1)
         if ids_np.size and (ids_np.min() < 0 or ids_np.max() >= self.m):
-            raise ValueError(
+            raise FeedValidationError(
                 f"page ids must be in [0, {self.m}); got "
                 f"[{ids_np.min()}, {ids_np.max()}]"
             )
@@ -655,18 +794,28 @@ class CrawlScheduler:
         ids_np, env_np = self._local_update_rows(page_ids, env_updates)
         d_new = derive(env_np, mu_total=self.mu_total)
         if isinstance(self.round.backend, be.FusedState):
-            # The host-side dense oracle syncs lazily on `.d` access.
-            self._d_pending.append(
-                (jnp.asarray(ids_np, jnp.int32), d_new))
-            ids, d_shard, block_ids = self._shard_update_batches(ids_np,
-                                                                 d_new)
-            new_bstate = be.refresh_pages(self.backend, self.round.backend,
-                                          ids, d_shard, block_ids,
-                                          mesh=self.mesh)
-        else:
-            new_bstate = be.refresh_pages(self.backend, self.round.backend,
-                                          jnp.asarray(ids_np, jnp.int32),
-                                          d_new, None, mesh=self.mesh)
+            # The host-side dense oracle syncs lazily on `.d` access (no
+            # oracle exists under host-local construction — see
+            # `from_local_env`).
+            if self._d_oracle is not None:
+                self._d_pending.append(
+                    (jnp.asarray(ids_np, jnp.int32), d_new))
+            # Donation-safe chunk loop: refresh_pages donates the backend
+            # state, so each chunk rebinds self.round before the next one
+            # packs against it. Over-`update_cap` batches are split
+            # host-side (`_update_chunks`) instead of raising.
+            for c_ids, c_d in self._update_chunks(ids_np, d_new):
+                ids, d_shard, block_ids = self._shard_update_batches(c_ids,
+                                                                     c_d)
+                new_bstate = be.refresh_pages(
+                    self.backend, self.round.backend, ids, d_shard,
+                    block_ids, mesh=self.mesh)
+                self.round = dataclasses.replace(self.round,
+                                                 backend=new_bstate)
+            return
+        new_bstate = be.refresh_pages(self.backend, self.round.backend,
+                                      jnp.asarray(ids_np, jnp.int32),
+                                      d_new, None, mesh=self.mesh)
         self.round = dataclasses.replace(self.round, backend=new_bstate)
 
     def ingest_crawl_results(self, page_ids, tau, n_cis, fresh):

@@ -18,6 +18,15 @@ needs (previously duplicated across test_adaptive.py / test_macro.py):
     (e.g. "a hot shard on one host triggers zero recompiles on the other
     host") that a forced-device-count mesh cannot.
 
+  * `run_distributed_kill(body, victim=...)` — the fault-injection
+    variant: the same genuine multi-process mesh, but the body is expected
+    to SIGKILL the `victim` process partway through (after printing the
+    token). The launcher asserts the victim actually died by signal, then
+    reaps the survivors — which, having lost their peer, are hanging in a
+    collective — after a short grace period. Pair it with a follow-up
+    `run_distributed` on the same tmpdir to prove kill-and-restore
+    recovery from per-host shard checkpoints.
+
 Bodies are plain Python source (dedented automatically) run with
 `PYTHONPATH=src` from the repo root. They must print `token` on success —
 `run_distributed` requires the token from EVERY process. Distributed bodies
@@ -136,4 +145,65 @@ def run_distributed(body: str, n_procs: int = 2, devices_per_proc: int = 2,
     for i, out in enumerate(outs):
         assert token in out, (
             f"process {i} did not print {token!r}:\n{joined}")
+    return outs
+
+
+def run_distributed_kill(body: str, n_procs: int = 2,
+                         devices_per_proc: int = 2, victim: int = 1,
+                         timeout: int = 900, token: str = "OK",
+                         extra_env: dict | None = None,
+                         tmpdir: str | None = None,
+                         grace: int = 30) -> list[str]:
+    """Fault-injection launcher: run `body` as a genuine `jax.distributed`
+    mesh in which process `victim` is expected to SIGKILL ITSELF partway
+    through (`os.kill(os.getpid(), signal.SIGKILL)`), after printing
+    `token` (print with flush=True — SIGKILL gives no chance to flush).
+
+    Asserts the victim printed the token and died by signal (negative
+    returncode). The survivors lose their peer mid-collective and can
+    never finish; they get `grace` seconds (in case they exit on a gloo
+    connection error by themselves), then are killed and reaped. Returns
+    the stdouts in process order — survivor output is whatever they
+    printed before losing the victim, for checkpoint/reference
+    assertions."""
+    tmpdir = tmpdir or tempfile.mkdtemp(prefix="mesh_harness_")
+    port = _free_port()
+    body = textwrap.dedent(body)
+    procs = []
+    for pid in range(n_procs):
+        code = _DIST_PRELUDE.format(d=devices_per_proc, n=n_procs, pid=pid,
+                                    port=port, tmpdir=tmpdir) + body
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", code], stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True, cwd=ROOT,
+            env=_env(extra_env)))
+    outs: list[str | None] = [None] * n_procs
+    try:
+        outs[victim], _ = procs[victim].communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        for q in procs:
+            if q.poll() is None:
+                q.kill()
+        outs[victim], _ = procs[victim].communicate()
+        rest = "\n".join(f"--- proc {i} ---\n{p.communicate()[0]}"
+                         for i, p in enumerate(procs) if i != victim)
+        raise AssertionError(
+            f"victim process {victim} did not die within {timeout}s "
+            f"(killed the fleet):\n--- victim ---\n{outs[victim]}\n{rest}")
+    for i, p in enumerate(procs):
+        if i == victim:
+            continue
+        try:
+            outs[i], _ = p.communicate(timeout=grace)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            outs[i], _ = p.communicate()
+    joined = "\n".join(
+        f"--- proc {i} ---\n{o}" for i, o in enumerate(outs))
+    assert token in outs[victim], (
+        f"victim process {victim} did not print {token!r} before dying:\n"
+        f"{joined}")
+    assert procs[victim].returncode < 0, (
+        f"victim process {victim} exited with {procs[victim].returncode}, "
+        f"expected death by signal:\n{joined}")
     return outs

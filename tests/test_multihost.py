@@ -3,7 +3,8 @@
 Single-process tests pin the `host_slice` view, the per-shard `SparseFeeds`
 layout (ids land in their shard's range; densify == original), and the
 `feed_cap` capacity contract (fixed static shapes — hot-shard feeds trigger
-zero recompiles; overflow raises).
+zero recompiles; feed overflow raises `CapacityExceeded`, while an
+over-`update_cap` refresh batch is chunked host-side instead).
 
 The `slow`-marked tests launch GENUINE 2-process `jax.distributed` meshes
 (`mesh_harness.run_distributed`, gloo CPU collectives) and prove the
@@ -187,7 +188,11 @@ def test_feed_cap_overflow_raises():
         s.run_rounds(feeds)
 
 
-def test_update_cap_overflow_raises():
+def test_update_cap_overflow_chunks():
+    """An over-`update_cap` refresh batch no longer raises (ROADMAP item
+    iii): `update_pages` chunks it host-side in a donation-safe loop, and
+    the chunked application is bit-identical to one under-cap application
+    of the same batch."""
     from repro.core import Env
 
     m = 6000
@@ -197,14 +202,20 @@ def test_update_cap_overflow_raises():
     n = 40
     upd = Env(delta=jnp.full((n,), 1.0), mu=jnp.full((n,), 5.0),
               lam=jnp.full((n,), 0.5), nu=jnp.full((n,), 0.1))
-    with pytest.raises(ValueError, match="update_cap"):
-        s.update_pages(np.arange(n), upd)
-    # Within the contract: applies cleanly.
+    s.update_pages(np.arange(n), upd)  # 40 > cap 8: five chunks, no raise
+    # One under-cap application is the reference; every backend-state leaf
+    # must match bitwise.
     s2 = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
                         backend=be.FusedBackend(block_rows=8), update_cap=64)
     s2.update_pages(np.arange(n), upd)
-    ids, _ = s2.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
-    assert int(ids.max()) < m
+    for name, a, b in zip(be.FusedState._fields, s.round.backend,
+                          s2.round.backend):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    ids, _ = s.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+    ids2, _ = s2.ingest_and_schedule(jnp.zeros((m,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    assert int(np.asarray(ids).max()) < m
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,495 @@
+"""Elastic multi-host lifecycle: host-local construction, per-host shard
+checkpointing, and kill-and-restore crash recovery.
+
+Fast single-process tests pin each lifecycle piece in isolation:
+`from_local_env` construction is state- and selection-identical to the
+global `__init__` path (with no dense `.d` oracle — it raises); the
+sharded-v1 checkpoint format round-trips `state_dict` bitwise through
+per-host shard files; damaged checkpoints (truncated npz, flipped bytes,
+partially-renamed step dirs) raise `CheckpointCorruptError` and
+`restore_latest` falls back to the previous intact step; the typed
+exception hierarchy distinguishes host-local from fleet-fatal errors; and
+a hypothesis property round-trips save/restore across all four selection
+backends.
+
+The `slow`-marked test is THE fault-injection acceptance run: a genuine
+2-process `jax.distributed` fleet runs macro-rounds, checkpoints to
+per-host shards (under a poisoned `jax.device_get` — no global gather),
+one process SIGKILLs itself mid-run, and a fresh fleet restores from the
+shards and continues BIT-IDENTICALLY to an uninterrupted reference run at
+the same seeds/feeds: selections, values, diagnostics, final state shards,
+adaptation counters, and per-batch jit-cache growth all match.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from _hypothesis_compat import given, settings, st
+from mesh_harness import run_distributed, run_distributed_kill
+from repro.checkpoint import store as ckpt
+from repro.checkpoint.store import CheckpointCorruptError
+from repro.core import Env
+from repro.sched import backends as be
+from repro.sched import errors
+from repro.sched.service import CrawlScheduler
+from repro.sim import uniform_instance
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _fused(m=3000, seed=0, **kw):
+    env = uniform_instance(jax.random.PRNGKey(seed), m)
+    kw.setdefault("backend", be.FusedBackend(block_rows=8))
+    kw.setdefault("feed_cap", 256)
+    return env, CrawlScheduler(env, _mesh1(), bandwidth=8.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Host-local construction (single process: local slice == whole corpus).
+# ---------------------------------------------------------------------------
+
+def test_from_local_env_matches_global_init():
+    m = 3000
+    env, s_ref = _fused(m)
+    s_loc = CrawlScheduler.from_local_env(
+        env, _mesh1(), 8.0, m=m, backend=be.FusedBackend(block_rows=8),
+        feed_cap=256)
+    assert s_loc.m_state == s_ref.m_state
+    # mu_total may differ from the global summation order in the last ulp
+    # (per-shard partial sums); selection is scale-invariant in it.
+    np.testing.assert_allclose(float(s_loc.mu_total), float(s_ref.mu_total),
+                               rtol=1e-6)
+    for name, a, b in zip(be.FusedState._fields, s_loc.round.backend,
+                          s_ref.round.backend):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float64), np.asarray(b, np.float64),
+            rtol=1e-6, atol=1e-7, err_msg=name)
+    feeds = strategies.build_feed_batch(m, 4, "sparse", np.int32, seed=11)
+    ia, va = s_ref.run_rounds(feeds)
+    ib, vb = s_loc.run_rounds(feeds)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb), rtol=1e-6)
+
+
+def test_from_local_env_has_no_dense_oracle():
+    m = 2000
+    env = uniform_instance(jax.random.PRNGKey(1), m)
+    s = CrawlScheduler.from_local_env(
+        env, _mesh1(), 8.0, m=m, backend=be.FusedBackend(block_rows=8))
+    with pytest.raises(RuntimeError, match="oracle"):
+        s.d
+    # ... but refresh still works without it (planes are written eagerly).
+    upd = Env(delta=jnp.full((5,), 1.5), mu=jnp.full((5,), 9.0),
+              lam=jnp.full((5,), 0.4), nu=jnp.full((5,), 0.2))
+    s.update_pages(np.arange(5), upd)
+
+
+def test_from_local_env_validation():
+    m = 2000
+    env = uniform_instance(jax.random.PRNGKey(2), m)
+    with pytest.raises(ValueError, match="raw page range"):
+        CrawlScheduler.from_local_env(
+            jax.tree.map(lambda x: x[:-7], env), _mesh1(), 8.0, m=m,
+            backend=be.FusedBackend(block_rows=8))
+    with pytest.raises(ValueError, match="FusedBackend"):
+        CrawlScheduler.from_local_env(env, _mesh1(), 8.0, m=m,
+                                      backend=be.DenseBackend())
+
+
+# ---------------------------------------------------------------------------
+# Sharded-v1 checkpoint round-trip + integrity hardening.
+# ---------------------------------------------------------------------------
+
+def _roundtrip(tmp_path, s, make_fresh, feeds, sharded=True):
+    """save(state_dict) -> fresh scheduler -> restore -> load_state_dict;
+    assert the continued run and every state leaf match bitwise."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, s.state_dict(), sharded=sharded)
+    s2 = make_fresh()
+    restored, step, _ = ckpt.restore_latest(d, s2.state_dict())
+    assert step == 1
+    s2.load_state_dict(restored)
+    for p, (a, b) in enumerate(zip(jax.tree.flatten(s.round)[0],
+                                   jax.tree.flatten(s2.round)[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"round leaf {p}")
+    ia, va = s.run_rounds(feeds)
+    ib, vb = s2.run_rounds(feeds)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_sharded_roundtrip_bitwise(tmp_path):
+    m = 3000
+    env, s = _fused(m)
+    feeds = strategies.build_feed_batch(m, 3, "sparse", np.int32, seed=5)
+    s.run_rounds(feeds)
+    make_fresh = lambda: CrawlScheduler(
+        env, _mesh1(), bandwidth=8.0,
+        backend=be.FusedBackend(block_rows=8), feed_cap=256)
+    nxt = strategies.build_feed_batch(m, 3, "sparse", np.int32, seed=6)
+    _roundtrip(tmp_path, s, make_fresh, nxt, sharded=True)
+
+
+def test_adapt_counter_sentinel_roundtrip(tmp_path):
+    """The sentinel-encoded host adaptation counters survive the sharded
+    round-trip: cand_per_lane None <-> -1, an adapted depth comes back as
+    itself, and the observation window resumes."""
+    m = 3000
+    for cand in (None, 3):
+        env, s = _fused(m, backend=be.FusedBackend(
+            block_rows=8, adaptive_cand=True, cand_per_lane=cand))
+        s._rounds_since_cand_adapt = 5
+        d = str(tmp_path / f"ck_{cand}")
+        ckpt.save(d, 1, s.state_dict(), sharded=True)
+        s2 = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                            backend=be.FusedBackend(block_rows=8,
+                                                    adaptive_cand=True),
+                            feed_cap=256)
+        restored, _, _ = ckpt.restore_latest(d, s2.state_dict())
+        s2.load_state_dict(restored)
+        assert s2.backend.cand_per_lane == cand
+        assert s2._rounds_since_cand_adapt == 5
+
+
+def test_restore_detects_truncated_npz(tmp_path):
+    _, s = _fused()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, s.state_dict(), sharded=True)
+    npz = os.path.join(d, "step_000000001", "shard_0.npz")
+    with open(npz, "rb") as f:
+        blob = f.read()
+    with open(npz, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointCorruptError):
+        ckpt.restore(d, 1, s.state_dict())
+
+
+def test_restore_detects_checksum_mismatch(tmp_path):
+    _, s = _fused()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, s.state_dict(), sharded=True)
+    npz = os.path.join(d, "step_000000001", "shard_0.npz")
+    data = dict(np.load(npz).items())
+    data["a0"] = np.ascontiguousarray(data["a0"])
+    flat = data["a0"].reshape(-1).view(np.uint8)
+    flat[0] ^= 0xFF  # one flipped byte, still a valid zip
+    np.savez(npz, **data)
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
+        ckpt.restore(d, 1, s.state_dict())
+
+
+def test_restore_detects_partially_renamed_step(tmp_path):
+    _, s = _fused()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, s.state_dict(), sharded=True)
+    os.remove(os.path.join(d, "step_000000001", "manifest.json"))
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        ckpt.restore(d, 1, s.state_dict())
+
+
+def test_restore_latest_falls_back_past_damaged_step(tmp_path):
+    """A damaged newest step degrades to the previous one (warning, not a
+    crash) — across formats: the older intact step here is a legacy
+    single-file snapshot."""
+    m = 3000
+    env, s = _fused(m)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, s.state_dict(), sharded=False)  # legacy format
+    feeds = strategies.build_feed_batch(m, 2, "sparse", np.int32, seed=7)
+    s.run_rounds(feeds)
+    ckpt.save(d, 2, s.state_dict(), sharded=True)
+    os.remove(os.path.join(d, "step_000000002", "manifest.json"))
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                        backend=be.FusedBackend(block_rows=8), feed_cap=256)
+    with pytest.warns(UserWarning, match="damaged"):
+        restored, step, _ = ckpt.restore_latest(d, s2.state_dict())
+    assert step == 1
+    s2.load_state_dict(restored)
+    assert int(np.asarray(s2.round.crawl_clock)) == 0  # step-1 state
+
+
+def test_old_snapshot_compat(tmp_path):
+    """Regression: a pre-PR-6 snapshot — legacy single-file layout, no
+    checksums, no `adapt` key — still restores with strict=False."""
+    m = 3000
+    env, s = _fused(m)
+    feeds = strategies.build_feed_batch(m, 3, "sparse", np.int32, seed=8)
+    s.run_rounds(feeds)
+    sd = s.state_dict()
+    old_sd = {k: v for k, v in sd.items() if k != "adapt"}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, old_sd, sharded=False)
+    mpath = os.path.join(d, "step_000000001", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["crcs"]  # old snapshots predate the checksums
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                        backend=be.FusedBackend(block_rows=8), feed_cap=256)
+    restored, _ = ckpt.restore(d, 1, s2.state_dict(), strict=False)
+    s2.load_state_dict(restored)
+    nxt = strategies.build_feed_batch(m, 2, "sparse", np.int32, seed=9)
+    ia, _ = s.run_rounds(nxt)
+    ib, _ = s2.run_rounds(nxt)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+# ---------------------------------------------------------------------------
+# Typed exception hierarchy (host-local vs fleet-fatal).
+# ---------------------------------------------------------------------------
+
+def test_typed_exception_hierarchy():
+    m = 2000
+    env, s = _fused(m, feed_cap=4)
+    # Host-local, recoverable: raised before any device work.
+    with pytest.raises(errors.FeedDtypeError) as ei:
+        s.ingest_and_schedule(np.zeros((m,), np.float32))
+    assert isinstance(ei.value, TypeError) and not ei.value.fleet_fatal
+    with pytest.raises(errors.FeedValidationError) as ei:
+        s.run_rounds(np.zeros((2, m + 13), np.int32))
+    assert isinstance(ei.value, ValueError) and not ei.value.fleet_fatal
+    upd = Env(delta=jnp.ones((2,)), mu=jnp.ones((2,)),
+              lam=jnp.ones((2,)), nu=jnp.ones((2,)))
+    with pytest.raises(errors.FeedValidationError):
+        s.update_pages(np.array([0, m + 5]), upd)
+    # Fleet-fatal: the capacity contract is a cross-host compiled shape.
+    feeds = np.zeros((2, m), np.int32)
+    feeds[0, :64] = 1
+    with pytest.raises(errors.CapacityExceeded) as ei:
+        s.run_rounds(feeds)
+    assert isinstance(ei.value, ValueError) and ei.value.fleet_fatal
+    assert issubclass(errors.CapacityExceeded, errors.SchedulerError)
+
+
+# ---------------------------------------------------------------------------
+# Property: per-host save/restore round-trip across every backend.
+# ---------------------------------------------------------------------------
+
+_BACKENDS = {
+    "dense": lambda: be.DenseBackend(),
+    "table": lambda: be.TableBackend(),
+    "kernel": lambda: be.KernelBackend(),
+    "fused": lambda: be.FusedBackend(block_rows=8, adaptive_bounds=True,
+                                     adaptive_cand=True),
+}
+
+
+@settings(max_examples=8, deadline=None)
+@given(kind=st.sampled_from(sorted(_BACKENDS)),
+       feeds=strategies.feed_batches(m=512, max_rounds=3),
+       seed=st.integers(0, 2**8))
+def test_property_state_roundtrip_all_backends(kind, feeds, seed):
+    """state_dict -> per-host sharded save -> restore -> load_state_dict is
+    an identity for every backend: all round-state leaves (including the
+    grown FusedState planes) bitwise, and the continued selection too."""
+    import pathlib
+    import tempfile
+    m = feeds.shape[1]
+    env = uniform_instance(jax.random.PRNGKey(seed), m)
+    mk = lambda: CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                                backend=_BACKENDS[kind](), feed_cap=512)
+    s = mk()
+    s.run_rounds(feeds)
+    nxt = strategies.build_feed_batch(m, 2, "sparse", np.int32,
+                                      seed=seed + 1)
+    _roundtrip(pathlib.Path(tempfile.mkdtemp(prefix="ckpt_prop_")), s, mk,
+               nxt, sharded=True)
+
+
+# ---------------------------------------------------------------------------
+# THE fault-injection acceptance run (slow, genuine 2-process fleet).
+# ---------------------------------------------------------------------------
+
+# Shared by the reference fleet, the to-be-killed fleet, and the restored
+# fleet: deterministic env/feeds from integer hashes of the GLOBAL page
+# index, built over each host's local range only — no process ever holds a
+# global env or feed row. k is large enough that the candidate-depth
+# adaptation takes a real decision inside the replayed window (so the
+# checkpointed counters provably matter).
+_RECOVERY_SETUP = """
+import os, signal
+import numpy as np
+import jax.numpy as jnp
+from repro.core import Env
+from repro.sched import backends as be
+from repro.sched.service import CrawlScheduler
+from repro.checkpoint import store as ckpt
+
+mesh = jax.make_mesh((4,), ("data",))
+m, k, R, dt = 16384, 1024, 6, 0.05
+
+def local_env(lo, hi):
+    idx = np.arange(lo, hi, dtype=np.int64)
+    return Env(
+        delta=jnp.asarray(0.5 + ((idx * 2654435761) % 1000)
+                          .astype(np.float32) / 500.0),
+        mu=jnp.asarray(1.0 + ((idx * 40503) % 997)
+                       .astype(np.float32) / 10.0),
+        lam=jnp.asarray(0.1 + ((idx * 69069) % 91)
+                        .astype(np.float32) / 100.0),
+        nu=jnp.asarray(0.05 + ((idx * 12345) % 37)
+                       .astype(np.float32) / 200.0),
+    )
+
+def feed(b, lo, hi):
+    idx = np.arange(lo, hi, dtype=np.int64)
+    f = np.zeros((R, hi - lo), np.int32)
+    for r in range(R):
+        h = (idx * 2654435761 + 97 * r + 131 * b) % 701
+        sel = h < 2
+        f[r, sel] = (1 + (idx[sel] % 7)).astype(np.int32)
+    return f
+
+# 40 pages, ALL on shard 0: over update_cap=32, so host 0 applies two
+# chunks while host 1 applies one empty batch — hosts legitimately
+# disagree on chunk count (the collective-free repack).
+upd_ids = np.arange(0, 400, 10)
+upd_env = Env(delta=jnp.full((40,), 1.5), mu=jnp.full((40,), 250.0),
+              lam=jnp.full((40,), 0.4), nu=jnp.full((40,), 0.2))
+
+def make_sched():
+    lo, hi = PROC_ID * m // N_PROCS, (PROC_ID + 1) * m // N_PROCS
+    return CrawlScheduler.from_local_env(
+        local_env(lo, hi), mesh, float(k) / dt, m=m, round_period=dt,
+        backend=be.FusedBackend(block_rows=8, adaptive_bounds=True,
+                                adaptive_cand=True),
+        feed_cap=64, update_cap=32)
+
+def state_slabs(s):
+    out = {}
+    for name, v in zip(be.FusedState._fields, s.round.backend):
+        out["st_" + name] = ckpt._local_slab(v)[0]
+    out["tau"] = ckpt._local_slab(s.round.tau_elap)[0]
+    out["ncis"] = ckpt._local_slab(s.round.n_cis)[0]
+    out["clock"] = np.asarray(s.round.crawl_clock)
+    for name, v in zip(be.RoundDiagnostics._fields, s.macro_diagnostics):
+        out["dg_" + name] = ckpt._local_slab(v)[0]
+    return out
+
+def poison_device_get(msg):
+    def die(*a, **kw):
+        raise AssertionError(msg)
+    real, jax.device_get = jax.device_get, die
+    return real
+"""
+
+_RECOVERY_PHASE_A = _RECOVERY_SETUP + """
+# Host-local construction really is host-local: the assembled state is NOT
+# addressable from one process (so neither init nor save can be secretly
+# gathering globals).
+s_ref = make_sched()
+was_addressable = True
+try:
+    np.asarray(s_ref.round.tau_elap)
+except Exception:
+    was_addressable = False
+assert not was_addressable, "2-process state was fully addressable"
+
+# Uninterrupted reference run: B1 .. B4, over-cap refresh after B2.
+lo, hi = s_ref.host_slice.start, s_ref.host_slice.stop
+s_ref.run_rounds(feed(1, lo, hi))
+ids2, vals2 = s_ref.run_rounds(feed(2, lo, hi))
+c2 = be.crawl_rounds._cache_size()
+s_ref.update_pages(upd_ids, upd_env)
+ids3, vals3 = s_ref.run_rounds(feed(3, lo, hi))
+c3 = be.crawl_rounds._cache_size()
+ids4, vals4 = s_ref.run_rounds(feed(4, lo, hi))
+c4 = be.crawl_rounds._cache_size()
+# The depth decision must have fired inside the replayed window (18 rounds
+# >= the 16-round interval at the B3 boundary) — otherwise this test would
+# not prove the adaptation counters survive the crash.
+assert s_ref.backend.cand_per_lane is not None, "no depth decision fired"
+np.savez(os.path.join(tmpdir, "ref_%d.npz" % PROC_ID),
+         ids2=np.asarray(ids2), vals2=np.asarray(vals2),
+         ids3=np.asarray(ids3), vals3=np.asarray(vals3),
+         ids4=np.asarray(ids4), vals4=np.asarray(vals4),
+         cgrow3=c3 - c2, cgrow4=c4 - c3,
+         cand=s_ref.backend.cand_per_lane,
+         window=getattr(s_ref, "_rounds_since_cand_adapt", 0),
+         **state_slabs(s_ref))
+
+# The fleet that will crash: checkpoint after B1 (per-host shards, with
+# jax.device_get poisoned — the sharded save path must never gather).
+s = make_sched()
+lo, hi = s.host_slice.start, s.host_slice.stop
+s.run_rounds(feed(1, lo, hi))
+real = poison_device_get("sharded save called jax.device_get")
+ckpt.save(os.path.join(tmpdir, "ck"), 1, s.state_dict())
+jax.device_get = real
+print("CKPT_READY", flush=True)
+s.run_rounds(feed(2, lo, hi))   # post-checkpoint work, lost in the crash
+if PROC_ID == 1:
+    os.kill(os.getpid(), signal.SIGKILL)
+s.run_rounds(feed(3, lo, hi))   # survivor hangs here (reaped by harness)
+print("SURVIVOR_PASSED_B3", flush=True)
+"""
+
+_RECOVERY_PHASE_B = _RECOVERY_SETUP + """
+s = make_sched()
+lo, hi = s.host_slice.start, s.host_slice.stop
+real = poison_device_get("sharded restore called jax.device_get")
+restored, step, extra = ckpt.restore_latest(os.path.join(tmpdir, "ck"),
+                                            s.state_dict())
+assert step == 1, step
+s.load_state_dict(restored)
+jax.device_get = real
+
+ref = np.load(os.path.join(tmpdir, "ref_%d.npz" % PROC_ID))
+ids2, vals2 = s.run_rounds(feed(2, lo, hi))
+c2 = be.crawl_rounds._cache_size()
+s.update_pages(upd_ids, upd_env)
+ids3, vals3 = s.run_rounds(feed(3, lo, hi))
+c3 = be.crawl_rounds._cache_size()
+ids4, vals4 = s.run_rounds(feed(4, lo, hi))
+c4 = be.crawl_rounds._cache_size()
+
+# Selections + values of every replayed batch: bit-identical.
+for name, got in [("ids2", ids2), ("vals2", vals2), ("ids3", ids3),
+                  ("vals3", vals3), ("ids4", ids4), ("vals4", vals4)]:
+    np.testing.assert_array_equal(np.asarray(got), ref[name], err_msg=name)
+# Post-restore recompile cadence identical to the uninterrupted run: no
+# extra jit-cache growth batch over batch (in particular the depth
+# decision at the B3 boundary re-jits exactly once in both runs).
+assert c3 - c2 == int(ref["cgrow3"]), (c3 - c2, int(ref["cgrow3"]))
+assert c4 - c3 == int(ref["cgrow4"]), (c4 - c3, int(ref["cgrow4"]))
+# Adaptation counters: the restored fleet took the same depth decision in
+# the same round.
+assert s.backend.cand_per_lane == int(ref["cand"]), (
+    s.backend.cand_per_lane, int(ref["cand"]))
+assert getattr(s, "_rounds_since_cand_adapt", 0) == int(ref["window"])
+# Final state (packed planes, bounds, thresholds, page state) and the last
+# macro-round's diagnostics: bit-identical shard by shard.
+for name, slab in state_slabs(s).items():
+    np.testing.assert_array_equal(slab, ref[name], err_msg=name)
+print("RESTORE_OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_kill_and_restore_two_process(tmp_path):
+    """Run a 2-process fleet, checkpoint to per-host shards, SIGKILL one
+    process mid-run, restart a fresh fleet from the shards, and prove the
+    continued run is bit-identical to an uninterrupted one."""
+    tmpdir = str(tmp_path)
+    outs = run_distributed_kill(_RECOVERY_PHASE_A, n_procs=2,
+                                devices_per_proc=2, victim=1, timeout=900,
+                                token="CKPT_READY", tmpdir=tmpdir)
+    # The survivor must NOT have completed the post-crash batch: its peer
+    # is gone, the collective can never finish.
+    assert "SURVIVOR_PASSED_B3" not in outs[0], outs[0]
+    # Both reference files and the checkpoint were durable before the kill.
+    for p in (0, 1):
+        assert os.path.exists(os.path.join(tmpdir, f"ref_{p}.npz"))
+    assert os.path.exists(
+        os.path.join(tmpdir, "ck", "step_000000001", "manifest.json"))
+    run_distributed(_RECOVERY_PHASE_B, n_procs=2, devices_per_proc=2,
+                    timeout=900, token="RESTORE_OK", tmpdir=tmpdir)
