@@ -77,6 +77,7 @@ def kernel_bench():
     fused_adaptive_bench()
     macro_round_bench()
     ckpt_roundtrip_bench()
+    online_est_bench()
 
 
 def refresh_repack_bench():
@@ -473,6 +474,146 @@ def macro_round_bench():
          f"m={m};k={k};dt={dt};feed_nnz_per_round=8;"
          f"frac_active_mass={f_mass:.3f};frac_active_remark={f_remark:.3f};"
          f"extra_skip={f_remark - f_mass:.3f};selection_exact=1")
+
+
+def online_est_bench():
+    """Streaming on-device estimation (`sched/online_est`): the cost and
+    the payoff of closing the learning loop inside the macro-round scan.
+
+    Part 1 (cost): estimating macro-rounds (`FusedBackend(online_est=True)`
+    + a full `outcomes` batch every round) vs the non-estimating scan on
+    identical feeds — interleaved reps, per-batch medians. Guards:
+    (1) with an empty outcome batch the estimating selection is
+    BIT-IDENTICAL to online_est=False; (2) the entire estimating run
+    executes under a poisoned `jax.device_get` (host_syncs_per_round = 0 —
+    the learning loop never leaves the device); (3) the throughput
+    overhead stays within the ISSUE's 15% budget.
+
+    Part 2 (payoff): the closed-loop driver (`sim.run_closed_loop`) on the
+    tiered-CIS instance from a WRONG (Delta, lambda, nu) belief —
+    steady-state freshness regret of streaming vs the batch-MLE reference
+    loop vs the no-learning floor, gated at the ISSUE's 5% parity."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.values import Env
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
+    from repro.sim import (LoopConfig, freshness_regret, run_closed_loop,
+                           tiered_cis_instance)
+
+    m = prof(1 << 18, 1 << 20)
+    k, R, dt = 256, 32, 1.0
+    mesh = jax.make_mesh((1,), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    order = jnp.argsort(-(env.mu / env.delta))
+    env = jax.tree.map(lambda x: x[order], env)
+    tau0 = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=2.0)
+
+    def build(online_est):
+        s = CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
+                           round_period=dt,
+                           backend=be.FusedBackend(adaptive_bounds=True,
+                                                   online_est=online_est),
+                           feed_cap=4096, outcome_cap=k)
+        s.round = dataclasses.replace(s.round, tau_elap=jnp.copy(tau0))
+        return s
+
+    off, on = build(False), build(True)
+    rng = np.random.default_rng(0)
+    feeds_np = np.zeros((R, m), np.int32)
+    for r in range(R):
+        idx = rng.choice(m, 64, replace=False)
+        feeds_np[r, idx] = rng.poisson(2.0, 64).astype(np.int32) + 1
+
+    # Guard (1): empty-outcome estimating rounds == non-estimating rounds.
+    ids_off, vals_off = off.run_rounds(np.copy(feeds_np))
+    ids_on, vals_on = on.run_rounds(np.copy(feeds_np))
+    assert np.array_equal(np.asarray(ids_off), np.asarray(ids_on)), \
+        "online_est=True with no outcomes diverged from online_est=False"
+    assert np.array_equal(np.asarray(vals_off), np.asarray(vals_on))
+
+    # A full outcome batch every round from here on: the previous batch's
+    # own selections with echoed covariates (the production echo contract).
+    ids_np = np.asarray(ids_on)
+    out = (ids_np, (ids_np % 3 == 0).astype(np.int32),
+           np.full(ids_np.shape, dt * R, np.float32),
+           np.zeros(ids_np.shape, np.int64))
+
+    def die(*_a, **_kw):
+        raise AssertionError(
+            "estimating macro-round called jax.device_get (host sync)")
+
+    # Warm the outcome-carrying signature, then time interleaved. Guard
+    # (2): the whole estimating loop runs with jax.device_get poisoned.
+    real, jax.device_get = jax.device_get, die
+    try:
+        on.run_rounds(np.copy(feeds_np), outcomes=out)
+        off.run_rounds(np.copy(feeds_np))
+        reps = prof(5, 7)
+        t_on, t_off = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _, v = on.run_rounds(np.copy(feeds_np), outcomes=out)
+            jax.block_until_ready(v)
+            t_on.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            _, v = off.run_rounds(np.copy(feeds_np))
+            jax.block_until_ready(v)
+            t_off.append(time.perf_counter() - t0)
+    finally:
+        jax.device_get = real
+    us_on = float(np.median(t_on)) / R * 1e6
+    us_off = float(np.median(t_off)) / R * 1e6
+    overhead = us_on / us_off - 1.0
+    # Guard (3): the ISSUE's throughput budget for the learning loop.
+    assert overhead <= 0.15, (
+        f"online estimation costs {overhead:.1%} round throughput, over "
+        "the 15% budget")
+
+    # ---- Part 2: closed-loop freshness regret vs the batch-MLE loop ----
+    ml = 2048
+    kl, Rl, NB = 32, 16, prof(40, 120)
+    inst = tiered_cis_instance(jax.random.PRNGKey(1), ml)
+    env_true = inst.env
+    env_wrong = Env(delta=jnp.full((ml,), 0.5), mu=env_true.mu,
+                    lam=jnp.zeros((ml,)), nu=jnp.zeros((ml,)))
+
+    def build_loop(envb, online_est):
+        return CrawlScheduler(
+            envb, mesh, bandwidth=float(kl),
+            backend=be.FusedBackend(block_rows=8, online_est=online_est),
+            outcome_cap=kl)
+
+    cfg = lambda mode: LoopConfig(n_batches=NB, rounds_per_batch=Rl,
+                                  mode=mode, mle_every=4, seed=7)
+    oracle = run_closed_loop(build_loop(env_true, False), env_true,
+                             cfg("fixed"))
+    fixed = run_closed_loop(build_loop(env_wrong, False), env_true,
+                            cfg("fixed"))
+    stream = run_closed_loop(build_loop(env_wrong, True), env_true,
+                             cfg("streaming"))
+    mle = run_closed_loop(build_loop(env_wrong, False), env_true,
+                          cfg("mle"))
+    r_fixed = freshness_regret(fixed, oracle)
+    r_stream = freshness_regret(stream, oracle)
+    r_mle = freshness_regret(mle, oracle)
+    parity = r_stream / max(r_mle, 1e-9)
+    assert r_stream < r_fixed, "streaming estimation did not learn at all"
+    # The ISSUE's parity acceptance: streaming within 5% of the batch-MLE
+    # reference (measured: streaming BEATS the windowed refit here).
+    assert parity <= 1.05, (
+        f"streaming regret {r_stream:.5f} is {parity:.3f}x the batch-MLE "
+        "reference, over the 5% parity budget")
+
+    emit("sched/online_est", us_on,
+         f"m={m};k={k};R={R};pages_per_s={m/(us_on/1e6):.3e};"
+         f"overhead_vs_off={overhead:.3f};host_syncs_per_round=0;"
+         f"empty_outcomes_bit_identical=1;"
+         f"regret_stream={r_stream:.5f};regret_mle={r_mle:.5f};"
+         f"regret_no_learning={r_fixed:.5f};stream_vs_mle={parity:.3f};"
+         f"loop_m={ml};loop_batches={NB}")
 
 
 def sched_bench():

@@ -41,6 +41,17 @@ slab via `jax.make_array_from_process_local_data` against the reference
 tree's sharding — committed sharded arrays come back without any global
 gather. `strict=False` path-matching compat with old snapshots (and old
 single-file layouts) is preserved.
+
+Topology resharding: a sharded-v1 checkpoint saved by N processes can be
+restored onto a DIFFERENT process count (elastic shrink/grow, or a
+single-process post-mortem of a fleet checkpoint). When the running
+topology differs from the saving one, every running process reads all
+saved shard files (crc-verified) and re-slices each leaf along the
+recorded global offsets to exactly its own addressable box under the
+reference sharding — the data path is offsets-driven, so it needs no
+agreement between the old and new shard boundaries beyond both tiling
+the same global shapes. The fast path (same topology: each process reads
+only its own shard file) is unchanged.
 """
 from __future__ import annotations
 
@@ -272,6 +283,61 @@ class _Slab:
         self.shape = tuple(shape)
 
 
+class _MultiSlab:
+    """ALL saved processes' slabs of one sharded leaf (the
+    topology-resharding restore path): `pieces` of (local array, global
+    offsets), disjoint and jointly tiling the global `shape`. Re-sliced to
+    the running topology's addressable boxes in `_pair_and_rebuild`."""
+
+    __slots__ = ("pieces", "shape")
+
+    def __init__(self, pieces, shape):
+        self.pieces = pieces
+        self.shape = tuple(shape)
+
+
+def _assemble_box(ref: jax.Array, slab: _MultiSlab) -> np.ndarray:
+    """Fill this process's addressable box of `ref` from the recorded
+    slabs of a different saving topology. Offsets-driven: each saved piece
+    contributes its overlap with the box, and full coverage is verified —
+    a gap means the recorded slabs do not tile the global shape
+    (`CheckpointCorruptError`), never a silently half-initialized leaf."""
+    if ref.is_fully_addressable:
+        lo = [0] * ref.ndim
+        box_shape = tuple(ref.shape)
+    else:
+        lo = list(ref.shape)
+        hi = [0] * ref.ndim
+        for s in ref.addressable_shards:
+            for i, sl in enumerate(s.index):
+                a = sl.start or 0
+                b = ref.shape[i] if sl.stop is None else sl.stop
+                lo[i] = min(lo[i], a)
+                hi[i] = max(hi[i], b)
+        box_shape = tuple(h - l for l, h in zip(lo, hi))
+    box = np.empty(box_shape, ref.dtype)
+    filled = 0
+    for a, off in slab.pieces:
+        src, dst = [], []
+        for i in range(ref.ndim):
+            s0 = max(off[i], lo[i])
+            s1 = min(off[i] + a.shape[i], lo[i] + box_shape[i])
+            if s1 <= s0:
+                break
+            src.append(slice(s0 - off[i], s1 - off[i]))
+            dst.append(slice(s0 - lo[i], s1 - lo[i]))
+        else:
+            box[tuple(dst)] = a[tuple(src)].astype(ref.dtype, copy=False)
+            filled += int(np.prod([s.stop - s.start for s in dst],
+                                  dtype=np.int64))
+    if filled != box.size:
+        raise CheckpointCorruptError(
+            f"recorded shard slabs cover {filled} of {box.size} elements "
+            f"of this process's box of a {slab.shape} leaf; the saved "
+            "slabs do not tile the global shape")
+    return box
+
+
 def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
     """Restore into the structure of tree_like (shape-checked).
 
@@ -286,10 +352,13 @@ def restore(ckpt_dir: str, step: int, tree_like, strict: bool = True):
 
     Integrity: a missing/unreadable manifest (a partially-renamed step
     dir), a truncated or corrupt shard npz, and any crc mismatch raise
-    `CheckpointCorruptError`. Sharded-v1 checkpoints additionally require
-    the saving process topology (restore with the same process count) and
-    reassemble each sharded leaf from this process's slab via
-    `jax.make_array_from_process_local_data` — no global gather."""
+    `CheckpointCorruptError`. Sharded-v1 checkpoints reassemble each
+    sharded leaf from this process's slab via
+    `jax.make_array_from_process_local_data` — no global gather. When the
+    running process count differs from the saving one, restore re-slices
+    the saved slabs along their recorded global offsets to the running
+    topology's addressable boxes (module docstring "Topology resharding")
+    — each running process then reads every saved shard file."""
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
     try:
         with open(os.path.join(d, "manifest.json")) as f:
@@ -345,10 +414,9 @@ def _load_sharded_leaves(d: str, manifest):
     n_procs = jax.process_count()
     topo = manifest.get("topology", {})
     if topo.get("n_procs") != n_procs:
-        raise ValueError(
-            f"checkpoint in {d} was saved by {topo.get('n_procs')} "
-            f"process(es) but {n_procs} are running; restore with the "
-            "saving process topology")
+        # Elastic restore: re-slice the saved slabs to the running topology
+        # along the recorded global offsets.
+        return _load_resharded_leaves(d, manifest)
     try:
         smeta = manifest["shards"][str(proc)]
     except KeyError as e:
@@ -367,6 +435,49 @@ def _load_sharded_leaves(d: str, manifest):
             a = a.view(np.dtype(dt)).reshape(smeta["local_shapes"][i])
         off = smeta["offsets"][i]
         leaves.append(a if off is None else _Slab(a, off, gshp))
+    return leaves
+
+
+def _load_resharded_leaves(d: str, manifest):
+    """Load a sharded-v1 checkpoint saved by a DIFFERENT process count:
+    every running process reads all saved shard files and carries each
+    sharded leaf as a `_MultiSlab` of (slab, global offsets) pieces, which
+    `_pair_and_rebuild` re-slices to this process's addressable boxes.
+    Replicated/global leaves (offsets None — identical in every saved
+    shard file by construction) restore from the first saved process."""
+    topo = manifest.get("topology", {})
+    saved_procs = sorted(int(p) for p in manifest.get("shards", {}))
+    if saved_procs != list(range(topo.get("n_procs", -1))):
+        raise CheckpointCorruptError(
+            f"manifest in {d} records topology {topo} but shard metadata "
+            f"for processes {saved_procs}")
+    n = len(manifest["paths"])
+    per_proc = []
+    for p in saved_procs:
+        smeta = manifest["shards"][str(p)]
+        arrays = _load_npz(d, p, n)
+        _verify_crcs(arrays, smeta.get("crcs"), d, p)
+        per_proc.append((smeta, arrays))
+    import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+
+    leaves = []
+    for i, (dt, gshp) in enumerate(zip(manifest["dtypes"],
+                                       manifest["shapes"])):
+        def view(p_idx):
+            smeta, arrays = per_proc[p_idx]
+            a = arrays[i]
+            if a.dtype == np.uint8 and dt != "uint8":
+                a = a.view(np.dtype(dt)).reshape(smeta["local_shapes"][i])
+            return a
+        # `_local_slab` classifies a leaf identically on every process
+        # (sharded vs replicated/global is a property of the array, not
+        # the host), so process 0's offsets decide for all.
+        if per_proc[0][0]["offsets"][i] is None:
+            leaves.append(view(0))
+        else:
+            leaves.append(_MultiSlab(
+                [(view(p), per_proc[p][0]["offsets"][i])
+                 for p in range(len(per_proc))], gshp))
     return leaves
 
 
@@ -408,6 +519,20 @@ def _pair_and_rebuild(leaves, manifest, tree_like, strict: bool):
                 local = got.local.astype(ref.dtype, copy=False)
                 out.append(jax.make_array_from_process_local_data(
                     ref.sharding, local))
+            else:
+                keep_ref(got, ref, out)
+            continue
+        if isinstance(got, _MultiSlab):
+            # Topology resharding: re-slice the saved slabs to THIS
+            # process's addressable box under the reference sharding.
+            if (isinstance(ref, jax.Array)
+                    and got.shape == tuple(ref.shape)):
+                box = _assemble_box(ref, got)
+                if ref.is_fully_addressable:
+                    out.append(jax.device_put(box, ref.sharding))
+                else:
+                    out.append(jax.make_array_from_process_local_data(
+                        ref.sharding, box))
             else:
                 keep_ref(got, ref, out)
             continue

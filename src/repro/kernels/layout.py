@@ -260,6 +260,18 @@ def repack_pages(
     return env.at[blk, :, row, lane].set(cols, mode="drop")
 
 
+def gather_plane(env: jax.Array, page_ids: jax.Array, plane: int) -> jax.Array:
+    """Gather one packed plane's value per flat (padded) page id — the
+    read-side companion of `repack_pages`' flat-id addressing (page p lives
+    at block p // bp, row (p % bp) // LANES, lane p % LANES). Out-of-range
+    ids clamp to the last page (pair with a dropped scatter for sentinel
+    rows); ids must be non-negative."""
+    nb, _, block_rows, lanes = env.shape
+    bp = block_rows * lanes
+    ids = jnp.minimum(jnp.asarray(page_ids, jnp.int32), nb * bp - 1)
+    return env[ids // bp, plane, (ids % bp) // lanes, ids % lanes]
+
+
 def refresh_block_bounds(
     env: jax.Array, bounds: jax.Array, block_ids: jax.Array
 ) -> jax.Array:

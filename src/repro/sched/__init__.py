@@ -31,6 +31,12 @@ from repro.sched.distributed import (
     sharded_crawl_step,
     sharded_select,
 )
+from repro.sched.online_est import (
+    SparseOutcomes,
+    apply_estimates,
+    ingest_outcomes,
+    init_est,
+)
 from repro.sched.service import CrawlScheduler
 from repro.sched.tiered import (
     BlockBounds,

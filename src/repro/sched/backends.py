@@ -178,6 +178,12 @@ class FusedState(NamedTuple):
     #                         "one hot round" from "every round saturated"
     #                         (a lone spike must not pin the depth high for
     #                         a whole large-R macro-round)
+    # --- streaming-estimation planes (appended; FusedBackend.online_est) --
+    est: Any = None         # `core.estimation.StreamStats` of (m_state,) f32
+    #                         planes when online_est is on, None otherwise
+    #                         (None = empty pytree: the off path's state
+    #                         tree, jit signatures, and checkpoints are
+    #                         byte-identical to pre-estimation builds)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -457,6 +463,27 @@ class FusedBackend:
         per-lane-column winner counts so `CrawlScheduler` (adaptive_cand)
         can shrink the depth on well-mixed shards — fewer extraction
         passes per active block.
+
+    Streaming estimation (`sched.online_est`, opt-in):
+
+      * online_est: carry per-page streaming (Delta, lambda, nu) estimator
+        planes (`FusedState.est`) and close the learning loop inside the
+        macro-round scan — self-contained crawl outcomes
+        (`crawl_rounds(..., outcomes=SparseOutcomes)`: freshness bit +
+        echoed covariates) ingested as
+        O(outcomes)/round closed-form moment-statistic updates
+        (`estimation.stream_update`), and the packed env planes of the
+        touched pages re-derived ON DEVICE once per macro batch
+        (`online_est.apply_estimates`). Zero host transfers; with an empty
+        outcome batch the selection is bit-identical to online_est=False.
+        Estimation only advances through the macro path (`crawl_rounds`
+        with SparseFeeds); sequential `crawl_round`s carry the planes
+        untouched. Pages with fewer than est_min_obs resolved outcomes keep
+        their current packed parameters; est_prior_a/est_prior_b/est_prior_w
+        shrink small-sample (alpha, alpha*beta) estimates toward the prior
+        with est_prior_w pseudo-observations' weight per statistic group
+        (the closed-loop explore/exploit guard — see
+        `estimation.stream_quality`).
     """
 
     n_terms: int = 8
@@ -473,6 +500,11 @@ class FusedBackend:
     hyst_max: float = HYSTERESIS_MAX
     hyst_tighten: float = HYSTERESIS_TIGHTEN
     hyst_relax: float = HYSTERESIS_RELAX
+    online_est: bool = False
+    est_min_obs: int = 2
+    est_prior_a: float = 0.5
+    est_prior_b: float = 1.0
+    est_prior_w: float = 8.0
 
     def init(self, env: Env, mesh: Mesh) -> BackendInit:
         from repro.kernels import layout
@@ -515,8 +547,18 @@ class FusedBackend:
             beta_max=_put(layout.block_beta_max(shard.env), mesh, pspec),
             cis_mass=_put(jnp.zeros(bb.asym.shape, jnp.float32), mesh, pspec),
             depth_hot=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
+            est=self._init_est(m_state, lambda x: _put(x, mesh, pspec)),
         )
         return BackendInit(m_state, bstate, d, None)
+
+    def _init_est(self, m_state: int, put):
+        """The streaming-estimator planes (None when online_est is off);
+        `put` places one (m_state,) plane with the page-state sharding."""
+        if not self.online_est:
+            return None
+        from repro.sched import online_est as oest
+
+        return jax.tree.map(put, oest.init_est(m_state))
 
     def init_local(self, env_local: Env, mesh: Mesh, *, m: int,
                    host_shards: tuple[int, int],
@@ -579,6 +621,7 @@ class FusedBackend:
             beta_max=hla(layout.block_beta_max(shard.env), row),
             cis_mass=hla(jnp.zeros(bb.asym.shape, jnp.float32), row),
             depth_hot=hla(jnp.zeros((n_loc,), jnp.int32), row),
+            est=self._init_est(local_len, lambda x: hla(x, row)),
         )
         return m_state, bstate
 
@@ -868,6 +911,7 @@ def crawl_rounds(
     mesh: Mesh,
     k: int,
     dt: float,
+    outcomes: "SparseOutcomes | None" = None,
 ):
     """A macro-round: R full scheduling rounds inside ONE jitted, donated
     `lax.scan` — one host->device dispatch for the whole batch instead of
@@ -894,13 +938,25 @@ def crawl_rounds(
     `state` is DONATED (as in `crawl_round`); `feeds` is not. R (and the
     sparse cap) are static shapes — drive a deployment with one batch size
     to avoid re-jits.
+
+    outcomes: a `sched.online_est.SparseOutcomes` crawl-outcome batch for a
+    `FusedBackend(online_est=True)` backend (required there, possibly
+    empty — `CrawlScheduler.run_rounds` builds it host-locally); must be
+    None otherwise. Outcome ingest, the streaming estimator steps, and the
+    macro-boundary env-plane re-derivation all run inside the same
+    shard_map as the rounds themselves — zero extra host transfers.
     """
     if isinstance(feeds, SparseFeeds):
         if not isinstance(backend, FusedBackend):
             raise ValueError(
                 "SparseFeeds macro-rounds require the fused backend; dense "
                 "oracle backends take the (R, m_state) batch")
-        return _fused_macro_rounds(backend, state, feeds, mesh, k, dt)
+        return _fused_macro_rounds(backend, state, feeds, mesh, k, dt,
+                                   outcomes)
+    if outcomes is not None:
+        raise ValueError(
+            "crawl outcomes require the fused SparseFeeds macro path "
+            "(FusedBackend(online_est=True) + CrawlScheduler.run_rounds)")
 
     def step(st, feed):
         st, (top_g, top_v) = _round_body(backend, st, feed, mesh, k, dt)
@@ -911,11 +967,23 @@ def crawl_rounds(
 
 
 def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
-                        feeds: SparseFeeds, mesh: Mesh, k: int, dt: float):
+                        feeds: SparseFeeds, mesh: Mesh, k: int, dt: float,
+                        outcomes=None):
     """The fused macro-round scan (see `crawl_rounds`): one shard_map whose
     body scans R rounds, reusing `_fused_shard_round` for the per-round
-    math so each round is bit-identical to the sequential path."""
+    math so each round is bit-identical to the sequential path.
+
+    With `backend.online_est`, the same scan additionally threads the
+    streaming-estimator planes (`FusedState.est`) through the carry — each
+    round ingests its slice of the `outcomes` batch (O(cap) scatters) — and
+    after the scan, still
+    inside the shard_map, `online_est.apply_estimates` re-derives the
+    packed env planes + bound rows of the touched pages on device. The
+    off path's trace is built from the exact same expressions with no est
+    operands, so it stays bit-identical to pre-estimation builds."""
     from repro.kernels import select as ksel
+    from repro.sched import online_est as oest
+    from repro.sched import tiered
 
     axes = tuple(mesh.axis_names)
     pspec = P(axes)
@@ -937,6 +1005,30 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
         f"SparseFeeds must be per-shard (R, n_shards={n_shards}, cap); got "
         f"{feeds.ids.shape} — see CrawlScheduler._sparse_feed_batch"
     )
+    est_on = backend.online_est
+    if est_on:
+        if bst.est is None:
+            raise ValueError(
+                "online_est backend with no estimator planes in FusedState "
+                "— the state was built by a non-estimating backend config; "
+                "rebuild the scheduler (or restore into an online_est one)")
+        if outcomes is None:
+            raise ValueError(
+                "online_est macro-rounds need a SparseOutcomes batch "
+                "(possibly empty) — CrawlScheduler.run_rounds builds it")
+        assert outcomes.changed.shape == outcomes.ids.shape, outcomes
+        assert outcomes.tau.shape == outcomes.ids.shape, outcomes
+        assert outcomes.n_cis.shape == outcomes.ids.shape, outcomes
+        assert (outcomes.ids.ndim == 3 and outcomes.ids.shape[0] == R
+                and outcomes.ids.shape[1] == n_shards), (
+            f"SparseOutcomes must be per-shard (R={R}, n_shards={n_shards}, "
+            f"cap); got {outcomes.ids.shape} — see "
+            "CrawlScheduler._sparse_outcome_batch"
+        )
+    elif outcomes is not None:
+        raise ValueError(
+            "crawl outcomes passed to a backend without online_est — "
+            "construct FusedBackend(online_est=True)")
     nb_local = n_blocks // n_shards
     k_loc, cand = ksel.shard_budget(
         k, m // n_shards, nb_local, n_shards,
@@ -945,18 +1037,25 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
     impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
 
     def shard_fn(tau0, n0, fid, fcnt, env_shard, asym, slope, blkmax0, last0,
-                 betam, cmass0, thresh0, hyst0, colw0, dhot0, clock0):
+                 betam, cmass0, thresh0, hyst0, colw0, dhot0, clock0,
+                 *est_args):
         m_local = tau0.shape[0]
         shard_lin = _shard_linear_index(axes)
         local_start = shard_lin * m_local
         # This shard's feed rows: (R, 1, cap) -> (R, cap).
         fid = fid.reshape(R, -1)
         fcnt = fcnt.reshape(R, -1)
+        if est_on:
+            oid, ochg, otau, ocis, est0 = est_args
+            oid = oid.reshape(R, -1)
+            ochg = ochg.reshape(R, -1)
+            otau = otau.reshape(R, -1)
+            ocis = ocis.reshape(R, -1)
 
         def step(carry, xs):
             (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev,
-             cmass, clock) = carry
-            fid_r, fcnt_r = xs
+             cmass, clock) = carry[:10]
+            fid_r, fcnt_r = xs[0], xs[1]
             # This shard's slice of the round's sparse feed: local indices
             # with the out-of-bounds drop sentinel for other shards' pages
             # and the -1 padding rows.
@@ -989,6 +1088,15 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             )
             top_g, top_v, idx = _global_winners(sel.values, sel.ids, axes,
                                                 m_local, k)
+            if est_on:
+                # Fold this round's self-contained outcome slice (freshness
+                # bit + echoed covariates — see `online_est.SparseOutcomes`)
+                # into the streaming statistics: O(cap) scatters.
+                orel = xs[2] - local_start
+                oidx = jnp.where((orel >= 0) & (orel < m_local), orel,
+                                 m_local)
+                est = oest.ingest_outcomes(carry[10], oidx, xs[3], xs[4],
+                                           xs[5])
             # Winner resets touch only the k crawled pages and the feed
             # ingest only the nnz fed pages (no O(m) mask / dense add):
             # tau drops to one round period and n to 0-then-feed — both
@@ -998,44 +1106,90 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                                                            mode="drop")
             carry = (tau, n, upd.thresh, upd.hyst, upd.colw, upd.dhot,
                      upd.blkmax, upd.last_ev, upd.cmass, clock + 1)
+            if est_on:
+                carry = carry + (est,)
             ys = (top_g, top_v, sel.frac_active, sel.fell_back, upd.hyst,
                   upd.colw, upd.dhot)
             return carry, ys
 
         carry0 = (tau0, n0, thresh0[0], hyst0[0], colw0[0], dhot0[0],
                   blkmax0, last0, cmass0, clock0)
-        carry, ys = jax.lax.scan(step, carry0, (fid, fcnt))
+        xs = (fid, fcnt)
+        if est_on:
+            carry0 = carry0 + (est0,)
+            xs = xs + (oid, ochg, otau, ocis)
+        carry, ys = jax.lax.scan(step, carry0, xs)
         (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev, cmass,
-         _clock) = carry
+         _clock) = carry[:10]
         top_g, top_v, frac, fb, hyst_r, colw_r, dhot_r = ys
-        return (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
-                colw_s.reshape(1), dhot_s.reshape(1), blkmax, last_ev,
-                cmass, top_g, top_v,
-                frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
-                colw_r.reshape(R, 1), dhot_r.reshape(R, 1))
+        out = (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
+               colw_s.reshape(1), dhot_s.reshape(1), blkmax, last_ev,
+               cmass, top_g, top_v,
+               frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
+               colw_r.reshape(R, 1), dhot_r.reshape(R, 1))
+        if est_on:
+            # Macro-boundary device-side refresh: repack the packed planes
+            # of every page whose outcome landed this batch and re-derive
+            # the touched blocks' bound rows (post-scan anchors).
+            est = carry[10]
+            orel_all = oid.reshape(-1) - local_start
+            touched = jnp.where(
+                (orel_all >= 0) & (orel_all < m_local), orel_all, m_local)
+            env2, bb2, betam2, cmass2 = oest.apply_estimates(
+                est, env_shard, touched,
+                tiered.BlockBounds(asym=asym, slope=slope, blk_max=blkmax,
+                                   last_eval=last_ev),
+                betam, cmass, min_obs=float(backend.est_min_obs),
+                prior_a=backend.est_prior_a, prior_b=backend.est_prior_b,
+                prior_w=backend.est_prior_w)
+            out = (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
+                   colw_s.reshape(1), dhot_s.reshape(1), bb2.blk_max,
+                   bb2.last_eval, cmass2, top_g, top_v,
+                   frac.reshape(R, 1), fb.reshape(R, 1),
+                   hyst_r.reshape(R, 1), colw_r.reshape(R, 1),
+                   dhot_r.reshape(R, 1),
+                   env2, bb2.asym, bb2.slope, betam2, est)
+        return out
 
-    fn = _shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(pspec, pspec, P(None, axes, None), P(None, axes, None),
-                  P(axes, None, None, None),
-                  pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                  pspec, pspec, P()),
-        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                   pspec, P(), P(), P(None, axes), P(None, axes),
-                   P(None, axes), P(None, axes), P(None, axes)),
-    )
-    (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
-     frac, fb, hyst_r, colw_r, dhot_r) = fn(
-        state.tau_elap, state.n_cis, feeds.ids, feeds.counts, bst.env_planes,
-        bst.bounds, bst.slope, bst.blk_max, bst.last_eval, bst.beta_max,
-        bst.cis_mass, bst.thresh, bst.hyst, bst.col_winners, bst.depth_hot,
-        state.crawl_clock,
-    )
-    new_bst = bst._replace(thresh=thresh, frac_active=frac[-1],
-                           fell_back=fb[-1], blk_max=blkmax,
-                           last_eval=last_ev, cis_mass=cmass, hyst=hyst,
-                           col_winners=colw, depth_hot=dhot)
+    base_in = (pspec, pspec, P(None, axes, None), P(None, axes, None),
+               P(axes, None, None, None),
+               pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+               pspec, pspec, P())
+    base_out = (pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                pspec, P(), P(), P(None, axes), P(None, axes),
+                P(None, axes), P(None, axes), P(None, axes))
+    base_args = (state.tau_elap, state.n_cis, feeds.ids, feeds.counts,
+                 bst.env_planes, bst.bounds, bst.slope, bst.blk_max,
+                 bst.last_eval, bst.beta_max, bst.cis_mass, bst.thresh,
+                 bst.hyst, bst.col_winners, bst.depth_hot, state.crawl_clock)
+    if est_on:
+        est_spec = jax.tree.map(lambda _: pspec, bst.est)
+        fn = _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=base_in + (P(None, axes, None), P(None, axes, None),
+                                P(None, axes, None), P(None, axes, None),
+                                est_spec),
+            out_specs=base_out + (P(axes, None, None, None), pspec, pspec,
+                                  pspec, est_spec),
+        )
+        (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
+         frac, fb, hyst_r, colw_r, dhot_r, env_planes, asym, slope, betam,
+         est) = fn(*base_args, outcomes.ids, outcomes.changed,
+                   outcomes.tau, outcomes.n_cis, bst.est)
+        new_bst = bst._replace(
+            thresh=thresh, frac_active=frac[-1], fell_back=fb[-1],
+            blk_max=blkmax, last_eval=last_ev, cis_mass=cmass, hyst=hyst,
+            col_winners=colw, depth_hot=dhot, env_planes=env_planes,
+            bounds=asym, slope=slope, beta_max=betam, est=est)
+    else:
+        fn = _shard_map(shard_fn, mesh=mesh, in_specs=base_in,
+                        out_specs=base_out)
+        (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
+         frac, fb, hyst_r, colw_r, dhot_r) = fn(*base_args)
+        new_bst = bst._replace(thresh=thresh, frac_active=frac[-1],
+                               fell_back=fb[-1], blk_max=blkmax,
+                               last_eval=last_ev, cis_mass=cmass, hyst=hyst,
+                               col_winners=colw, depth_hot=dhot)
     new_state = RoundState(
         tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + R,
         backend=new_bst,

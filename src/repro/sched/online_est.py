@@ -1,0 +1,170 @@
+"""Streaming on-device change-rate estimation — the in-scan learning loop.
+
+The batch estimation path (`CrawlScheduler.ingest_crawl_results` ->
+`core.estimation.fit_mle_pages` -> `update_pages`) is a host round trip: crawl
+outcomes leave the device, a full MLE runs over retained logs, and the refresh
+ships back. This module closes the loop *inside* the macro-round scan
+(`sched.backends._fused_macro_rounds`), in the online-estimation spirit of
+Avrachenkov–Patil–Thoppe ("Online Algorithms for Estimating Change Rates of
+Web Pages") but with the closed-form conditional-moment estimator of
+`core.estimation` (`StreamStats`) and the source paper's App. E mapping:
+
+  * Per-page streaming-estimator planes (`estimation.StreamStats`) appended
+    to `FusedState` (`FusedBackend(online_est=True)`): device-resident,
+    sharded alongside the pages, checkpointed by field name like every other
+    `FusedState` plane.
+
+  * Per round, `ingest_outcomes` folds that round's slice of the crawl
+    OUTCOME batch (`CrawlScheduler.run_rounds(feeds, outcomes=...)` ->
+    `SparseOutcomes`) into the statistics — O(cap) gathers + scatters, zero
+    host transfers inside the scan.
+
+  * Once per macro batch, `apply_estimates` re-derives the packed env planes
+    for the touched pages ON DEVICE: `stream_quality` -> App. E `Env`
+    mapping -> `core.values.derive` -> `layout.repack_pages`, then refreshes
+    every env-dependent bound row of the touched blocks with exactly the
+    semantics of `tiered.refresh_block_params` (asym/slope recomputed, anchor
+    dropped, CIS-mass rows reset). The estimate -> policy loop never leaves
+    the device.
+
+Outcome observations are SELF-CONTAINED: each `SparseOutcomes` row carries
+the freshness bit AND the covariates of the crawl it resolves — the interval
+length tau and CIS count n_cis the scheduler selected on. The caller already
+owns both (the crawl-order stream run_rounds returns dates every crawl, and
+the caller is the source of the CIS feed stream), so echoing them costs no
+new device reads — and it makes pairing trivial and exact. The alternative
+(latching covariates on device at selection, joining by page id when the
+outcome returns) silently MISPAIRS whenever a page is re-crawled while its
+outcome is in flight — routine under macro batching, where outcomes for
+batch j can enter no earlier than batch j+1 — and that mispairing
+decorrelates the freshness bit from n_cis, destroying the CIS-precision
+estimate for exactly the hot pages that dominate the crawl budget.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimation
+from repro.core.values import Env, derive
+from repro.kernels import layout
+from repro.sched import tiered
+
+# Estimated delta is floored before repacking: the packed V_INF plane is
+# mu_t / delta, so a transient near-zero delta estimate would explode a
+# block's asymptote bound (costing skip efficiency, never exactness).
+# Matches the floor of `sim.instances.uniform_instance` within a decade.
+DELTA_FLOOR = 1e-4
+
+
+class SparseOutcomes(NamedTuple):
+    """A crawl-outcome batch in the same per-shard COO form as
+    `backends.SparseFeeds`: for round r and shard s, the self-contained
+    crawl observations arriving that round — global page id, whether the
+    crawl found a change, and the covariates of the crawled window (tau,
+    n_cis — see module docstring). Padded to a static `cap` with id = -1 /
+    tau = -1 rows (dropped); ids must be unique within a (round, shard)
+    cell. Built host-locally by `CrawlScheduler._sparse_outcome_batch`
+    under the `outcome_cap` capacity contract, spec P(None, axes, None)."""
+
+    ids: jax.Array      # (R, n_shards, cap) i32 global page ids, -1 pad
+    changed: jax.Array  # (R, n_shards, cap) i32 1 = crawl found a change
+    tau: jax.Array      # (R, n_shards, cap) f32 crawled interval, -1 pad
+    n_cis: jax.Array    # (R, n_shards, cap) i32 CIS count of the interval
+
+
+def init_est(m_state: int) -> estimation.StreamStats:
+    """Fresh (all-zero) streaming-estimator planes, (m_state,) each. The
+    estimation prior enters at read time
+    (`apply_estimates(prior_a, prior_b, prior_w)`), not here — zero
+    statistics under shrinkage ARE the prior."""
+    return estimation.stream_init((m_state,))
+
+
+def ingest_outcomes(stats: estimation.StreamStats, oidx: jax.Array,
+                    changed: jax.Array, tau: jax.Array,
+                    n_cis: jax.Array) -> estimation.StreamStats:
+    """Fold one round's outcome slice into the streaming statistics.
+
+    oidx: (cap,) shard-LOCAL page indices with the out-of-bounds sentinel
+    for padding / other shards' rows; changed: (cap,) 0/1; tau/n_cis:
+    (cap,) the crawled window's covariates (tau < 0 = padding row). O(cap)
+    gathers + scatters; a page id may appear at most once per call (COO
+    cells are id-unique per round).
+    """
+    m_local = stats.n_obs.shape[0]
+    tau = jnp.asarray(tau, jnp.float32)
+    live = (oidx >= 0) & (oidx < m_local) & (tau >= 0.0)
+    idx = jnp.where(live, oidx, m_local)
+    row = estimation.StreamStats(
+        *(p.at[oidx].get(mode="clip") for p in stats))
+    z = 1.0 - jnp.clip(changed.astype(jnp.float32), 0.0, 1.0)
+    upd = estimation.stream_update(row, jnp.maximum(tau, 0.0),
+                                   n_cis.astype(jnp.float32), z)
+    return estimation.StreamStats(
+        *(p.at[idx].set(u, mode="drop") for p, u in zip(stats, upd)))
+
+
+def apply_estimates(stats: estimation.StreamStats, env_shard: jax.Array,
+                    touched: jax.Array, bb: tiered.BlockBounds,
+                    beta_max: jax.Array, cis_mass: jax.Array, *,
+                    min_obs: float, prior_a: float = 0.0,
+                    prior_b: float = 0.0, prior_w: float = 0.0):
+    """Device-side estimate -> policy refresh for one shard, once per macro
+    batch: repack the packed env planes of the touched pages from their
+    current streaming estimates and refresh every env-dependent bound row of
+    the touched blocks (mirroring `tiered.refresh_block_params` +
+    `FusedBackend.update_pages` exactly: asym/slope/beta_max recomputed,
+    anchor dropped to the never-evaluated sentinel, CIS mass reset — the
+    touched blocks re-evaluate exactly next round).
+
+    touched: (T,) shard-LOCAL page ids with the out-of-bounds sentinel
+    (duplicates fine — every duplicate writes the same derived row). Pages
+    with fewer than `min_obs` resolved observations keep their current
+    packed parameters (the never/rarely-crawled page holds its prior);
+    prior_a/prior_b/prior_w shrink small-sample estimates toward the prior
+    (`estimation.stream_quality` — the closed-loop explore/exploit guard).
+    Returns (env_planes, BlockBounds, beta_max, cis_mass).
+
+    Cost: O(T) for the repack + one O(m_local) pass for the block-row
+    reductions — per macro batch, not per round, so amortized over R rounds
+    it is a fraction of one selection pass.
+    """
+    m_local = stats.n_obs.shape[0]
+    nb, _, block_rows, lanes = env_shard.shape
+    bp = block_rows * lanes
+    n_obs = stats.n_obs.at[touched].get(mode="fill", fill_value=0.0)
+    ok = (touched >= 0) & (touched < m_local) & (n_obs >= min_obs)
+    ids = jnp.where(ok, touched, m_local)
+    row = estimation.StreamStats(
+        *(p.at[touched].get(mode="clip") for p in stats))
+    q = estimation.stream_quality(row, prior_a=prior_a, prior_b=prior_b,
+                                  prior_w=prior_w)
+    # App. E mapping (quality_to_env) on device; importance is not estimated
+    # here — each page keeps its packed normalized mu_t, so the repack needs
+    # no global renormalization (mu_total folds to 1 on the packed plane).
+    mu_t = layout.gather_plane(env_shard, jnp.minimum(touched, m_local - 1),
+                               layout.MU_T)
+    env_rows = Env(
+        delta=jnp.maximum(q.delta, DELTA_FLOOR),
+        mu=mu_t,
+        lam=jnp.clip(q.recall, 0.0, 1.0),
+        nu=jnp.maximum(q.gamma * (1.0 - q.precision), 0.0),
+    )
+    d_rows = derive(env_rows, mu_total=1.0)
+    env2 = layout.repack_pages(env_shard, ids, d_rows)
+    blk = jnp.zeros((nb,), bool).at[ids // bp].set(True, mode="drop")
+    # Full block-row reductions merged under the touched mask: at macro-batch
+    # cadence one O(m_local) pass beats gathering whole blocks per id.
+    bb2 = tiered.BlockBounds(
+        asym=jnp.where(blk, layout.asym_block_bounds(env2), bb.asym),
+        slope=jnp.where(blk, tiered._block_slope(layout.block_mu_max(env2)),
+                        bb.slope),
+        blk_max=jnp.where(blk, 0.0, bb.blk_max),
+        last_eval=jnp.where(blk, jnp.int32(-1), bb.last_eval),
+    )
+    beta2 = jnp.where(blk, layout.block_beta_max(env2), beta_max)
+    mass2 = jnp.where(blk, 0.0, cis_mass)
+    return env2, bb2, beta2, mass2

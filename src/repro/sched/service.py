@@ -100,6 +100,7 @@ class CrawlScheduler:
         backend: be.SelectionBackend | None = None,
         feed_cap: int | None = None,
         update_cap: int | None = None,
+        outcome_cap: int | None = None,
     ):
         if backend is None:
             if use_kernel or use_fused:
@@ -124,8 +125,18 @@ class CrawlScheduler:
         # re-jit — on any host. None = derive a pow2 bucket per batch
         # (single-process convenience; multi-process meshes require
         # explicit caps, since all hosts must agree on the static shapes).
+        # outcome_cap plays the same role for the crawl-outcome batches of
+        # the streaming-estimation loop (`run_rounds(feeds, outcomes=...)`).
         self.feed_cap = feed_cap
         self.update_cap = update_cap
+        self.outcome_cap = outcome_cap
+        # Host-side mirror of the device round counter
+        # (`RoundState.crawl_clock`), maintained without any device sync so
+        # drivers can date crawls (e.g. to reconstruct per-crawl interval
+        # lengths for the streaming-estimation outcome echo): a
+        # `run_rounds` batch covers rounds [rounds_completed,
+        # rounds_completed + R) as counted BEFORE the call.
+        self.rounds_completed = 0
         self.round, binit = be.init_round(backend, env, mesh)
         self.m_state = binit.m_state
         # Process-local shard/page range (the `host_slice` view): on a
@@ -154,6 +165,7 @@ class CrawlScheduler:
         backend: be.SelectionBackend | None = None,
         feed_cap: int | None = None,
         update_cap: int | None = None,
+        outcome_cap: int | None = None,
     ) -> "CrawlScheduler":
         """Host-local construction (the elastic-lifecycle cold start): each
         process supplies ONLY its `host_slice` of the raw env — the raw
@@ -189,6 +201,8 @@ class CrawlScheduler:
         self.m = int(m)
         self.feed_cap = feed_cap
         self.update_cap = update_cap
+        self.outcome_cap = outcome_cap
+        self.rounds_completed = 0
         self._host_shards = host_shard_range(mesh)
         block_rows = backend.block_rows or layout.DEFAULT_BLOCK_ROWS
         m_state = layout.padded_size(m, block_rows, n_shards=mesh.size)
@@ -363,6 +377,7 @@ class CrawlScheduler:
             self.backend, self.round, new_cis,
             mesh=self.mesh, k=self.k_per_round, dt=self.round_period,
         )
+        self.rounds_completed += 1
         self._maybe_adapt_cand_depth()
         return page_ids, values
 
@@ -518,7 +533,103 @@ class CrawlScheduler:
         self._sparse_feed_cache = (feeds, self.feed_cap, sf)
         return sf
 
-    def run_rounds(self, feeds):
+    def _empty_outcome_batch(self, n_rounds: int):
+        """An all-padding SparseOutcomes batch (no outcomes arrived this
+        macro-round) at the contract cap, so `online_est=True` drivers that
+        have nothing to report keep one compiled macro-round signature."""
+        from repro.sched.online_est import SparseOutcomes
+
+        cap = self.outcome_cap or 1
+        s0, s1 = self._host_shards
+        ids = np.full((n_rounds, s1 - s0, cap), -1, np.int32)
+        spec = P(None, self.axes, None)
+        return SparseOutcomes(
+            ids=host_local_array(ids, self.mesh, spec),
+            changed=host_local_array(np.zeros_like(ids), self.mesh, spec),
+            tau=host_local_array(np.full(ids.shape, -1.0, np.float32),
+                                 self.mesh, spec),
+            n_cis=host_local_array(np.zeros_like(ids), self.mesh, spec))
+
+    def _sparse_outcome_batch(self, out_ids, out_changed, out_tau, out_n,
+                              n_rounds: int):
+        """Convert a crawl-outcome batch to the per-SHARD COO form the
+        streaming-estimation scan consumes (`online_est.SparseOutcomes`,
+        (R, n_shards, cap)) — the outcome-side twin of `_sparse_feed_batch`,
+        under the `outcome_cap` capacity contract.
+
+        out_ids/out_changed/out_tau/out_n: (R, w) host arrays — for
+        macro-round r, the global page ids whose crawl outcome arrives
+        before round r runs, whether that crawl found a change, and the
+        covariates of the crawled window (interval length tau and CIS count
+        — the caller echoes them from its own crawl-order and feed streams,
+        see `online_est.SparseOutcomes`); id = -1 rows are padding (a
+        scheduler's own `run_rounds` winner output, with unresolved slots
+        set to -1, is the natural input). Rows outside this host's
+        `host_slice` are dropped host-locally, so outcome bytes never cross
+        hosts."""
+        ids_np = np.asarray(out_ids)
+        chg_np = np.asarray(out_changed)
+        tau_np = np.asarray(out_tau, np.float32)
+        n_np = np.asarray(out_n)
+        if (ids_np.shape != chg_np.shape or tau_np.shape != ids_np.shape
+                or n_np.shape != ids_np.shape or ids_np.ndim != 2):
+            raise FeedValidationError(
+                f"outcome batch must be matching (n_rounds, w) arrays, got "
+                f"ids {ids_np.shape} / changed {chg_np.shape} / tau "
+                f"{tau_np.shape} / n_cis {n_np.shape}"
+            )
+        if not jnp.issubdtype(n_np.dtype, jnp.integer):
+            raise FeedDtypeError(
+                f"outcome CIS counts must be integers, got {n_np.dtype}")
+        if ids_np.shape[0] != n_rounds:
+            raise FeedValidationError(
+                f"outcome batch has {ids_np.shape[0]} rounds but the feed "
+                f"batch has {n_rounds}; supply one outcome row per round "
+                "(all-padding rows for rounds without outcomes)"
+            )
+        if not jnp.issubdtype(ids_np.dtype, jnp.integer):
+            raise FeedDtypeError(
+                f"outcome page ids must be integers, got {ids_np.dtype}")
+        if ids_np.size and ids_np.max() >= self.m:
+            raise FeedValidationError(
+                f"outcome page ids must be in [-1, {self.m}); got "
+                f"max {ids_np.max()}"
+            )
+        lo, hi = self.host_slice.start, self.host_slice.stop
+        ms = self.m_shard
+        s0, s1 = self._host_shards
+        n_loc = s1 - s0
+        rr, ww = np.nonzero((ids_np >= lo) & (ids_np < hi))
+        gid = ids_np[rr, ww].astype(np.int64)
+        ss = (gid - lo) // ms
+        cell = rr * n_loc + ss
+        counts = np.bincount(cell, minlength=n_rounds * n_loc)
+        need = int(counts.max()) if gid.size else 0
+        cap = self._resolve_cap(need, self.outcome_cap, "outcome_cap",
+                                "an outcome round resolves {need} crawls "
+                                "on one shard")
+        out_i = np.full((n_rounds, n_loc, cap), -1, np.int32)
+        out_c = np.zeros((n_rounds, n_loc, cap), np.int32)
+        out_t = np.full((n_rounds, n_loc, cap), -1.0, np.float32)
+        out_n = np.zeros((n_rounds, n_loc, cap), np.int32)
+        if gid.size:
+            order = np.argsort(cell, kind="stable")
+            col = np.concatenate([np.arange(c) for c in counts])
+            out_i[rr[order], ss[order], col] = gid[order]
+            out_c[rr[order], ss[order], col] = (
+                chg_np[rr, ww][order] != 0).astype(np.int32)
+            out_t[rr[order], ss[order], col] = tau_np[rr, ww][order]
+            out_n[rr[order], ss[order], col] = n_np[rr, ww][order]
+        from repro.sched.online_est import SparseOutcomes
+
+        spec = P(None, self.axes, None)
+        return SparseOutcomes(
+            ids=host_local_array(out_i, self.mesh, spec),
+            changed=host_local_array(out_c, self.mesh, spec),
+            tau=host_local_array(out_t, self.mesh, spec),
+            n_cis=host_local_array(out_n, self.mesh, spec))
+
+    def run_rounds(self, feeds, outcomes=None):
         """A macro-round: R = len(feeds) rounds under one jitted `lax.scan`
         (`backends.crawl_rounds`) — one dispatch, no mid-loop host sync, and
         for the fused backend O(active + k) instead of O(m) state work per
@@ -533,17 +644,60 @@ class CrawlScheduler:
         avoid re-jits. For the fused backend the dense batch never reaches
         the device: it converts once host-side to the COO `SparseFeeds`
         form (CIS feeds are overwhelmingly sparse in production), so feed
-        ingest inside the scan is O(nnz) per round."""
+        ingest inside the scan is O(nnz) per round.
+
+        outcomes (streaming estimation, `FusedBackend(online_est=True)`):
+        an optional `(page_ids (R, w), changed (R, w), tau (R, w),
+        n_cis (R, w))` tuple of host arrays — for round r, the pages whose
+        crawl OUTCOME arrives before round r runs, whether the crawl found
+        a change (-1 ids = padding), and the crawled window's covariates
+        (interval length and CIS count), which the caller echoes from its
+        own crawl-order and feed streams so each observation is
+        self-contained and pairing is exact even for pages re-crawled
+        while their outcome was in flight (`online_est.SparseOutcomes`).
+        Converted host-locally to `online_est.SparseOutcomes` under the
+        `outcome_cap` contract and consumed inside the scan
+        (`online_est.ingest_outcomes`): each resolved outcome takes one
+        streaming estimator step on device, and at the macro-round boundary
+        the touched pages' packed env planes re-derive from the updated
+        estimates — zero per-round host transfers. With `online_est=True`
+        and no outcomes, an all-padding batch keeps the compiled signature
+        stable; passing outcomes to a non-estimating backend raises."""
+        est_on = (isinstance(self.backend, be.FusedBackend)
+                  and self.backend.online_est)
+        if outcomes is not None and not est_on:
+            raise FeedValidationError(
+                "run_rounds(outcomes=...) requires "
+                "FusedBackend(online_est=True): the non-estimating macro "
+                "round has no streaming-estimator planes to ingest into"
+            )
         if isinstance(self.backend, be.FusedBackend):
+            n_rounds = int(feeds.shape[0]) if hasattr(feeds, "shape") else (
+                len(feeds))
             feeds = self._sparse_feed_batch(feeds)
+            if est_on:
+                if outcomes is None:
+                    outcomes = self._empty_outcome_batch(n_rounds)
+                else:
+                    if len(outcomes) != 4:
+                        raise FeedValidationError(
+                            "outcomes must be a (page_ids, changed, tau, "
+                            "n_cis) tuple of (n_rounds, w) host arrays — "
+                            f"got {len(outcomes)} elements"
+                        )
+                    outcomes = self._sparse_outcome_batch(
+                        outcomes[0], outcomes[1], outcomes[2], outcomes[3],
+                        n_rounds)
         else:
             feeds = self._pad_feeds(feeds)
         self._ensure_cand_coverage()
         self.round, (page_ids, values), diag = be.crawl_rounds(
             self.backend, self.round, feeds,
             mesh=self.mesh, k=self.k_per_round, dt=self.round_period,
+            outcomes=outcomes,
         )
         self.macro_diagnostics = diag
+        self.rounds_completed += int(page_ids.shape[0])
         self._maybe_adapt_cand_depth(rounds=page_ids.shape[0])
         return page_ids, values
 
@@ -868,9 +1022,7 @@ class CrawlScheduler:
             return self.d.mu_t[ids]
         bp = b.env_planes.shape[2] * b.env_planes.shape[3]
         if not self.is_multiprocess:
-            return b.env_planes[ids // bp, layout.MU_T,
-                                (ids % bp) // layout.LANES,
-                                ids % layout.LANES]
+            return layout.gather_plane(b.env_planes, ids, layout.MU_T)
         # Per-addressable-shard gather: each id lives in a block whose
         # plane shard is local to this host (the host_slice contract).
         ids_np = np.asarray(ids)
@@ -946,3 +1098,4 @@ class CrawlScheduler:
             crawl_clock=own(sd["crawl_clock"]),
             backend=backend_state,
         )
+        self.rounds_completed = int(np.asarray(sd["crawl_clock"]))

@@ -1,8 +1,17 @@
 """Semi-synthetic crawling experiment substrate (paper Section 6)."""
+from repro.sim.driver import (
+    LoopConfig,
+    LoopResult,
+    freshness_regret,
+    run_closed_loop,
+)
 from repro.sim.instances import (
+    TIER_NAMES,
+    TieredCISInstance,
     corrupt_precision_recall,
     env_from_precision_recall,
     realworld_instance,
+    tiered_cis_instance,
     uniform_instance,
 )
 from repro.sim.simulator import DelayConfig, SimConfig, SimResult, simulate

@@ -41,6 +41,50 @@ def uniform_instance(
     return Env(delta=delta, mu=mu, lam=lam, nu=nu)
 
 
+class TieredCISInstance(NamedTuple):
+    env: Env
+    tier: jax.Array  # (m,) int32 tier id, len(TIER_NAMES) tiers
+
+
+TIER_NAMES = ("reliable", "noisy", "silent")
+
+
+def tiered_cis_instance(
+    key: jax.Array,
+    m: int,
+    fracs=(0.3, 0.5, 0.2),
+    delta_range=(0.05, 1.0),
+    mu_range=(0.1, 1.0),
+) -> TieredCISInstance:
+    """Per-page heterogeneous CIS-quality regimes (the estimation-fairness
+    instance): pages fall into signal-quality tiers with very different
+    (lam, nu) — "reliable" (high recall, few false signals), "noisy" (weak
+    recall, false-positive-heavy), "silent" (no CIS channel at all) — while
+    Delta and mu vary independently of tier. An estimator bench on this
+    instance exercises convergence across quality tiers at once: a scheduler
+    that learns only the easy tier shows up as per-tier regret skew, not
+    just an aggregate number. Tier ids index `TIER_NAMES`."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    delta = jax.random.uniform(k1, (m,), minval=delta_range[0],
+                               maxval=delta_range[1])
+    mu = jax.random.uniform(k2, (m,), minval=mu_range[0], maxval=mu_range[1])
+    edges = jnp.cumsum(jnp.asarray(fracs[:-1], jnp.float32))
+    tier = jnp.searchsorted(edges, jax.random.uniform(k3, (m,)))
+    lam_t = jnp.stack([
+        jax.random.uniform(k4, (m,), minval=0.8, maxval=1.0),   # reliable
+        jax.random.uniform(k4, (m,), minval=0.2, maxval=0.6),   # noisy
+        jnp.zeros((m,)),                                        # silent
+    ])
+    nu_t = jnp.stack([
+        jax.random.uniform(k5, (m,), minval=0.0, maxval=0.05),
+        jax.random.uniform(k5, (m,), minval=0.3, maxval=0.8),
+        jnp.zeros((m,)),
+    ])
+    rows = jnp.arange(m)
+    env = Env(delta=delta, mu=mu, lam=lam_t[tier, rows], nu=nu_t[tier, rows])
+    return TieredCISInstance(env=env, tier=tier.astype(jnp.int32))
+
+
 def env_from_precision_recall(
     delta: jax.Array, mu: jax.Array, precision: jax.Array, recall: jax.Array
 ) -> Env:

@@ -493,3 +493,209 @@ def test_kill_and_restore_two_process(tmp_path):
         os.path.join(tmpdir, "ck", "step_000000001", "manifest.json"))
     run_distributed(_RECOVERY_PHASE_B, n_procs=2, devices_per_proc=2,
                     timeout=900, token="RESTORE_OK", tmpdir=tmpdir)
+
+
+# ---------------------------------------------------------------------------
+# Topology resharding: restore an N-proc sharded-v1 checkpoint elsewhere.
+# ---------------------------------------------------------------------------
+
+def _fabricate_n_proc_step(src_step: str, dst_step: str, n_procs: int):
+    """Rewrite a single-process sharded-v1 step as if saved by `n_procs`
+    processes: every leaf whose leading axis divides evenly is split into
+    contiguous slabs with recorded global offsets (exactly what
+    `ckpt._local_slab` records on a real fleet); everything else is
+    carried replicated (offsets None) in every shard file. Bit-identical
+    data, different recorded topology — the pure resharding stimulus."""
+    import zlib
+
+    with open(os.path.join(src_step, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "sharded-v1"
+    assert manifest["topology"]["n_procs"] == 1
+    arrays = np.load(os.path.join(src_step, "shard_0.npz"))
+    arrays = [arrays[f"a{i}"] for i in range(len(manifest["paths"]))]
+    os.makedirs(dst_step, exist_ok=True)
+    shards_meta = {}
+    n_split = 0
+    for p in range(n_procs):
+        stored, crcs, offsets, shapes = [], [], [], []
+        for a in arrays:
+            if a.ndim >= 1 and a.shape[0] >= n_procs \
+                    and a.shape[0] % n_procs == 0:
+                h = a.shape[0] // n_procs
+                piece = np.ascontiguousarray(a[p * h:(p + 1) * h])
+                off = [p * h] + [0] * (a.ndim - 1)
+                n_split += 1
+            else:
+                piece, off = a, None
+            stored.append(piece)
+            crcs.append(zlib.crc32(piece.tobytes()))
+            offsets.append(off)
+            shapes.append(list(piece.shape))
+        np.savez(os.path.join(dst_step, f"shard_{p}.npz"),
+                 **{f"a{i}": a for i, a in enumerate(stored)})
+        shards_meta[str(p)] = {"proc": p, "crcs": crcs, "offsets": offsets,
+                               "local_shapes": shapes}
+    assert n_split > 0, "fabricated checkpoint split no leaf (no stimulus)"
+    manifest["topology"] = {"n_procs": n_procs, "n_devices": n_procs}
+    manifest["shards"] = shards_meta
+    with open(os.path.join(dst_step, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def test_reshard_restore_two_proc_checkpoint_on_one_proc(tmp_path):
+    """A sharded-v1 checkpoint recorded by a 2-process fleet restores on a
+    single process by re-slicing the shard files along their recorded
+    global offsets — and the continued selection is bit-identical to a
+    same-topology restore of the same state."""
+    m = 3000
+    env, s = _fused(m)
+    feeds = strategies.build_feed_batch(m, 3, "sparse", np.int32, seed=21)
+    s.run_rounds(feeds)
+    d1 = str(tmp_path / "ck1")
+    ckpt.save(d1, 1, s.state_dict(), sharded=True)
+    step1 = os.path.join(d1, "step_000000001")
+    d2 = str(tmp_path / "ck2")
+    _fabricate_n_proc_step(step1, os.path.join(d2, "step_000000001"), 2)
+
+    def mk():
+        return CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                              backend=be.FusedBackend(block_rows=8),
+                              feed_cap=256)
+
+    s2 = mk()
+    restored, step, _ = ckpt.restore_latest(d2, s2.state_dict())
+    assert step == 1
+    s2.load_state_dict(restored)
+    for p, (a, b) in enumerate(zip(jax.tree.flatten(s.round)[0],
+                                   jax.tree.flatten(s2.round)[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"round leaf {p}")
+    nxt = strategies.build_feed_batch(m, 3, "sparse", np.int32, seed=22)
+    ia, va = s.run_rounds(nxt)
+    ib, vb = s2.run_rounds(nxt)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_reshard_detects_slab_coverage_gap(tmp_path):
+    """Resharding is offsets-driven, so damaged offsets must fail LOUDLY:
+    a recorded slab layout that no longer tiles the global shape raises
+    `CheckpointCorruptError` (never a silently half-initialized leaf)."""
+    m = 3000
+    env, s = _fused(m)
+    d1 = str(tmp_path / "ck1")
+    ckpt.save(d1, 1, s.state_dict(), sharded=True)
+    d2 = str(tmp_path / "ck2")
+    step2 = os.path.join(d2, "step_000000001")
+    _fabricate_n_proc_step(os.path.join(d1, "step_000000001"), step2, 2)
+    with open(os.path.join(step2, "manifest.json")) as f:
+        manifest = json.load(f)
+    # Shift every split slab of shard 1 past its true start: a coverage
+    # gap opens between the halves of each split leaf.
+    smeta = manifest["shards"]["1"]
+    bad = False
+    for i, off in enumerate(smeta["offsets"]):
+        if off is not None and off[0] > 0:
+            off[0] += 1
+            bad = True
+    assert bad
+    with open(os.path.join(step2, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    s2 = CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                        backend=be.FusedBackend(block_rows=8), feed_cap=256)
+    with pytest.raises(CheckpointCorruptError, match="tile"):
+        ckpt.restore(d2, 1, s2.state_dict())
+
+
+# Genuine cross-topology acceptance: a real 2-process fleet writes the
+# checkpoint + the reference continuation, then ONE process with the same
+# 4-device mesh restores it through the resharding path and must continue
+# bit-identically. Env/feeds derive from integer hashes of the global page
+# index over each host's local range (no process holds global data).
+_RESHARD_SETUP = """
+import os
+import numpy as np
+import jax.numpy as jnp
+from repro.core import Env
+from repro.sched import backends as be
+from repro.sched.service import CrawlScheduler
+from repro.checkpoint import store as ckpt
+
+mesh = jax.make_mesh((4,), ("data",))
+m, k, R, dt = 16384, 256, 4, 0.05
+n_procs = jax.process_count()
+lo = jax.process_index() * m // n_procs
+hi = (jax.process_index() + 1) * m // n_procs
+
+def local_env(lo, hi):
+    idx = np.arange(lo, hi, dtype=np.int64)
+    return Env(
+        delta=jnp.asarray(0.5 + ((idx * 2654435761) % 1000)
+                          .astype(np.float32) / 500.0),
+        mu=jnp.asarray(1.0 + ((idx * 40503) % 997)
+                       .astype(np.float32) / 10.0),
+        lam=jnp.asarray(0.1 + ((idx * 69069) % 91)
+                        .astype(np.float32) / 100.0),
+        nu=jnp.asarray(0.05 + ((idx * 12345) % 37)
+                       .astype(np.float32) / 200.0),
+    )
+
+def feed(b):
+    idx = np.arange(lo, hi, dtype=np.int64)
+    f = np.zeros((R, hi - lo), np.int32)
+    for r in range(R):
+        h = (idx * 2654435761 + 97 * r + 131 * b) % 701
+        sel = h < 2
+        f[r, sel] = (1 + (idx[sel] % 7)).astype(np.int32)
+    return f
+
+def make_sched():
+    return CrawlScheduler.from_local_env(
+        local_env(lo, hi), mesh, float(k) / dt, m=m, round_period=dt,
+        backend=be.FusedBackend(block_rows=8, adaptive_bounds=True),
+        feed_cap=64)
+"""
+
+_RESHARD_SAVE = _RESHARD_SETUP + """
+s = make_sched()
+s.run_rounds(feed(1))
+ckpt.save(os.path.join(tmpdir, "ck"), 1, s.state_dict())
+ids2, vals2 = s.run_rounds(feed(2))
+if jax.process_index() == 0:
+    np.savez(os.path.join(tmpdir, "reshard_ref.npz"),
+             ids2=np.asarray(ids2), vals2=np.asarray(vals2))
+print("SAVED_2PROC", flush=True)
+"""
+
+_RESHARD_RESTORE = _RESHARD_SETUP + """
+assert jax.process_count() == 1 and len(jax.devices()) == 4
+s = make_sched()
+restored, step, extra = ckpt.restore_latest(os.path.join(tmpdir, "ck"),
+                                            s.state_dict())
+assert step == 1, step
+s.load_state_dict(restored)
+ref = np.load(os.path.join(tmpdir, "reshard_ref.npz"))
+ids2, vals2 = s.run_rounds(feed(2))
+np.testing.assert_array_equal(np.asarray(ids2), ref["ids2"])
+np.testing.assert_array_equal(np.asarray(vals2), ref["vals2"])
+print("RESHARD_OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_reshard_genuine_two_proc_to_one_proc(tmp_path):
+    """Save on a genuine 2-process `jax.distributed` fleet, restore on ONE
+    process with the same 4-shard mesh (elastic shrink / post-mortem), and
+    prove the continued macro-round selection is bit-identical to the
+    uninterrupted fleet's."""
+    from mesh_harness import run_forced_shards
+
+    tmpdir = str(tmp_path)
+    run_distributed(_RESHARD_SAVE, n_procs=2, devices_per_proc=2,
+                    timeout=900, token="SAVED_2PROC", tmpdir=tmpdir)
+    mpath = os.path.join(tmpdir, "ck", "step_000000001", "manifest.json")
+    with open(mpath) as f:
+        assert json.load(f)["topology"]["n_procs"] == 2
+    run_forced_shards(_RESHARD_RESTORE, n_devices=4, timeout=900,
+                      token="RESHARD_OK", tmpdir=tmpdir)
