@@ -78,6 +78,7 @@ def kernel_bench():
     macro_round_bench()
     ckpt_roundtrip_bench()
     online_est_bench()
+    elastic_bandwidth_bench()
 
 
 def refresh_repack_bench():
@@ -474,6 +475,123 @@ def macro_round_bench():
          f"m={m};k={k};dt={dt};feed_nnz_per_round=8;"
          f"frac_active_mass={f_mass:.3f};frac_active_remark={f_remark:.3f};"
          f"extra_skip={f_remark - f_mass:.3f};selection_exact=1")
+
+
+def elastic_bandwidth_bench():
+    """Elastic bandwidth (`sched/elastic_bandwidth`): the k_max cap
+    contract end to end — per-round budgets and the token-bucket rate as
+    traced operands of the compiled macro-round.
+
+    Three hard gates:
+      (1) no_rejit_on_bandwidth_change=1 — after warm-up, a 4-point
+          `set_bandwidth` sweep (and a budget-vector sweep) leaves the
+          `crawl_rounds` jit cache flat: rate changes are pure data;
+      (2) window_spike_free=1 — under emission="smooth" at a fractional
+          rate, realized crawls over EVERY window of W rounds stay within
+          +-1 of rate * W, for all W in {4, 16, 64};
+      (3) overhead: dynamic-k rounds (budgets pinned at k, selection
+          bit-identical to fixed-k) cost <= 5% over the fixed-k scan on
+          identical feeds — the masking is where-ops on k-element
+          vectors, invisible next to the O(m) value pass."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.sched import backends as be
+    from repro.sched.service import CrawlScheduler
+
+    m = prof(1 << 18, 1 << 20)
+    k, R, dt = 256, 32, 1.0
+    mesh = jax.make_mesh((1,), ("data",))
+    env = uniform_instance(jax.random.PRNGKey(0), m)
+    order = jnp.argsort(-(env.mu / env.delta))
+    env = jax.tree.map(lambda x: x[order], env)
+    tau0 = jax.random.uniform(jax.random.PRNGKey(1), (m,), maxval=2.0)
+
+    def build(**kw):
+        s = CrawlScheduler(env, mesh, bandwidth=float(k) / dt,
+                           round_period=dt,
+                           backend=be.FusedBackend(adaptive_bounds=True),
+                           feed_cap=4096, **kw)
+        s.round = dataclasses.replace(s.round, tau_elap=jnp.copy(tau0))
+        return s
+
+    rng = np.random.default_rng(0)
+    feeds_np = np.zeros((R, m), np.int32)
+    for r in range(R):
+        idx = rng.choice(m, 64, replace=False)
+        feeds_np[r, idx] = rng.poisson(2.0, 64).astype(np.int32) + 1
+
+    # --- Gate (3) setup: fixed-k vs budgets-at-k, identical feeds --------
+    fixed, elastic = build(), build(k_max=k)
+    buds = np.full(R, k)
+    ids_f, vals_f = fixed.run_rounds(np.copy(feeds_np))
+    ids_e, vals_e = elastic.run_rounds(np.copy(feeds_np), budgets=buds)
+    # Correctness gate first: constant budgets == fixed-k, bit for bit.
+    assert np.array_equal(np.asarray(ids_f), np.asarray(ids_e)), \
+        "budgets pinned at k diverged from the fixed-k selection"
+    assert np.array_equal(np.asarray(vals_f), np.asarray(vals_e))
+    fixed.run_rounds(np.copy(feeds_np))          # donated-state signatures
+    elastic.run_rounds(np.copy(feeds_np), budgets=buds)
+    reps = prof(5, 7)
+    t_f, t_e = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _, v = elastic.run_rounds(np.copy(feeds_np), budgets=buds)
+        jax.block_until_ready(v)
+        t_e.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _, v = fixed.run_rounds(np.copy(feeds_np))
+        jax.block_until_ready(v)
+        t_f.append(time.perf_counter() - t0)
+    us_e = float(np.median(t_e)) / R * 1e6
+    us_f = float(np.median(t_f)) / R * 1e6
+    overhead = us_e / us_f - 1.0
+    assert overhead <= 0.05, (
+        f"dynamic-k budgets cost {overhead:.1%} over the fixed-k scan, "
+        "over the 5% budget")
+
+    # --- Gates (1) + (2): smooth emission, swept mid-flight --------------
+    smooth = build(k_max=k, emission="smooth")
+    rate0 = 0.4 * k + 0.5                        # fractional crawls/round
+    smooth.set_bandwidth(rate0 / dt)
+    smooth.run_rounds(np.copy(feeds_np))
+    smooth.run_rounds(np.copy(feeds_np))         # warm both signatures
+    c0 = be.crawl_rounds._cache_size()
+    counts = []
+    sweep = (rate0 / 2, rate0, rate0 * 2, float(k))
+    for bw in sweep:
+        smooth.set_bandwidth(bw / dt)
+        ids, _ = smooth.run_rounds(np.copy(feeds_np))
+        counts.append(np.asarray((np.asarray(ids) >= 0).sum(axis=1)))
+    no_rejit = int(be.crawl_rounds._cache_size() == c0)
+    assert no_rejit, (
+        "a set_bandwidth sweep re-jitted the macro-round despite the "
+        "k_max contract")
+    # Budget vectors are the same compiled entry: still no growth.
+    elastic.run_rounds(np.copy(feeds_np),
+                       budgets=rng.integers(0, k + 1, R))
+    assert be.crawl_rounds._cache_size() == c0, \
+        "a budget-vector batch re-jitted the macro-round"
+    max_dev = 0.0
+    for arr, bw in zip(counts, sweep):
+        for W in (4, 16, 64):
+            if arr.size < W:
+                continue
+            win = np.convolve(arr, np.ones(W, int), mode="valid")
+            max_dev = max(max_dev, float(np.abs(win - bw * W).max()))
+    spike_free = int(max_dev <= 1.0)
+    assert spike_free, (
+        f"token-bucket emission deviated by {max_dev} crawls over a "
+        "window (spike-free bound is 1)")
+
+    emit("sched/elastic_bandwidth", us_e,
+         f"m={m};k_max={k};R={R};pages_per_s={m/(us_e/1e6):.3e};"
+         f"overhead_vs_fixed_k={overhead:.3f};"
+         f"const_budget_bit_identical=1;"
+         f"no_rejit_on_bandwidth_change={no_rejit};"
+         f"window_spike_free={spike_free};max_window_dev={max_dev:.1f};"
+         f"sweep_rates={','.join(f'{b:g}' for b in sweep)}")
 
 
 def online_est_bench():

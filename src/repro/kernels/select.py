@@ -320,6 +320,7 @@ def fused_select_from(
     impl: str = "jnp",
     interpret: bool = True,
     dense_state: tuple[jax.Array, jax.Array] | None = None,
+    k_dyn: jax.Array | None = None,
 ) -> FusedSelection:
     """Un-jitted core over a per-block state fetch (safe inside shard_map,
     scan-invariant: shapes and branch structure are static, so the whole
@@ -329,6 +330,15 @@ def fused_select_from(
     for evaluated blocks (jnp impl). The Pallas impl streams dense state
     (`dense_state`, required) since a Pallas grid reads arrays, not
     callbacks.
+
+    k_dyn: optional traced int32 scalar — the dynamic budget under the
+    static cap `k` (the k_max cap contract). Every shape stays sized at the
+    static k; positions >= k_dyn of the returned selection are masked
+    (values -inf, ids -1), the k-th value / tie-overflow / column-overflow
+    exact-recovery checks evaluate against the *dynamic* k-th candidate
+    (k_dyn = 0 selects nothing and never falls back), and when
+    k_dyn == k every masking expression is the identity, so constant-budget
+    callers stay bit-identical to the static path.
     """
     if cand_per_lane is None:
         cand_per_lane = auto_cand_per_lane(k)
@@ -394,17 +404,37 @@ def fused_select_from(
     # sort's users stay plain get-tuple-elements; a tuple-level barrier user
     # crashes XLA's sort simplifier under sharded lowering.
     sel_vb = jax.lax.optimization_barrier(sel_v)
-    kth = sel_vb[k - 1]
+    if k_dyn is None:
+        kth = sel_vb[k - 1]
+        k_eff = k
+        live = None
+    else:
+        # Dynamic budget under the static cap: the k-th value is the
+        # k_dyn-th best candidate (+inf when k_dyn = 0 — nothing is
+        # selected, so no threshold, column, or tie condition can fire and
+        # zero-budget rounds never pay the dense fallback). Positions
+        # >= k_dyn are masked to (-inf, INT32_MAX) *before* the re-rank so
+        # live entries — whose ids are always below INT32_MAX — sort ahead
+        # of masked ones even on -inf value ties.
+        k_eff = jnp.clip(jnp.asarray(k_dyn, jnp.int32), 0, k)
+        kth = jnp.where(
+            k_eff > 0, sel_vb[jnp.maximum(k_eff, 1) - 1], jnp.float32(jnp.inf)
+        )
+        live = jnp.arange(k, dtype=jnp.int32) < k_eff
+        sel_v = jnp.where(live, sel_v, -jnp.inf)
+        sel_i = jnp.where(live, sel_i, jnp.int32(2**31 - 1))
     order = jnp.lexsort((sel_i, -sel_v))  # k elements — cheap
     top_v = sel_v[order]
     top_i = sel_i[order]
+    if k_dyn is not None:
+        top_i = jnp.where(live, top_i, -1)
 
     # Exact-recovery check (module docstring): any lane column whose last
     # retained candidate could still beat (or tie) the k-th value may have
     # dropped a winner; a threshold above kth may have skipped one; a value
     # tie straddling the k-th boundary makes the positional top_k ambiguous.
     col_last = cand_v[:, cand_per_lane - 1, :]
-    tie_overflow = jnp.sum(flat_v >= kth) > k
+    tie_overflow = jnp.sum(flat_v >= kth) > k_eff
     fell_back = (thresh > kth) | jnp.any(col_last >= kth) | tie_overflow
 
     def dense(_):
@@ -415,9 +445,18 @@ def fused_select_from(
         # the bound anchors (`sched.tiered.update_block_bounds`).
         vals = dense_values()
         dv, di = jax.lax.top_k(vals.reshape(-1), k)
-        colw = _col_depth(vals, dv[k - 1])
-        return (dv, di.astype(jnp.int32), vals.max(axis=(1, 2)),
-                jnp.float32(1.0), colw)
+        di = di.astype(jnp.int32)
+        if k_dyn is None:
+            kth_d = dv[k - 1]
+        else:
+            kth_d = jnp.where(
+                k_eff > 0, dv[jnp.maximum(k_eff, 1) - 1],
+                jnp.float32(jnp.inf),
+            )
+            dv = jnp.where(live, dv, -jnp.inf)
+            di = jnp.where(live, di, -1)
+        colw = _col_depth(vals, kth_d)
+        return (dv, di, vals.max(axis=(1, 2)), jnp.float32(1.0), colw)
 
     def keep(_):
         return (top_v, top_i, cand_v[:, 0, :].max(axis=-1),
@@ -448,6 +487,7 @@ def fused_select_local(
     cand_per_lane: int | None = None,
     impl: str = "jnp",
     interpret: bool = True,
+    k_dyn: jax.Array | None = None,
 ) -> FusedSelection:
     """Un-jitted core over flat padded state (safe inside shard_map). See
     `fused_select`; thin wrapper over `fused_select_from`."""
@@ -455,7 +495,7 @@ def fused_select_local(
     return fused_select_from(
         block_state_fn(tau_pad, n_pad, env.shape[2]), env, k, thresh, bounds,
         n_terms=n_terms, cand_per_lane=cand_per_lane, impl=impl,
-        interpret=interpret, dense_state=(tau_pad, n_pad),
+        interpret=interpret, dense_state=(tau_pad, n_pad), k_dyn=k_dyn,
     )
 
 

@@ -184,6 +184,15 @@ class FusedState(NamedTuple):
     #                         (None = empty pytree: the off path's state
     #                         tree, jit signatures, and checkpoints are
     #                         byte-identical to pre-estimation builds)
+    # --- spike-free emission residue (appended; elastic bandwidth) --------
+    emit_res: Any = None    # (n_shards,) f32 token-bucket fractional-rate
+    #                         residue of the smooth emission mode (identical
+    #                         replicated-per-shard copies — the rate operand
+    #                         is replicated, so every shard integrates the
+    #                         same bucket), None while smoothing has never
+    #                         been engaged (same empty-pytree trick as
+    #                         `est`: fixed-k paths keep byte-identical jit
+    #                         signatures and checkpoints)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -346,7 +355,7 @@ class _FusedShardUpd(NamedTuple):
 
 
 def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
-                       k_loc, cand, impl, dt):
+                       k_loc, cand, impl, dt, k_loc_dyn=None):
     """One shard-local fused selection + skip-control update — THE shared
     body of the sequential `FusedBackend.select` and every round of the
     macro scan (`crawl_rounds`), so the two paths are bit-identical by
@@ -356,7 +365,13 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
     .fused_select_from`) — the macro scan passes an anchored-n state_fn.
     blk_cis: (nb_local,) per-block CIS counts of this round's feed (None
     when adaptive_bounds is off; counts are non-negative by the feed
-    contract)."""
+    contract).
+    k_loc_dyn: optional traced per-round shard budget under the static
+    k_loc cap (elastic bandwidth). The selection masks candidates past it
+    (`kernels.select` k_dyn); the warm-start threshold is seeded from the
+    *dynamic* k-th value — and carried unchanged through zero-budget
+    rounds, where no k-th value exists (sound for any carried threshold:
+    an over-tight one only prices a dense fallback, never exactness)."""
     from repro.kernels import select as ksel
     from repro.sched import tiered
 
@@ -373,6 +388,7 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
         state_fn, env_shard, k_loc, ctx.thresh, bound,
         n_terms=backend.n_terms, cand_per_lane=cand, impl=impl,
         interpret=impl != "pallas", dense_state=dense_state,
+        k_dyn=k_loc_dyn,
     )
     # Hysteresis loop: tighten while the threshold proved safe, relax when
     # it (or candidate overflow) forced a dense pass.
@@ -384,7 +400,15 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
         )
     else:
         h = jnp.float32(backend.hysteresis)
-    new_thresh = sel.values[k_loc - 1] * h
+    if k_loc_dyn is None:
+        new_thresh = sel.values[k_loc - 1] * h
+    else:
+        # The masked selection holds its live entries in positions
+        # [0, k_loc_dyn), so the dynamic k-th value is the last live slot;
+        # k = 0 rounds observe no value and carry the threshold through.
+        kq = jnp.maximum(k_loc_dyn, 1)
+        new_thresh = jnp.where(
+            k_loc_dyn > 0, sel.values[kq - 1] * h, ctx.thresh)
     if backend.adaptive_bounds:
         # Fold the round's block maxima back into the bound anchors. On
         # fallback rounds the dense pass evaluated every block (blk_max is
@@ -912,6 +936,8 @@ def crawl_rounds(
     k: int,
     dt: float,
     outcomes: "SparseOutcomes | None" = None,
+    budgets: jax.Array | None = None,
+    rate: jax.Array | None = None,
 ):
     """A macro-round: R full scheduling rounds inside ONE jitted, donated
     `lax.scan` — one host->device dispatch for the whole batch instead of
@@ -945,14 +971,39 @@ def crawl_rounds(
     None otherwise. Outcome ingest, the streaming estimator steps, and the
     macro-boundary env-plane re-derivation all run inside the same
     shard_map as the rounds themselves — zero extra host transfers.
+
+    Elastic bandwidth (fused SparseFeeds path only; the static k becomes
+    the k_max cap — `CrawlScheduler.run_rounds` is the service surface):
+
+      * budgets: traced (R,) int32 per-round crawl budgets in [0, k].
+        Every round still emits (k,)-shaped rows; positions >= budgets[r]
+        carry (id = -1, value = -inf). A constant budgets == k vector is
+        bit-identical to the fixed-k path.
+      * rate: traced f32 scalar crawls-per-round of the spike-free
+        emission mode — a token bucket carried in `FusedState.emit_res`
+        derives each round's k in-scan (floor of the accumulated bucket,
+        clipped to [0, k]), so over any window of W rounds realized crawls
+        stay within +/-1 of rate * W and fractional rates are never lost.
+
+    Both are data operands: sweeping budget values or the rate never
+    re-traces. Mutually exclusive.
     """
+    if budgets is not None and rate is not None:
+        raise ValueError(
+            "pass either a per-round budget vector or a smoothing rate, "
+            "not both")
     if isinstance(feeds, SparseFeeds):
         if not isinstance(backend, FusedBackend):
             raise ValueError(
                 "SparseFeeds macro-rounds require the fused backend; dense "
                 "oracle backends take the (R, m_state) batch")
         return _fused_macro_rounds(backend, state, feeds, mesh, k, dt,
-                                   outcomes)
+                                   outcomes, budgets=budgets, rate=rate)
+    if budgets is not None or rate is not None:
+        raise ValueError(
+            "dynamic per-round budgets require the fused SparseFeeds macro "
+            "path (FusedBackend + CrawlScheduler.run_rounds); dense oracle "
+            "backends take a fixed static k")
     if outcomes is not None:
         raise ValueError(
             "crawl outcomes require the fused SparseFeeds macro path "
@@ -968,7 +1019,7 @@ def crawl_rounds(
 
 def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                         feeds: SparseFeeds, mesh: Mesh, k: int, dt: float,
-                        outcomes=None):
+                        outcomes=None, budgets=None, rate=None):
     """The fused macro-round scan (see `crawl_rounds`): one shard_map whose
     body scans R rounds, reusing `_fused_shard_round` for the per-round
     math so each round is bit-identical to the sequential path.
@@ -1035,10 +1086,27 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
         backend.k_local, backend.cand_per_lane,
     )
     impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    dyn = budgets is not None or rate is not None
+    if budgets is not None:
+        assert budgets.ndim == 1 and budgets.shape[0] == R, (
+            f"budgets must be (R={R},); got shape {budgets.shape}")
+    if rate is not None and bst.emit_res is None:
+        raise ValueError(
+            "smooth emission needs the token-bucket residue plane "
+            "(FusedState.emit_res) — CrawlScheduler(emission='smooth') "
+            "attaches it; or pass an explicit budgets vector")
+    # Scan-carry layout past the 10 base slots (python-level indices — the
+    # conditional operands keep every legacy trace byte-identical).
+    res_ix = 10 if rate is not None else None
+    est_ix = 10 + (1 if rate is not None else 0)
 
     def shard_fn(tau0, n0, fid, fcnt, env_shard, asym, slope, blkmax0, last0,
                  betam, cmass0, thresh0, hyst0, colw0, dhot0, clock0,
-                 *est_args):
+                 *extra):
+        ex = list(extra)
+        bud = ex.pop(0) if budgets is not None else None       # (R,) repl.
+        rate_s = ex.pop(0) if rate is not None else None       # () repl.
+        res0 = ex.pop(0) if rate is not None else None         # (1,) local
         m_local = tau0.shape[0]
         shard_lin = _shard_linear_index(axes)
         local_start = shard_lin * m_local
@@ -1046,11 +1114,12 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
         fid = fid.reshape(R, -1)
         fcnt = fcnt.reshape(R, -1)
         if est_on:
-            oid, ochg, otau, ocis, est0 = est_args
+            oid, ochg, otau, ocis, est0 = ex
             oid = oid.reshape(R, -1)
             ochg = ochg.reshape(R, -1)
             otau = otau.reshape(R, -1)
             ocis = ocis.reshape(R, -1)
+        o0 = 3 if budgets is not None else 2  # outcome slices' xs offset
 
         def step(carry, xs):
             (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev,
@@ -1064,6 +1133,19 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             fidx = jnp.where(here, rel, m_local)
             thresh = (thresh_s if backend.warm_start
                       else jnp.float32(-jnp.inf))
+            # Per-round dynamic budget: an explicit row of the budget
+            # vector, or the token bucket integrating the fractional rate
+            # (residue stays in [0, 1), so any W-round window realizes
+            # within +/-1 of rate * W). Replicated across shards.
+            res = None
+            if budgets is not None:
+                k_r = xs[2]
+            elif rate is not None:
+                bucket = carry[res_ix] + rate_s
+                k_r = jnp.clip(jnp.floor(bucket), 0, k).astype(jnp.int32)
+                res = bucket - k_r.astype(jnp.float32)
+            k_loc_dyn = (jnp.minimum(k_r, jnp.int32(k_loc)) if dyn
+                         else None)
             if backend.adaptive_bounds:
                 # Per-block CIS counts via the same sparse scatter (exact:
                 # integer sums in any order equal the dense reduction).
@@ -1084,28 +1166,34 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                                last_ev=last_ev, betam=betam, cmass=cmass,
                                thresh=thresh, hyst=hyst_s, colw=colw_s,
                                dhot=dhot_s, clock=clock),
-                blk_cis, k_loc, cand, impl, dt,
+                blk_cis, k_loc, cand, impl, dt, k_loc_dyn=k_loc_dyn,
             )
-            top_g, top_v, idx = _global_winners(sel.values, sel.ids, axes,
-                                                m_local, k)
+            top_g, top_v, idx = _global_winners(
+                sel.values, sel.ids, axes, m_local, k,
+                k_dyn=k_r if dyn else None)
             if est_on:
                 # Fold this round's self-contained outcome slice (freshness
                 # bit + echoed covariates — see `online_est.SparseOutcomes`)
                 # into the streaming statistics: O(cap) scatters.
-                orel = xs[2] - local_start
+                orel = xs[o0] - local_start
                 oidx = jnp.where((orel >= 0) & (orel < m_local), orel,
                                  m_local)
-                est = oest.ingest_outcomes(carry[10], oidx, xs[3], xs[4],
-                                           xs[5])
+                est = oest.ingest_outcomes(carry[est_ix], oidx, xs[o0 + 1],
+                                           xs[o0 + 2], xs[o0 + 3])
             # Winner resets touch only the k crawled pages and the feed
             # ingest only the nnz fed pages (no O(m) mask / dense add):
             # tau drops to one round period and n to 0-then-feed — both
             # bit-equal to the sequential `where(mask, ...) + feed` forms.
+            # Masked winner slots (id -1 past the dynamic budget) resolve
+            # to the m_local sentinel and drop, so zero-budget rounds reset
+            # nothing while tau/n still advance.
             tau = (tau + dt).at[idx].set(jnp.float32(dt), mode="drop")
             n = n.at[idx].set(0, mode="drop").at[fidx].add(fcnt_r,
                                                            mode="drop")
             carry = (tau, n, upd.thresh, upd.hyst, upd.colw, upd.dhot,
                      upd.blkmax, upd.last_ev, upd.cmass, clock + 1)
+            if rate is not None:
+                carry = carry + (res,)
             if est_on:
                 carry = carry + (est,)
             ys = (top_g, top_v, sel.frac_active, sel.fell_back, upd.hyst,
@@ -1114,24 +1202,24 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
 
         carry0 = (tau0, n0, thresh0[0], hyst0[0], colw0[0], dhot0[0],
                   blkmax0, last0, cmass0, clock0)
-        xs = (fid, fcnt)
+        if rate is not None:
+            carry0 = carry0 + (res0[0],)
         if est_on:
             carry0 = carry0 + (est0,)
+        xs = (fid, fcnt)
+        if budgets is not None:
+            xs = xs + (bud,)
+        if est_on:
             xs = xs + (oid, ochg, otau, ocis)
         carry, ys = jax.lax.scan(step, carry0, xs)
         (tau, n, thresh_s, hyst_s, colw_s, dhot_s, blkmax, last_ev, cmass,
          _clock) = carry[:10]
         top_g, top_v, frac, fb, hyst_r, colw_r, dhot_r = ys
-        out = (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
-               colw_s.reshape(1), dhot_s.reshape(1), blkmax, last_ev,
-               cmass, top_g, top_v,
-               frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
-               colw_r.reshape(R, 1), dhot_r.reshape(R, 1))
         if est_on:
             # Macro-boundary device-side refresh: repack the packed planes
             # of every page whose outcome landed this batch and re-derive
             # the touched blocks' bound rows (post-scan anchors).
-            est = carry[10]
+            est = carry[est_ix]
             orel_all = oid.reshape(-1) - local_start
             touched = jnp.where(
                 (orel_all >= 0) & (orel_all < m_local), orel_all, m_local)
@@ -1142,13 +1230,16 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                 betam, cmass, min_obs=float(backend.est_min_obs),
                 prior_a=backend.est_prior_a, prior_b=backend.est_prior_b,
                 prior_w=backend.est_prior_w)
-            out = (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
-                   colw_s.reshape(1), dhot_s.reshape(1), bb2.blk_max,
-                   bb2.last_eval, cmass2, top_g, top_v,
-                   frac.reshape(R, 1), fb.reshape(R, 1),
-                   hyst_r.reshape(R, 1), colw_r.reshape(R, 1),
-                   dhot_r.reshape(R, 1),
-                   env2, bb2.asym, bb2.slope, betam2, est)
+            blkmax, last_ev, cmass = bb2.blk_max, bb2.last_eval, cmass2
+        out = (tau, n, thresh_s.reshape(1), hyst_s.reshape(1),
+               colw_s.reshape(1), dhot_s.reshape(1), blkmax, last_ev,
+               cmass, top_g, top_v,
+               frac.reshape(R, 1), fb.reshape(R, 1), hyst_r.reshape(R, 1),
+               colw_r.reshape(R, 1), dhot_r.reshape(R, 1))
+        if rate is not None:
+            out = out + (carry[res_ix].reshape(1),)
+        if est_on:
+            out = out + (env2, bb2.asym, bb2.slope, betam2, est)
         return out
 
     base_in = (pspec, pspec, P(None, axes, None), P(None, axes, None),
@@ -1162,34 +1253,40 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                  bst.env_planes, bst.bounds, bst.slope, bst.blk_max,
                  bst.last_eval, bst.beta_max, bst.cis_mass, bst.thresh,
                  bst.hyst, bst.col_winners, bst.depth_hot, state.crawl_clock)
+    extra_in: tuple = ()
+    extra_out: tuple = ()
+    extra_args: tuple = ()
+    if budgets is not None:
+        extra_in += (P(None),)
+        extra_args += (budgets.astype(jnp.int32),)
+    if rate is not None:
+        extra_in += (P(), pspec)
+        extra_out += (pspec,)
+        extra_args += (jnp.asarray(rate, jnp.float32), bst.emit_res)
     if est_on:
         est_spec = jax.tree.map(lambda _: pspec, bst.est)
-        fn = _shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=base_in + (P(None, axes, None), P(None, axes, None),
-                                P(None, axes, None), P(None, axes, None),
-                                est_spec),
-            out_specs=base_out + (P(axes, None, None, None), pspec, pspec,
-                                  pspec, est_spec),
-        )
-        (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
-         frac, fb, hyst_r, colw_r, dhot_r, env_planes, asym, slope, betam,
-         est) = fn(*base_args, outcomes.ids, outcomes.changed,
-                   outcomes.tau, outcomes.n_cis, bst.est)
-        new_bst = bst._replace(
-            thresh=thresh, frac_active=frac[-1], fell_back=fb[-1],
-            blk_max=blkmax, last_eval=last_ev, cis_mass=cmass, hyst=hyst,
-            col_winners=colw, depth_hot=dhot, env_planes=env_planes,
-            bounds=asym, slope=slope, beta_max=betam, est=est)
-    else:
-        fn = _shard_map(shard_fn, mesh=mesh, in_specs=base_in,
-                        out_specs=base_out)
-        (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
-         frac, fb, hyst_r, colw_r, dhot_r) = fn(*base_args)
-        new_bst = bst._replace(thresh=thresh, frac_active=frac[-1],
-                               fell_back=fb[-1], blk_max=blkmax,
-                               last_eval=last_ev, cis_mass=cmass, hyst=hyst,
-                               col_winners=colw, depth_hot=dhot)
+        extra_in += (P(None, axes, None), P(None, axes, None),
+                     P(None, axes, None), P(None, axes, None), est_spec)
+        extra_out += (P(axes, None, None, None), pspec, pspec, pspec,
+                      est_spec)
+        extra_args += (outcomes.ids, outcomes.changed, outcomes.tau,
+                       outcomes.n_cis, bst.est)
+    fn = _shard_map(shard_fn, mesh=mesh, in_specs=base_in + extra_in,
+                    out_specs=base_out + extra_out)
+    res_all = fn(*base_args, *extra_args)
+    (tau, n, thresh, hyst, colw, dhot, blkmax, last_ev, cmass, ids, vals,
+     frac, fb, hyst_r, colw_r, dhot_r) = res_all[:16]
+    rest = list(res_all[16:])
+    repl = dict(thresh=thresh, frac_active=frac[-1], fell_back=fb[-1],
+                blk_max=blkmax, last_eval=last_ev, cis_mass=cmass, hyst=hyst,
+                col_winners=colw, depth_hot=dhot)
+    if rate is not None:
+        repl["emit_res"] = rest.pop(0)
+    if est_on:
+        env_planes, asym, slope, betam, est = rest
+        repl.update(env_planes=env_planes, bounds=asym, slope=slope,
+                    beta_max=betam, est=est)
+    new_bst = bst._replace(**repl)
     new_state = RoundState(
         tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + R,
         backend=new_bst,

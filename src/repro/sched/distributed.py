@@ -151,16 +151,29 @@ def host_local_array(local, mesh: Mesh, spec: P) -> jax.Array:
     return jax.make_array_from_process_local_data(sharding, local)
 
 
-def _global_winners(loc_v, loc_i, axes, m_local, k):
+def _global_winners(loc_v, loc_i, axes, m_local, k, k_dyn=None):
     """Candidate exchange + global top-k (shared by the dense and fused
     paths). loc_i are shard-local page indices. Returns (global_ids, values,
     local_idx) where local_idx holds each winner's shard-local index, or the
     out-of-bounds sentinel m_local for winners living on other shards — made
     for `.at[local_idx].set(..., mode="drop")` updates, so callers touching
     only the k winners (the macro-round scan) never materialize an m-sized
-    mask."""
+    mask.
+
+    k_dyn: optional traced int32 budget under the static cap k. Winner slots
+    >= k_dyn come back masked (id -1, value -inf); their local_idx resolves
+    below local_start and lands on the m_local sentinel, so masked slots are
+    dropped by the same `.at[...].set(mode="drop")` path as remote winners.
+    Shard-local candidates already arrive masked at the *local* clamp
+    (`kernels.select` k_dyn), but remasking here is what bounds the number
+    of *global* winners: with per-shard clamps alone, S shards could jointly
+    contribute more than k_dyn live candidates."""
     shard_lin = _shard_linear_index(axes)
     gids = loc_i.astype(jnp.int32) + shard_lin * m_local
+    if k_dyn is not None:
+        # Masked local slots carry id -1 from the select masking; keep them
+        # -1 rather than shifting into another shard's id range.
+        gids = jnp.where(loc_i < 0, -1, gids)
     # Tiny candidate exchange: (n_shards * k_loc) values + ids.
     all_v = loc_v
     all_g = gids
@@ -169,9 +182,13 @@ def _global_winners(loc_v, loc_i, axes, m_local, k):
         all_g = jax.lax.all_gather(all_g, ax, tiled=True)
     top_v, top_j = jax.lax.top_k(all_v, k)
     top_g = all_g[top_j]
+    if k_dyn is not None:
+        live = jnp.arange(k, dtype=jnp.int32) < k_dyn
+        top_g = jnp.where(live, top_g, -1)
+        top_v = jnp.where(live, top_v, -jnp.inf)
     local_start = shard_lin * m_local
     rel = top_g - local_start
-    here = (rel >= 0) & (rel < m_local)
+    here = (rel >= 0) & (rel < m_local) & (top_g >= 0)
     idx = jnp.where(here, rel, m_local)
     return top_g, top_v, idx
 

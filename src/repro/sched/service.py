@@ -47,6 +47,7 @@ further rounds if you intend to keep it.
 """
 from __future__ import annotations
 
+import math
 import warnings
 
 import dataclasses
@@ -101,6 +102,8 @@ class CrawlScheduler:
         feed_cap: int | None = None,
         update_cap: int | None = None,
         outcome_cap: int | None = None,
+        k_max: int | None = None,
+        emission: str = "fixed",
     ):
         if backend is None:
             if use_kernel or use_fused:
@@ -130,6 +133,13 @@ class CrawlScheduler:
         self.feed_cap = feed_cap
         self.update_cap = update_cap
         self.outcome_cap = outcome_cap
+        # Bandwidth-axis capacity contract (elastic bandwidth; fused macro
+        # path): k_max pins the static selection width so per-round budgets
+        # and mid-flight `set_bandwidth` changes are pure data — same
+        # pattern as feed_cap. emission: "fixed" (legacy integer k every
+        # round) | "smooth" (token-bucket spike-free emission at the exact
+        # fractional rate bandwidth * round_period).
+        self._init_bandwidth_axis(k_max, emission)
         # Host-side mirror of the device round counter
         # (`RoundState.crawl_clock`), maintained without any device sync so
         # drivers can date crawls (e.g. to reconstruct per-crawl interval
@@ -166,6 +176,8 @@ class CrawlScheduler:
         feed_cap: int | None = None,
         update_cap: int | None = None,
         outcome_cap: int | None = None,
+        k_max: int | None = None,
+        emission: str = "fixed",
     ) -> "CrawlScheduler":
         """Host-local construction (the elastic-lifecycle cold start): each
         process supplies ONLY its `host_slice` of the raw env — the raw
@@ -202,6 +214,7 @@ class CrawlScheduler:
         self.feed_cap = feed_cap
         self.update_cap = update_cap
         self.outcome_cap = outcome_cap
+        self._init_bandwidth_axis(k_max, emission)
         self.rounds_completed = 0
         self._host_shards = host_shard_range(mesh)
         block_rows = backend.block_rows or layout.DEFAULT_BLOCK_ROWS
@@ -309,14 +322,85 @@ class CrawlScheduler:
         return (s1 - s0) != self.n_shards
 
     # -- bandwidth ---------------------------------------------------------
+    def _init_bandwidth_axis(self, k_max: int | None, emission: str) -> None:
+        if emission not in ("fixed", "smooth"):
+            raise ValueError(
+                f"emission must be 'fixed' or 'smooth', got {emission!r}")
+        if k_max is not None and k_max < 1:
+            raise ValueError(f"k_max must be >= 1, got {k_max}")
+        self.k_max = k_max
+        self.emission = emission
+
     @property
     def k_per_round(self) -> int:
         # A budget above the shard size just means "crawl everything".
+        # Fixed-emission rounding: the fractional part of
+        # bandwidth * round_period is LOST here (2.5 crawls/round emits 2
+        # forever) — emission="smooth" folds it into the token bucket
+        # instead.
         k = max(1, int(round(self.bandwidth * self.round_period)))
         return min(k, self.m)
 
+    @property
+    def k_cap(self) -> int:
+        """The static selection width of the elastic-bandwidth paths — the
+        k_max cap contract (`run_rounds` budgets= / emission="smooth"):
+        every compiled round selects at this width and masks down to the
+        round's dynamic budget, so budget values and rate changes are pure
+        data. With an explicit k_max the cap (and thus every compiled
+        shape) is bandwidth-independent; without one it follows the current
+        bandwidth — ceil of the rate under smoothing, since the bucket
+        emits up to ceil(rate) on overflow rounds — and a `set_bandwidth`
+        past the implied cap re-jits once, exactly like an over-`feed_cap`
+        batch would."""
+        if self.k_max is not None:
+            return min(self.k_max, self.m)
+        if self.emission == "smooth":
+            return min(max(1, math.ceil(self.bandwidth * self.round_period)),
+                       self.m)
+        return self.k_per_round
+
+    @property
+    def _smooth_rate(self) -> float:
+        """Crawls per round of the smooth emission mode, checked against
+        the cap contract (a rate whose ceil exceeds k_cap cannot be
+        realized — the bucket would grow without bound)."""
+        rate = self.bandwidth * self.round_period
+        if math.ceil(rate) > self.k_cap:
+            if self.k_cap < self.m:
+                raise CapacityExceeded(
+                    f"bandwidth * round_period = {rate:g} crawls/round is "
+                    f"over the k_max contract ({self.k_cap}); raise k_max "
+                    "(one re-jit) or lower the bandwidth"
+                )
+            # Cap == corpus: a higher rate just means "crawl everything".
+            rate = float(self.k_cap)
+        return rate
+
+    def _ensure_emit_residue(self) -> None:
+        """Attach the token-bucket residue plane (`FusedState.emit_res`,
+        one f32 per shard, identical replicated copies) the first time the
+        smooth emission path runs. Lazy so fixed-emission schedulers —
+        and every checkpoint they ever wrote — keep a byte-identical
+        state tree; `None` is an empty pytree, so off-path jit signatures
+        don't change either (same trick as the `est` leaf)."""
+        bst = self.round.backend
+        if bst.emit_res is not None:
+            return
+        s0, s1 = host_shard_range(self.mesh)
+        res = host_local_array(
+            np.zeros(s1 - s0, np.float32), self.mesh, P(self.axes))
+        self.round = dataclasses.replace(
+            self.round, backend=bst._replace(emit_res=res))
+
     def set_bandwidth(self, bandwidth: float) -> None:
-        """App. D: adapting to a new budget is just a new k — no re-solve."""
+        """App. D: adapting to a new budget is just a new k — no re-solve.
+        Under the elastic paths (emission="smooth" or explicit budget
+        vectors at a pinned k_max) this is a pure DATA update: the new rate
+        rides the already-compiled macro-round as a traced operand, with
+        zero recompiles (the adaptive candidate-depth machinery keeps its
+        floor at k_cap, which does not move). Legacy fixed-emission rounds
+        re-jit on a changed k_per_round, as before."""
         self.bandwidth = float(bandwidth)
 
     # -- the round ---------------------------------------------------------
@@ -629,7 +713,7 @@ class CrawlScheduler:
             tau=host_local_array(out_t, self.mesh, spec),
             n_cis=host_local_array(out_n, self.mesh, spec))
 
-    def run_rounds(self, feeds, outcomes=None):
+    def run_rounds(self, feeds, outcomes=None, budgets=None):
         """A macro-round: R = len(feeds) rounds under one jitted `lax.scan`
         (`backends.crawl_rounds`) — one dispatch, no mid-loop host sync, and
         for the fused backend O(active + k) instead of O(m) state work per
@@ -662,9 +746,36 @@ class CrawlScheduler:
         the touched pages' packed env planes re-derive from the updated
         estimates — zero per-round host transfers. With `online_est=True`
         and no outcomes, an all-padding batch keeps the compiled signature
-        stable; passing outcomes to a non-estimating backend raises."""
+        stable; passing outcomes to a non-estimating backend raises.
+
+        budgets (elastic bandwidth, fused backend only): an optional
+        (n_rounds,) integer vector of per-round crawl budgets, consumed
+        INSIDE the already-compiled scan as a traced operand under the
+        k_max cap contract: the compiled round selects at the static width
+        `k_cap` and masks down to each round's budget, so any budget
+        sequence with values in [0, k_cap] reuses one compiled executable
+        — zero recompiles across budget values. Rows past a round's budget
+        come back as id -1 / value -inf; a zero-budget round crawls
+        nothing but still advances tau for every page. A budget above
+        `k_cap` raises CapacityExceeded (raise k_max — one re-jit — or
+        split the round). Constant budget vectors equal to k are
+        bit-identical to the fixed-k path. With emission="smooth" and no
+        explicit budgets, the scheduler instead derives each round's
+        budget on device from a token bucket at bandwidth * round_period
+        crawls/round (fractional residue rides `FusedState.emit_res`
+        across macro-rounds), so realized crawls over any window of W
+        rounds stay within +-1 of bandwidth * W * round_period and
+        `set_bandwidth` is a pure data update."""
         est_on = (isinstance(self.backend, be.FusedBackend)
                   and self.backend.online_est)
+        fused = isinstance(self.backend, be.FusedBackend)
+        smooth = self.emission == "smooth" and budgets is None
+        if (budgets is not None or smooth) and not fused:
+            raise FeedValidationError(
+                "elastic bandwidth (run_rounds(budgets=...) or "
+                "emission='smooth') requires the fused backend: only the "
+                "fused macro-round threads a dynamic per-round k"
+            )
         if outcomes is not None and not est_on:
             raise FeedValidationError(
                 "run_rounds(outcomes=...) requires "
@@ -690,11 +801,38 @@ class CrawlScheduler:
                         n_rounds)
         else:
             feeds = self._pad_feeds(feeds)
+        rate = None
+        if budgets is not None:
+            bud = np.asarray(budgets)
+            if bud.ndim != 1 or bud.shape[0] != n_rounds:
+                raise FeedValidationError(
+                    f"budgets must be a 1-D length-{n_rounds} vector (one "
+                    f"entry per round), got shape {bud.shape}"
+                )
+            if not np.issubdtype(bud.dtype, np.integer):
+                raise FeedValidationError(
+                    f"budgets must be integers (crawls per round), got "
+                    f"dtype {bud.dtype}"
+                )
+            if bud.size and int(bud.min()) < 0:
+                raise FeedValidationError("budgets must be >= 0")
+            cap = self.k_cap
+            if bud.size and int(bud.max()) > cap:
+                raise CapacityExceeded(
+                    f"budget {int(bud.max())} exceeds the k_max contract "
+                    f"({cap}); raise k_max (one re-jit) or split the round"
+                )
+            budgets = bud.astype(np.int32)
+        elif smooth:
+            rate = self._smooth_rate
+            self._ensure_emit_residue()
+        k_static = self.k_cap if (budgets is not None or smooth) else (
+            self.k_per_round)
         self._ensure_cand_coverage()
         self.round, (page_ids, values), diag = be.crawl_rounds(
             self.backend, self.round, feeds,
-            mesh=self.mesh, k=self.k_per_round, dt=self.round_period,
-            outcomes=outcomes,
+            mesh=self.mesh, k=k_static, dt=self.round_period,
+            outcomes=outcomes, budgets=budgets, rate=rate,
         )
         self.macro_diagnostics = diag
         self.rounds_completed += int(page_ids.shape[0])
@@ -736,12 +874,16 @@ class CrawlScheduler:
     def _ensure_cand_coverage(self) -> None:
         """Re-grow an adapted candidate depth that a later bandwidth raise
         (`set_bandwidth` between depth decisions) has made too small to
-        cover the budget — cheap host-side arithmetic, runs every round."""
+        cover the budget — cheap host-side arithmetic, runs every round.
+        The floor is computed against `k_cap`, not the current round's k:
+        under elastic bandwidth a budget vector may ramp to the cap inside
+        one compiled batch, so coverage must hold at the cap even when the
+        bandwidth (and thus this round's typical budget) is low."""
         b = self.backend
         if not (isinstance(b, be.FusedBackend) and b.adaptive_cand
                 and b.cand_per_lane is not None):
             return
-        floor = self._cand_floor(self.k_per_round)
+        floor = self._cand_floor(self.k_cap)
         if b.cand_per_lane < floor:
             self.backend = dataclasses.replace(b, cand_per_lane=floor)
 
@@ -785,7 +927,10 @@ class CrawlScheduler:
         from repro.kernels import select as ksel
 
         bst = self.round.backend
-        k = self.k_per_round
+        # Against the cap, not this round's k: a dynamic budget vector may
+        # jump to k_cap inside the next compiled batch, and an undersized
+        # depth would price a dense fallback on every such round.
+        k = self.k_cap
         # The same clamp rule the round itself applies, with the depth left
         # to auto-size: its cand output IS the worst-case auto depth.
         _, auto = ksel.shard_budget(
@@ -1072,12 +1217,28 @@ class CrawlScheduler:
         # donate the state, which must never invalidate the caller's sd.
         own = lambda v, dt=None: jnp.copy(jnp.asarray(v, dt))
         if sd.get("backend") is not None:
+            snap = sd["backend"]
+            # Align the lazy emit_res leaf before the structural tree.map:
+            # a smooth-emission snapshot restored into a scheduler that
+            # hasn't smoothed yet (or vice versa) would otherwise fail the
+            # pytree structure match (None is an empty subtree).
+            if (isinstance(backend_state, be.FusedState)
+                    and isinstance(snap, be.FusedState)):
+                if (snap.emit_res is not None
+                        and backend_state.emit_res is None):
+                    self._ensure_emit_residue()
+                    backend_state = self.round.backend
+                elif (snap.emit_res is None
+                        and backend_state.emit_res is not None):
+                    # Pre-smoothing snapshot: restore with a clean bucket.
+                    snap = snap._replace(emit_res=np.zeros(
+                        backend_state.emit_res.shape, np.float32))
             # Re-shard each restored leaf like the corresponding live leaf
             # (old checkpoints without backend state keep the cold init).
             backend_state = jax.tree.map(
                 lambda ref, val: jax.device_put(own(val, ref.dtype),
                                                 ref.sharding),
-                backend_state, sd["backend"],
+                backend_state, snap,
             )
         if sd.get("adapt") is not None and isinstance(self.backend,
                                                       be.FusedBackend):

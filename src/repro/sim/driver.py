@@ -47,6 +47,16 @@ class LoopConfig(NamedTuple):
     mle_every: int = 4           # (mle) batches between host refits
     mle_window: int = 8192       # (mle) most recent observations refit on
     seed: int = 0
+    # Elastic bandwidth: optional per-batch crawl rate (crawls per unit
+    # time, like CrawlScheduler's bandwidth). The driver turns each batch's
+    # rate into a per-round budget vector through a host token bucket whose
+    # residue carries across batches — realized crawls track rate * time
+    # within +-1 over any window even at fractional per-round rates — and
+    # feeds it to run_rounds(budgets=...), so a mid-flight rate change is
+    # pure data to the already-compiled scheduler (construct it with k_max
+    # >= ceil(max_rate * round_period)). None keeps the scheduler's own
+    # fixed bandwidth.
+    bandwidth_schedule: Optional[tuple] = None
 
 
 class LoopResult(NamedTuple):
@@ -82,6 +92,23 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
     if cfg.mode not in ("fixed", "streaming", "mle"):
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
+    bw_sched = cfg.bandwidth_schedule
+    if bw_sched is not None:
+        bw_sched = np.asarray(bw_sched, np.float64)
+        if bw_sched.shape != (cfg.n_batches,):
+            raise ValueError(
+                f"bandwidth_schedule must have one rate per batch "
+                f"({cfg.n_batches}), got shape {bw_sched.shape}")
+        if (bw_sched < 0).any():
+            raise ValueError("bandwidth_schedule rates must be >= 0")
+        if int(np.ceil(float(bw_sched.max()) * dt)) > sched.k_cap:
+            raise ValueError(
+                f"bandwidth_schedule peaks at {float(bw_sched.max()):g} "
+                f"crawls/time = {float(bw_sched.max()) * dt:g}/round, over "
+                f"the scheduler's k_max contract ({sched.k_cap}); construct "
+                "it with a larger k_max")
+    bucket = 0.0  # token-bucket residue, carried across batches
+
     stale = np.zeros((m,), bool)
     tau_sh = np.zeros((m,), np.float64)   # host shadow of scheduler state
     n_sh = np.zeros((m,), np.int64)
@@ -91,7 +118,7 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
     fresh_trace = []
     log_ids, log_tau, log_n, log_z = [], [], [], []
 
-    for _ in range(cfg.n_batches):
+    for b in range(cfg.n_batches):
         sig = rng.poisson(rate_sig, size=(R, m))
         uns = rng.poisson(rate_uns, size=(R, m))
         fls = rng.poisson(rate_fls, size=(R, m))
@@ -101,10 +128,17 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
         feeds[1:] = gen_cis[:-1]
         pending_cis = gen_cis[-1]
 
-        if streaming:
-            ids = sched.run_rounds(feeds, outcomes=prev_out)
-        else:
-            ids = sched.run_rounds(feeds)
+        budgets = None
+        if bw_sched is not None:
+            rate = float(bw_sched[b]) * dt
+            budgets = np.empty(R, np.int64)
+            for r in range(R):
+                bucket += rate
+                budgets[r] = int(bucket)  # floor; <= k_cap by the check
+                bucket -= budgets[r]
+
+        ids = sched.run_rounds(
+            feeds, outcomes=prev_out if streaming else None, budgets=budgets)
         ids_np = np.asarray(ids[0])       # the one host read per batch
 
         changed = np.zeros_like(ids_np)
@@ -112,10 +146,15 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
         out_n = np.zeros(ids_np.shape, np.int32)
         for r in range(R):
             n_sh += feeds[r]
-            sel = ids_np[r]
-            changed[r] = stale[sel]
-            out_tau[r] = tau_sh[sel]
-            out_n[r] = n_sh[sel]
+            row = ids_np[r]
+            # Under a budget vector, slots past round r's budget are -1
+            # (the masked tail of the k_cap-wide selection) — padding both
+            # for the shadow replay and for the echoed outcomes batch.
+            valid = row >= 0
+            sel = row[valid]
+            changed[r, valid] = stale[sel]
+            out_tau[r, valid] = tau_sh[sel]
+            out_n[r, valid] = n_sh[sel]
             log_ids.append(sel.copy())
             log_tau.append(tau_sh[sel].astype(np.float32))
             log_n.append(n_sh[sel].astype(np.int32))

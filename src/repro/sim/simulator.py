@@ -89,15 +89,29 @@ def simulate(
     belief: Env | None = None,
     lds_rates: jax.Array | None = None,
     quality_mask: jax.Array | None = None,
+    k_schedule: jax.Array | None = None,
 ) -> SimResult:
     """Run one simulation. `belief` is what the policy *thinks* the environment
     is (e.g. corrupted precision/recall estimates); events always follow `env`.
-    """
+
+    k_schedule: optional (n_steps,) integer per-tick crawl budgets (elastic
+    bandwidth). `cfg.k_per_tick` becomes the static cap: each tick crawls the
+    arg-top-`k_schedule[t]` pages (0 = pure observation tick), and the vector
+    is a traced operand — sweeping budget values reuses one compiled
+    executable. In `obs`, selection slots past a tick's budget carry page -1
+    (filter on it; their covariate columns are padding)."""
     d_true = derive(env)
     d_bel = derive(belief) if belief is not None else d_true
     mode = _resolve_count_mode(cfg, env)
+    if k_schedule is not None:
+        k_schedule = jnp.clip(
+            jnp.asarray(k_schedule, jnp.int32), 0, cfg.k_per_tick)
+        if k_schedule.shape != (cfg.n_steps,):
+            raise ValueError(
+                f"k_schedule must have shape ({cfg.n_steps},), got "
+                f"{k_schedule.shape}")
     return _simulate_impl(key, env, d_true, d_bel, policy, cfg, mode,
-                          lds_rates, quality_mask, delay=None)
+                          lds_rates, quality_mask, k_schedule, delay=None)
 
 
 def simulate_delayed(
@@ -114,7 +128,7 @@ def simulate_delayed(
     d_bel = derive(belief) if belief is not None else d_true
     mode = _resolve_count_mode(cfg, env)
     return _simulate_impl(key, env, d_true, d_bel, policy, cfg, mode,
-                          None, quality_mask, delay=delay)
+                          None, quality_mask, None, delay=delay)
 
 
 @functools.partial(
@@ -131,6 +145,7 @@ def _simulate_impl(
     mode: str,
     lds_rates,
     quality_mask,
+    k_schedule,
     delay: DelayConfig | None,
 ) -> SimResult:
     m = env.delta.shape[0]
@@ -182,13 +197,22 @@ def _simulate_impl(
             scores = -deadlines
         else:
             scores = values_fn(state)
-        if cfg.k_per_tick == 1:
+        if cfg.k_per_tick == 1 and k_schedule is None:
             sel = jnp.argmax(scores)
             crawled = jax.nn.one_hot(sel, m, dtype=bool)
             sel_pages = sel[None]
         else:
             _, sel_pages = jax.lax.top_k(scores, cfg.k_per_tick)
-            crawled = jnp.zeros((m,), bool).at[sel_pages].set(True)
+            if k_schedule is not None:
+                # Elastic budget: top_k stays at the static cap; slots past
+                # this tick's budget point at the out-of-range sentinel m,
+                # which mode="drop" discards — so the budget is pure data.
+                live = jnp.arange(cfg.k_per_tick) < k_schedule[step_idx]
+                sel_pages = jnp.where(live, sel_pages, m)
+            crawled = jnp.zeros((m,), bool).at[sel_pages].set(
+                True, mode="drop")
+            if k_schedule is not None:
+                sel_pages = jnp.where(live, sel_pages, -1)
 
         # Crawl observations (what a production crawler would log).
         obs = None

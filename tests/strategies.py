@@ -26,6 +26,45 @@ from _hypothesis_compat import HAVE_HYPOTHESIS
 FEED_KINDS = ("empty", "sparse", "dense", "hot_shard")
 FEED_DTYPES = (np.int32, np.int16, np.bool_)
 
+BUDGET_KINDS = ("constant", "mixed", "zero_runs", "ramp", "extremes")
+
+
+def build_budget_vector(n_rounds: int, k_cap: int, kind: str,
+                        seed: int) -> np.ndarray:
+    """Deterministically build one (n_rounds,) per-round budget vector in
+    [0, k_cap] of the given kind — the elastic-bandwidth counterpart of
+    `build_feed_batch`:
+
+      * constant  — every round the same budget (the fixed-k equivalence)
+      * mixed     — uniform draws over the full [0, k_cap] range
+      * zero_runs — bursts of crawling separated by runs of pure
+                    observation (k=0) rounds
+      * ramp      — 0 up to k_cap and back inside one batch (the
+                    candidate-depth floor scenario)
+      * extremes  — only 0 and k_cap, the two boundary budgets
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "constant":
+        return np.full(n_rounds, int(rng.integers(0, k_cap + 1)), np.int64)
+    if kind == "mixed":
+        return rng.integers(0, k_cap + 1, n_rounds)
+    if kind == "zero_runs":
+        bud = rng.integers(1, k_cap + 1, n_rounds)
+        r = 0
+        while r < n_rounds:
+            run = int(rng.integers(1, max(2, n_rounds // 3)))
+            bud[r:r + run] = 0
+            r += run + int(rng.integers(1, max(2, n_rounds // 3)))
+        return bud
+    if kind == "ramp":
+        half = (n_rounds + 1) // 2
+        up = np.linspace(0, k_cap, half).round().astype(np.int64)
+        down = up[::-1][:n_rounds - half]
+        return np.concatenate([up, down])
+    if kind == "extremes":
+        return rng.integers(0, 2, n_rounds) * k_cap
+    raise ValueError(f"unknown budget kind {kind!r}")
+
 
 def build_feed_batch(m: int, n_rounds: int, kind: str, dtype, seed: int,
                      max_count: int = 40) -> np.ndarray:
@@ -79,9 +118,20 @@ if HAVE_HYPOTHESIS:
         """A single-round (m,) feed drawn from the same shapes."""
         return feed_batches(m, max_rounds=1, kinds=kinds, dtypes=dtypes,
                             max_count=max_count).map(lambda f: f[0])
+
+    @st.composite
+    def budget_vectors(draw, n_rounds: int, k_cap: int,
+                       kinds=BUDGET_KINDS):
+        """A (n_rounds,) bounded per-round budget vector in [0, k_cap]."""
+        kind = draw(st.sampled_from(list(kinds)))
+        seed = draw(st.integers(0, 2**16))
+        return build_budget_vector(n_rounds, k_cap, kind, seed)
 else:  # pragma: no cover - exercised in minimal environments
     def feed_batches(*_a, **_k):
         return None
 
     def feed_rows(*_a, **_k):
+        return None
+
+    def budget_vectors(*_a, **_k):
         return None

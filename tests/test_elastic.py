@@ -1,0 +1,346 @@
+"""Elastic bandwidth end to end: per-round dynamic budgets under the k_max
+cap contract, spike-free token-bucket emission, recompile-free mid-flight
+rate changes, and the candidate-depth floor at the cap.
+
+The contract under test (README "Elastic bandwidth"): the compiled macro
+round selects at the static width `k_cap` and masks down to each round's
+budget, so budget values and bandwidth changes are pure data — one compiled
+executable serves every budget sequence in [0, k_cap], a constant budget
+vector equal to k is bit-identical to the fixed-k path, and realized crawls
+under emission="smooth" track bandwidth * time within +-1 over any window.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from _hypothesis_compat import given, settings, st
+from repro.core import policies as pol
+from repro.core.values import derive
+from repro.sched import backends as be
+from repro.sched.errors import CapacityExceeded, FeedValidationError
+from repro.sched.service import CrawlScheduler
+from repro.sim import uniform_instance
+from repro.sim.simulator import SimConfig, simulate
+
+M, DT = 512, 0.5
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _env(m=M, seed=0):
+    return uniform_instance(jax.random.PRNGKey(seed), m)
+
+
+def _feeds(n_rounds, m=M, seed=1, frac=0.05):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n_rounds, m)) < frac).astype(np.int32)
+
+
+def _sched(env, *, bandwidth, backend=None, **kw):
+    backend = backend if backend is not None else be.FusedBackend(
+        block_rows=8)
+    return CrawlScheduler(env, _mesh1(), bandwidth=bandwidth,
+                          round_period=DT, backend=backend, **kw)
+
+
+def _counts(ids):
+    return np.asarray((np.asarray(ids) >= 0).sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: the k_max cap contract.
+# ---------------------------------------------------------------------------
+
+def test_constant_budget_bit_identical_to_fixed_k():
+    """A budget vector pinned at k is the fixed-k path bit for bit: every
+    dynamic-k mask is a value no-op when the budget equals the cap."""
+    env, k = _env(), 6
+    fixed = _sched(env, bandwidth=k / DT)
+    elast = _sched(env, bandwidth=k / DT, k_max=k)
+    feeds = _feeds(12)
+    ids_f, val_f = fixed.run_rounds(feeds)
+    ids_e, val_e = elast.run_rounds(feeds, budgets=np.full(12, k))
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_e))
+    np.testing.assert_array_equal(np.asarray(val_f), np.asarray(val_e))
+    np.testing.assert_array_equal(np.asarray(fixed.round.tau_elap),
+                                  np.asarray(elast.round.tau_elap))
+    np.testing.assert_array_equal(np.asarray(fixed.round.n_cis),
+                                  np.asarray(elast.round.n_cis))
+
+
+def test_budget_vector_realizes_exactly():
+    env = _env()
+    s = _sched(env, bandwidth=2.0, k_max=8)
+    bud = np.array([0, 3, 0, 8, 1, 0, 5, 8, 0, 2, 7, 4])
+    ids, _ = s.run_rounds(_feeds(12), budgets=bud)
+    np.testing.assert_array_equal(_counts(ids), bud)
+    # Masked tail rows are id -1; live rows are unique real pages.
+    ids_np = np.asarray(ids)
+    for r in range(12):
+        live = ids_np[r][ids_np[r] >= 0]
+        assert live.size == bud[r]
+        assert np.unique(live).size == live.size
+
+
+def test_zero_budget_rounds_observe_but_do_not_crawl():
+    """k=0 rounds are pure observation: no winners, but tau still advances
+    and the round's CIS feed still lands in the signal state."""
+    env = _env()
+    s = _sched(env, bandwidth=2.0, k_max=4)
+    feeds = _feeds(8, seed=3)
+    tau0 = np.asarray(s.round.tau_elap).copy()
+    n0 = np.asarray(s.round.n_cis).copy()
+    ids, _ = s.run_rounds(feeds, budgets=np.zeros(8, np.int64))
+    assert (np.asarray(ids) == -1).all()
+    np.testing.assert_allclose(np.asarray(s.round.tau_elap),
+                               tau0 + 8 * DT, rtol=1e-6)
+    dn = np.asarray(s.round.n_cis) - n0
+    np.testing.assert_array_equal(dn[:M], feeds.sum(axis=0))
+
+
+def test_budget_at_corpus_size_crawls_everything():
+    """k_max past m clamps to m; a budget at the clamp crawls every page."""
+    env = _env(m=64)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=4.0, round_period=DT,
+                       backend=be.FusedBackend(block_rows=8), k_max=500)
+    assert s.k_cap == 64
+    ids, _ = s.run_rounds(_feeds(4, m=64), budgets=np.full(4, 64))
+    ids_np = np.asarray(ids)
+    np.testing.assert_array_equal(_counts(ids), np.full(4, 64))
+    for r in range(4):
+        np.testing.assert_array_equal(np.sort(ids_np[r]), np.arange(64))
+
+
+def test_budget_validation():
+    env = _env()
+    s = _sched(env, bandwidth=2.0, k_max=4)
+    feeds = _feeds(4)
+    with pytest.raises(CapacityExceeded):
+        s.run_rounds(feeds, budgets=np.array([1, 5, 0, 0]))
+    with pytest.raises(FeedValidationError):
+        s.run_rounds(feeds, budgets=np.array([0.5, 1, 1, 1]))
+    with pytest.raises(FeedValidationError):
+        s.run_rounds(feeds, budgets=np.array([-1, 1, 1, 1]))
+    with pytest.raises(FeedValidationError):
+        s.run_rounds(feeds, budgets=np.array([1, 1, 1]))
+    dense = CrawlScheduler(env, _mesh1(), bandwidth=2.0, round_period=DT,
+                           backend=be.DenseBackend())
+    with pytest.raises(FeedValidationError):
+        dense.run_rounds(feeds, budgets=np.array([1, 1, 1, 1]))
+
+
+@settings(max_examples=4, deadline=None)
+@given(bud=strategies.budget_vectors(n_rounds=8, k_cap=6))
+def test_budget_vector_property(bud):
+    """Any bounded budget vector realizes exactly, with unique live pages
+    and -1 padding past each round's budget."""
+    env = _env(m=256)
+    s = CrawlScheduler(env, _mesh1(), bandwidth=2.0, round_period=DT,
+                       backend=be.FusedBackend(block_rows=8), k_max=6)
+    ids, vals = s.run_rounds(_feeds(8, m=256), budgets=bud)
+    ids_np, vals_np = np.asarray(ids), np.asarray(vals)
+    np.testing.assert_array_equal(_counts(ids), bud)
+    for r in range(8):
+        live = ids_np[r][ids_np[r] >= 0]
+        assert np.unique(live).size == live.size
+        assert (ids_np[r][int(bud[r]):] == -1).all()
+        assert not np.isfinite(vals_np[r][int(bud[r]):]).any()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: spike-free token-bucket emission + satellite: rounding drift.
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_window_bound():
+    """emission="smooth" at a fractional rate: over ANY window of W rounds
+    the realized crawl count is within +-1 of rate * W, and the fractional
+    residue carries across macro-round boundaries (long-run rate exact)."""
+    env = _env()
+    rate = 2.5  # crawls per round
+    s = _sched(env, bandwidth=rate / DT, k_max=4, emission="smooth")
+    counts = np.concatenate([
+        _counts(s.run_rounds(_feeds(64, seed=10 + i))[0]) for i in range(2)])
+    assert counts.sum() == int(rate * 128)  # residue exact across batches
+    for W in (4, 16, 64):
+        win = np.convolve(counts, np.ones(W, int), mode="valid")
+        dev = np.abs(win - rate * W).max()
+        assert dev <= 1.0, (W, dev)
+
+
+def test_fixed_k_rounding_drift_regression():
+    """The satellite bug: fixed emission floors bandwidth * round_period
+    once (int(round(2.5)) == 2) and crawls 2/round forever — a standing
+    20% bandwidth shortfall at rate 2.5. emission="smooth" realizes the
+    exact long-run rate instead."""
+    env = _env()
+    rate = 2.5
+    fixed = _sched(env, bandwidth=rate / DT)
+    assert fixed.k_per_round == 2  # the drift, documented
+    ids_f, _ = fixed.run_rounds(_feeds(32))
+    assert _counts(ids_f).sum() == 2 * 32  # 64 crawls where 80 were due
+    smooth = _sched(env, bandwidth=rate / DT, k_max=3, emission="smooth")
+    ids_s, _ = smooth.run_rounds(_feeds(32))
+    assert abs(int(_counts(ids_s).sum()) - rate * 32) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: recompile-free mid-flight rate changes.
+# ---------------------------------------------------------------------------
+
+def test_set_bandwidth_and_budget_sweep_no_rejit():
+    """With k_max pinned, bandwidth values and budget vectors are pure
+    data: after warm-up, sweeping either never grows the jit cache."""
+    env = _env()
+    s = _sched(env, bandwidth=2.5 / DT, k_max=4, emission="smooth",
+               feed_cap=64)
+    s.run_rounds(_feeds(16, seed=20))
+    s.run_rounds(_feeds(16, seed=21))  # warm-up: cold + donated signatures
+    n0 = be.crawl_rounds._cache_size()
+    totals = []
+    for i, bw in enumerate((0.75 / DT, 1.25 / DT, 2.5 / DT, 4.0 / DT)):
+        s.set_bandwidth(bw)
+        ids, _ = s.run_rounds(_feeds(16, seed=30 + i))
+        totals.append(int(_counts(ids).sum()))
+    assert be.crawl_rounds._cache_size() == n0
+    # ... and the swept rates actually realized (within the +-1 residue).
+    for tot, bw in zip(totals, (0.75, 1.25, 2.5, 4.0)):
+        assert abs(tot - bw * 16) <= 1, (tot, bw)
+
+    s2 = _sched(env, bandwidth=2.0, k_max=6, feed_cap=64)
+    bud = strategies.build_budget_vector(16, 6, "mixed", seed=5)
+    s2.run_rounds(_feeds(16, seed=40), budgets=bud)
+    s2.run_rounds(_feeds(16, seed=41), budgets=bud)
+    n1 = be.crawl_rounds._cache_size()
+    for i, kind in enumerate(("zero_runs", "ramp", "extremes", "constant")):
+        b = strategies.build_budget_vector(16, 6, kind, seed=i)
+        ids, _ = s2.run_rounds(_feeds(16, seed=50 + i), budgets=b)
+        np.testing.assert_array_equal(_counts(ids), b)
+    assert be.crawl_rounds._cache_size() == n1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: candidate-depth watermark floor at k_cap, not this round's k.
+# ---------------------------------------------------------------------------
+
+def test_cand_floor_holds_at_cap_under_budget_ramp():
+    """A depth adapted down during a low-bandwidth stretch must re-grow to
+    cover k_cap — not the current round's k — before a budget vector ramps
+    to the cap inside one compiled batch. With the floor computed at the
+    round's k (the bug), shard_budget's capacity clamp cuts k_loc under the
+    global top-k requirement and the ramp batch dies mid-compile."""
+    env = _env(m=1024, seed=2)
+    k_max, R = 512, 32
+    ramp = np.linspace(0, k_max, R).round().astype(np.int64)
+    feeds = _feeds(R, m=1024, seed=7)
+    # Depth adapted down to 1 (as a quiet stretch would), floor bug bait:
+    # bandwidth 1/round keeps the old floor at 1, far under the cap's need.
+    shrunk = CrawlScheduler(
+        env, _mesh1(), bandwidth=1.0 / DT, round_period=DT,
+        backend=be.FusedBackend(block_rows=8, adaptive_cand=True,
+                                cand_per_lane=1),
+        k_max=k_max)
+    ids_s, _ = shrunk.run_rounds(feeds, budgets=ramp)
+    assert shrunk.backend.cand_per_lane >= shrunk._cand_floor(k_max)
+    # Reference: same rounds at the never-shrunk auto depth (established
+    # dense-exact). Selection must match page-id-for-page-id.
+    ref = CrawlScheduler(
+        env, _mesh1(), bandwidth=1.0 / DT, round_period=DT,
+        backend=be.FusedBackend(block_rows=8), k_max=k_max)
+    ids_r, _ = ref.run_rounds(feeds, budgets=ramp)
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_r))
+    np.testing.assert_array_equal(_counts(ids_s), ramp)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: mid-flight halve-then-double vs the simulator's re-solved
+# discrete optimum, segment by segment, with a flat jit cache.
+# ---------------------------------------------------------------------------
+
+def test_halve_then_double_matches_resolved_simulator_optimum():
+    from test_fidelity import _freshness, _realized_trace
+
+    m, cap, steps, seg = 400, 4, 96, 32
+    key = jax.random.PRNGKey(11)
+    env = uniform_instance(jax.random.fold_in(key, 1), m)
+    cfg = SimConfig(dt=DT, n_steps=steps, k_per_tick=cap,
+                    value_impl="exact")
+    changes, arrivals = _realized_trace(key, env, cfg)
+    mu_t = np.asarray(derive(env).mu_t)
+    k_sched = np.concatenate([np.full(seg, cap), np.full(seg, cap // 2),
+                              np.full(seg, cap)])
+
+    # The simulator re-solves the discrete policy under the same schedule:
+    # per tick, arg-top-k_schedule[t] — the elastic discrete optimum.
+    sim = simulate(key, env, pol.GREEDY_NCIS, cfg, k_schedule=k_sched)
+    sim_trace = np.asarray(sim.trace)
+
+    s = CrawlScheduler(env, _mesh1(), bandwidth=cap / DT, round_period=DT,
+                       backend=be.FusedBackend(block_rows=8,
+                                               adaptive_bounds=True),
+                       k_max=cap,
+                       feed_cap=int(arrivals.sum(axis=1).max()) + 1)
+    # Warm both compiled signatures (cold-state + donated-state) on a twin
+    # so the measured run's cache must stay flat across the rate changes.
+    warm = CrawlScheduler(env, _mesh1(), bandwidth=cap / DT, round_period=DT,
+                          backend=be.FusedBackend(block_rows=8,
+                                                  adaptive_bounds=True),
+                          k_max=cap,
+                          feed_cap=int(arrivals.sum(axis=1).max()) + 1)
+    warm.run_rounds(arrivals[:seg], budgets=k_sched[:seg])
+    warm.run_rounds(arrivals[:seg], budgets=k_sched[:seg])
+    n0 = be.crawl_rounds._cache_size()
+
+    crawls = []
+    for t0 in range(0, steps, seg):
+        ids, _ = s.run_rounds(arrivals[t0:t0 + seg],
+                              budgets=k_sched[t0:t0 + seg])
+        crawls.extend(np.asarray(ids))
+    assert be.crawl_rounds._cache_size() == n0  # halve/double: pure data
+
+    # Per-round realized counts follow the schedule exactly.
+    np.testing.assert_array_equal(
+        np.asarray([(c >= 0).sum() for c in crawls]), k_sched)
+
+    # Importance-weighted freshness per segment within 2% of the re-solved
+    # optimum (same realized trace, same exact freshness integral).
+    stale = np.zeros((m,), bool)
+    trace = []
+    for t in range(steps):
+        sel = crawls[t][crawls[t] >= 0]
+        crawled = np.zeros((m,), bool)
+        crawled[sel] = True
+        frac = np.where((~stale) | crawled, 1.0 / (changes[t] + 1.0), 0.0)
+        trace.append(float(np.sum(mu_t * frac)))
+        stale = (stale & ~crawled) | (changes[t] > 0)
+    trace = np.asarray(trace)
+    for t0 in range(0, steps, seg):
+        np.testing.assert_allclose(trace[t0:t0 + seg].mean(),
+                                   sim_trace[t0:t0 + seg].mean(), rtol=0.02)
+    # The halved middle segment really crawled half as much.
+    assert sum((c >= 0).sum() for c in crawls[seg:2 * seg]) == (cap // 2) * seg
+
+
+# ---------------------------------------------------------------------------
+# Smooth emission state rides checkpoints.
+# ---------------------------------------------------------------------------
+
+def test_emit_residue_survives_checkpoint():
+    env = _env()
+    rate = 2.5
+    s = _sched(env, bandwidth=rate / DT, k_max=4, emission="smooth")
+    c1 = _counts(s.run_rounds(_feeds(7, seed=60))[0])
+    sd = jax.device_get(s.state_dict())
+    # Continue live vs restore-and-continue: identical emission pattern
+    # only if the fractional residue survived the round trip.
+    c2 = _counts(s.run_rounds(_feeds(9, seed=61))[0])
+    r = _sched(env, bandwidth=rate / DT, k_max=4, emission="smooth")
+    r.load_state_dict(sd)
+    c3 = _counts(r.run_rounds(_feeds(9, seed=61))[0])
+    np.testing.assert_array_equal(c2, c3)
+    assert c1.sum() + c2.sum() == int(rate * 16)

@@ -59,7 +59,9 @@ def _freshness(mu_t, crawls, changes):
     trace = []
     for t in range(changes.shape[0]):
         crawled = np.zeros((m,), bool)
-        crawled[crawls[t]] = True
+        sel = np.asarray(crawls[t]).reshape(-1)
+        # Elastic rounds pad slots past the round's budget with id -1.
+        crawled[sel[sel >= 0]] = True
         fresh_after_crawl = (~stale) | crawled
         frac = np.where(fresh_after_crawl, 1.0 / (changes[t] + 1.0), 0.0)
         trace.append(float(np.sum(mu_t * frac)))
