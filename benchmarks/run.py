@@ -20,11 +20,12 @@ def main() -> None:
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
-    from benchmarks import figures, kernel_bench, roofline
+    from benchmarks import figures, kernel_bench, roofline, scenario_bench
 
     jobs = [(f.__name__, f) for f in figures.ALL]
     jobs += [("kernel_bench", kernel_bench.kernel_bench),
              ("sched_bench", kernel_bench.sched_bench),
+             ("scenario_bench", scenario_bench.scenario_bench),
              ("roofline", roofline.build_table)]
 
     print("name,us_per_call,derived")

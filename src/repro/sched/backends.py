@@ -193,6 +193,18 @@ class FusedState(NamedTuple):
     #                         been engaged (same empty-pytree trick as
     #                         `est`: fixed-k paths keep byte-identical jit
     #                         signatures and checkpoints)
+    # --- degraded-mode staleness watchdog (appended; FusedBackend.degraded)
+    stale: Any = None       # (n_blocks,) i32 rounds since the block last
+    #                         received ANY CIS — the on-device outage
+    #                         watchdog. Rides the macro-round carry; a block
+    #                         at stale >= FusedBackend.stale_limit is
+    #                         flagged silent: its bound is inflated to the
+    #                         static asymptote (skips can't hide changes
+    #                         behind a dead channel), selection sees the
+    #                         expected-missed-CIS compensation, and its
+    #                         pages' outcome ingestion is quarantined. None
+    #                         when degraded is off (same empty-pytree trick
+    #                         as `est`/`emit_res`)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -352,10 +364,11 @@ class _FusedShardUpd(NamedTuple):
     blkmax: jax.Array
     last_ev: jax.Array
     cmass: jax.Array
+    stale: Any = None  # (nb_local,) i32 watchdog rows (degraded mode only)
 
 
 def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
-                       k_loc, cand, impl, dt, k_loc_dyn=None):
+                       k_loc, cand, impl, dt, k_loc_dyn=None, stale=None):
     """One shard-local fused selection + skip-control update — THE shared
     body of the sequential `FusedBackend.select` and every round of the
     macro scan (`crawl_rounds`), so the two paths are bit-identical by
@@ -371,7 +384,27 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
     (`kernels.select` k_dyn); the warm-start threshold is seeded from the
     *dynamic* k-th value — and carried unchanged through zero-budget
     rounds, where no k-th value exists (sound for any carried threshold:
-    an over-tight one only prices a dense fallback, never exactness)."""
+    an over-tight one only prices a dense fallback, never exactness).
+
+    stale: (nb_local,) i32 watchdog rows when the backend is degraded-mode
+    (None otherwise; requires blk_cis). Blocks silent for stale_limit
+    rounds get (a) their bound inflated to the static asymptote — the
+    slope-decayed anchor assumed value growth the dead channel can no
+    longer report, and compensated values can jump discontinuously above
+    it, so only the unconditional V <= V_INF cap stays sound — and (b)
+    expected-missed-CIS compensation: selection sees
+    n_eff = n + gamma_page * min(stale * dt, tau_elap), the conditional
+    expectation of the CIS censored by the dead channel (GAMMA is the
+    observed-signal rate lam*delta + nu). The window is capped per page at
+    its own elapsed time since last crawl: a page crawled one round ago
+    inside a long-dark block has missed at most one round of signals —
+    uncapped block-level compensation would hand freshly-crawled dark
+    pages the whole block's phantom signal mass and funnel the crawl
+    budget into the outage. Healthy blocks add exactly 0.0 (min(0, tau)
+    is 0 for tau >= 0), and n + 0.0 is the IEEE identity for n >= 0, so
+    an all-healthy degraded round stays bit-identical to the non-degraded
+    path."""
+    from repro.kernels import layout
     from repro.kernels import select as ksel
     from repro.sched import tiered
 
@@ -384,6 +417,32 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
         )
     else:
         bound = ctx.asym
+    new_stale = None
+    if stale is not None:
+        assert blk_cis is not None, "degraded mode needs per-block CIS counts"
+        # Watchdog tick: any delivered signal proves the channel alive.
+        new_stale = jnp.where(blk_cis > 0, jnp.int32(0),
+                              stale + jnp.int32(1))
+        silent = new_stale >= jnp.int32(backend.stale_limit)
+        comp_blk = jnp.where(
+            silent, new_stale.astype(jnp.float32) * jnp.float32(dt), 0.0)
+        inner_fn = state_fn
+
+        def state_fn(i):  # compensated view of the same page state
+            tau_b, n_b = inner_fn(i)
+            env_b = jax.lax.dynamic_index_in_dim(env_shard, i, 0,
+                                                 keepdims=False)
+            win = jnp.minimum(comp_blk[i], tau_b)
+            return tau_b, n_b + win * env_b[layout.GAMMA]
+
+        if dense_state is not None:
+            tau_d, n_d = dense_state
+            bp = env_shard.shape[2] * env_shard.shape[3]
+            gamma_flat = env_shard[:, layout.GAMMA].reshape(-1)
+            comp_page = jnp.minimum(jnp.repeat(comp_blk, bp), tau_d)
+            dense_state = (tau_d,
+                           n_d.astype(jnp.float32) + comp_page * gamma_flat)
+        bound = jnp.where(silent, ctx.asym, bound)
     sel = ksel.fused_select_from(
         state_fn, env_shard, k_loc, ctx.thresh, bound,
         n_terms=backend.n_terms, cand_per_lane=cand, impl=impl,
@@ -449,7 +508,8 @@ def _fused_shard_round(backend, state_fn, dense_state, env_shard, ctx, blk_cis,
         DEPTH_HOT_CAP)
     return sel, _FusedShardUpd(thresh=new_thresh, hyst=h, colw=colw,
                                dhot=dhot, blkmax=new_blkmax,
-                               last_ev=new_last, cmass=new_cmass)
+                               last_ev=new_last, cmass=new_cmass,
+                               stale=new_stale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -508,6 +568,24 @@ class FusedBackend:
         with est_prior_w pseudo-observations' weight per statistic group
         (the closed-loop explore/exploit guard — see
         `estimation.stream_quality`).
+
+    Degraded mode (`sched.degraded`, opt-in):
+
+      * degraded: carry a per-block rounds-since-last-CIS watchdog plane
+        (`FusedState.stale`) through the scan. A block silent for
+        stale_limit rounds is treated as suffering a signal-channel outage:
+        its skip bound inflates to the static asymptote (a dead channel
+        must not let skips hide changes), selection values see the
+        expected-missed-CIS compensation
+        n + gamma * min(stale * dt, tau_elap) (per-page window, capped at
+        time since that page's own last crawl), and —
+        with online_est — outcome ingestion for its pages is quarantined
+        so censored windows cannot drive the streaming (alpha, b, gamma)
+        estimates toward zero. With every channel healthy the degraded
+        path selects bit-identically to degraded=False (compensation is
+        exactly 0.0 and bound inflation a no-op); with degraded=False no
+        new operand is traced at all, so legacy jit signatures and
+        checkpoints stay byte-identical.
     """
 
     n_terms: int = 8
@@ -529,6 +607,8 @@ class FusedBackend:
     est_prior_a: float = 0.5
     est_prior_b: float = 1.0
     est_prior_w: float = 8.0
+    degraded: bool = False
+    stale_limit: int = 8
 
     def init(self, env: Env, mesh: Mesh) -> BackendInit:
         from repro.kernels import layout
@@ -572,6 +652,8 @@ class FusedBackend:
             cis_mass=_put(jnp.zeros(bb.asym.shape, jnp.float32), mesh, pspec),
             depth_hot=_put(jnp.zeros((n_shards,), jnp.int32), mesh, pspec),
             est=self._init_est(m_state, lambda x: _put(x, mesh, pspec)),
+            stale=self._init_stale(bb.asym.shape,
+                                   lambda x: _put(x, mesh, pspec)),
         )
         return BackendInit(m_state, bstate, d, None)
 
@@ -583,6 +665,17 @@ class FusedBackend:
         from repro.sched import online_est as oest
 
         return jax.tree.map(put, oest.init_est(m_state))
+
+    def _init_stale(self, nb_shape, put):
+        """The per-block watchdog rows (None when degraded is off); `put`
+        places one (n_blocks,) row with the block-row sharding. Zero =
+        'heard from just now', so a fresh state starts every channel
+        presumed healthy."""
+        if not self.degraded:
+            return None
+        if self.stale_limit < 1:
+            raise ValueError("stale_limit must be >= 1")
+        return put(jnp.zeros(nb_shape, jnp.int32))
 
     def init_local(self, env_local: Env, mesh: Mesh, *, m: int,
                    host_shards: tuple[int, int],
@@ -646,6 +739,7 @@ class FusedBackend:
             cis_mass=hla(jnp.zeros(bb.asym.shape, jnp.float32), row),
             depth_hot=hla(jnp.zeros((n_loc,), jnp.int32), row),
             est=self._init_est(local_len, lambda x: hla(x, row)),
+            stale=self._init_stale(bb.asym.shape, lambda x: hla(x, row)),
         )
         return m_state, bstate
 
@@ -680,16 +774,24 @@ class FusedBackend:
         if new_cis is None:
             new_cis = jnp.zeros_like(state.n_cis)
 
+        degr = self.degraded
+        if degr and bst.stale is None:
+            raise ValueError(
+                "degraded backend with no watchdog plane in FusedState — "
+                "the state was built by a non-degraded backend config; "
+                "rebuild the scheduler (or restore into a degraded one)")
+
         def shard_fn(tau_elap, n_cis, cis_feed, env_shard, asym, slope,
                      blkmax, last_ev, betam, cmass, thresh_shard, hyst_shard,
-                     colw_shard, dhot_shard, clock):
+                     colw_shard, dhot_shard, clock, *extra):
             # thresh_shard is this shard's OWN slice: the local k-th candidate
             # value of the previous round — sound to compare against local
             # block bounds (the ROADMAP per-shard threshold exchange).
+            stale = extra[0] if degr else None
             thresh = (thresh_shard[0] if self.warm_start
                       else jnp.float32(-jnp.inf))
             blk_cis = (cis_feed.reshape(asym.shape[0], -1).sum(axis=1)
-                       if self.adaptive_bounds else None)
+                       if (self.adaptive_bounds or degr) else None)
             n_f = n_cis.astype(jnp.float32)
             sel, upd = _fused_shard_round(
                 self, ksel.block_state_fn(tau_elap, n_f, env_shard.shape[2]),
@@ -699,36 +801,45 @@ class FusedBackend:
                                thresh=thresh, hyst=hyst_shard[0],
                                colw=colw_shard[0], dhot=dhot_shard[0],
                                clock=clock),
-                blk_cis, k_loc, cand, impl, dt,
+                blk_cis, k_loc, cand, impl, dt, stale=stale,
             )
             m_local = tau_elap.shape[0]
             top_g, top_v, mask = _global_topk(sel.values, sel.ids, axes,
                                               m_local, k)
-            return (top_g, top_v, mask, upd.thresh.reshape(1),
-                    sel.frac_active.reshape(1), sel.fell_back.reshape(1),
-                    upd.blkmax, upd.last_ev, upd.cmass, upd.hyst.reshape(1),
-                    upd.colw.reshape(1), upd.dhot.reshape(1))
+            out = (top_g, top_v, mask, upd.thresh.reshape(1),
+                   sel.frac_active.reshape(1), sel.fell_back.reshape(1),
+                   upd.blkmax, upd.last_ev, upd.cmass, upd.hyst.reshape(1),
+                   upd.colw.reshape(1), upd.dhot.reshape(1))
+            if degr:
+                out = out + (upd.stale,)
+            return out
 
+        extra_in = (pspec,) if degr else ()
+        extra_out = (pspec,) if degr else ()
+        extra_args = (bst.stale,) if degr else ()
         fn = _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(pspec, pspec, pspec, P(axes, None, None, None),
                       pspec, pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                      pspec, pspec, P()),
+                      pspec, pspec, P()) + extra_in,
             out_specs=(P(), P(), pspec, pspec, pspec, pspec,
-                       pspec, pspec, pspec, pspec, pspec, pspec),
+                       pspec, pspec, pspec, pspec, pspec, pspec) + extra_out,
         )
-        (top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, cmass, hyst,
-         colw, dhot) = fn(
+        res = fn(
             state.tau_elap, state.n_cis, new_cis, bst.env_planes, bst.bounds,
             bst.slope, bst.blk_max, bst.last_eval, bst.beta_max, bst.cis_mass,
             bst.thresh, bst.hyst, bst.col_winners, bst.depth_hot,
-            state.crawl_clock,
+            state.crawl_clock, *extra_args,
         )
-        new_bst = bst._replace(thresh=thresh, frac_active=frac, fell_back=fb,
-                               blk_max=blkmax, last_eval=last_ev,
-                               cis_mass=cmass, hyst=hyst, col_winners=colw,
-                               depth_hot=dhot)
+        (top_g, top_v, mask, thresh, frac, fb, blkmax, last_ev, cmass, hyst,
+         colw, dhot) = res[:12]
+        repl = dict(thresh=thresh, frac_active=frac, fell_back=fb,
+                    blk_max=blkmax, last_eval=last_ev, cis_mass=cmass,
+                    hyst=hyst, col_winners=colw, depth_hot=dhot)
+        if degr:
+            repl["stale"] = res[12]
+        new_bst = bst._replace(**repl)
         return top_g, top_v, mask, new_bst
 
     def update_pages(self, bstate, page_ids, d_new, block_ids=None, *,
@@ -1095,10 +1206,17 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             "smooth emission needs the token-bucket residue plane "
             "(FusedState.emit_res) — CrawlScheduler(emission='smooth') "
             "attaches it; or pass an explicit budgets vector")
+    degr = backend.degraded
+    if degr and bst.stale is None:
+        raise ValueError(
+            "degraded backend with no watchdog plane in FusedState — the "
+            "state was built by a non-degraded backend config; rebuild the "
+            "scheduler (or restore into a degraded one)")
     # Scan-carry layout past the 10 base slots (python-level indices — the
     # conditional operands keep every legacy trace byte-identical).
     res_ix = 10 if rate is not None else None
     est_ix = 10 + (1 if rate is not None else 0)
+    stale_ix = 10 + (1 if rate is not None else 0) + (1 if est_on else 0)
 
     def shard_fn(tau0, n0, fid, fcnt, env_shard, asym, slope, blkmax0, last0,
                  betam, cmass0, thresh0, hyst0, colw0, dhot0, clock0,
@@ -1114,11 +1232,13 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
         fid = fid.reshape(R, -1)
         fcnt = fcnt.reshape(R, -1)
         if est_on:
-            oid, ochg, otau, ocis, est0 = ex
+            oid, ochg, otau, ocis, est0 = ex[:5]
+            ex = ex[5:]
             oid = oid.reshape(R, -1)
             ochg = ochg.reshape(R, -1)
             otau = otau.reshape(R, -1)
             ocis = ocis.reshape(R, -1)
+        stale0 = ex.pop(0) if degr else None
         o0 = 3 if budgets is not None else 2  # outcome slices' xs offset
 
         def step(carry, xs):
@@ -1146,7 +1266,7 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                 res = bucket - k_r.astype(jnp.float32)
             k_loc_dyn = (jnp.minimum(k_r, jnp.int32(k_loc)) if dyn
                          else None)
-            if backend.adaptive_bounds:
+            if backend.adaptive_bounds or degr:
                 # Per-block CIS counts via the same sparse scatter (exact:
                 # integer sums in any order equal the dense reduction).
                 blk_cis = jnp.zeros((nb_local,), jnp.int32).at[
@@ -1167,6 +1287,7 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                                thresh=thresh, hyst=hyst_s, colw=colw_s,
                                dhot=dhot_s, clock=clock),
                 blk_cis, k_loc, cand, impl, dt, k_loc_dyn=k_loc_dyn,
+                stale=carry[stale_ix] if degr else None,
             )
             top_g, top_v, idx = _global_winners(
                 sel.values, sel.ids, axes, m_local, k,
@@ -1178,8 +1299,17 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                 orel = xs[o0] - local_start
                 oidx = jnp.where((orel >= 0) & (orel < m_local), orel,
                                  m_local)
+                quar = None
+                if degr:
+                    # Estimator quarantine: a crawl window that overlapped
+                    # a flagged-silent channel is censored evidence — its
+                    # n_cis understates the signals that actually fired,
+                    # and ingesting it would drive gamma/alpha toward zero.
+                    silent_b = upd.stale >= jnp.int32(backend.stale_limit)
+                    quar = silent_b.at[oidx // bp].get(mode="clip")
                 est = oest.ingest_outcomes(carry[est_ix], oidx, xs[o0 + 1],
-                                           xs[o0 + 2], xs[o0 + 3])
+                                           xs[o0 + 2], xs[o0 + 3],
+                                           quarantine=quar)
             # Winner resets touch only the k crawled pages and the feed
             # ingest only the nnz fed pages (no O(m) mask / dense add):
             # tau drops to one round period and n to 0-then-feed — both
@@ -1196,6 +1326,8 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                 carry = carry + (res,)
             if est_on:
                 carry = carry + (est,)
+            if degr:
+                carry = carry + (upd.stale,)
             ys = (top_g, top_v, sel.frac_active, sel.fell_back, upd.hyst,
                   upd.colw, upd.dhot)
             return carry, ys
@@ -1206,6 +1338,8 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             carry0 = carry0 + (res0[0],)
         if est_on:
             carry0 = carry0 + (est0,)
+        if degr:
+            carry0 = carry0 + (stale0,)
         xs = (fid, fcnt)
         if budgets is not None:
             xs = xs + (bud,)
@@ -1240,6 +1374,8 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
             out = out + (carry[res_ix].reshape(1),)
         if est_on:
             out = out + (env2, bb2.asym, bb2.slope, betam2, est)
+        if degr:
+            out = out + (carry[stale_ix],)
         return out
 
     base_in = (pspec, pspec, P(None, axes, None), P(None, axes, None),
@@ -1271,6 +1407,10 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
                       est_spec)
         extra_args += (outcomes.ids, outcomes.changed, outcomes.tau,
                        outcomes.n_cis, bst.est)
+    if degr:
+        extra_in += (pspec,)
+        extra_out += (pspec,)
+        extra_args += (bst.stale,)
     fn = _shard_map(shard_fn, mesh=mesh, in_specs=base_in + extra_in,
                     out_specs=base_out + extra_out)
     res_all = fn(*base_args, *extra_args)
@@ -1283,9 +1423,12 @@ def _fused_macro_rounds(backend: FusedBackend, state: RoundState,
     if rate is not None:
         repl["emit_res"] = rest.pop(0)
     if est_on:
-        env_planes, asym, slope, betam, est = rest
+        env_planes, asym, slope, betam, est = rest[:5]
+        rest = rest[5:]
         repl.update(env_planes=env_planes, bounds=asym, slope=slope,
                     beta_max=betam, est=est)
+    if degr:
+        repl["stale"] = rest.pop(0)
     new_bst = bst._replace(**repl)
     new_state = RoundState(
         tau_elap=tau, n_cis=n, crawl_clock=state.crawl_clock + R,

@@ -1,0 +1,117 @@
+"""Degraded-mode host-side machinery: outcome-echo dedup and bounded retry.
+
+The on-device half of degraded mode (the per-block staleness watchdog, bound
+inflation for silent blocks, expected-missed-CIS compensation, and estimator
+quarantine) lives in `sched/backends.py` behind `FusedBackend(degraded=True)`.
+This module is the host-side half: the outcome-echo path from a crawler fleet
+is a distributed feed in its own right, and under faults it delivers batches
+late, twice, or out of order. Scattering a duplicate batch into the streaming
+estimator double-counts observations (`StreamStats` has no idempotence), so
+delivery must be gated *before* `run_rounds`.
+
+`OutcomeGate` dedupes against a small sliding sequence window — O(window)
+memory, no unbounded seen-set — and `retry_with_backoff` wraps flaky delivery
+callables with bounded exponential backoff (sleep injectable for tests).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class OutcomeGate:
+    """Sliding-window sequence gate for outcome-echo batches.
+
+    `offer(seq, batch)` returns the batch when it should be ingested and
+    None when it must be discarded:
+
+    - duplicates of a sequence number already accepted inside the window
+      are dropped (the double-scatter bug this exists to prevent);
+    - batches older than the window tail are dropped — they raced a
+      restart or were retried past their usefulness, and accepting them
+      could alias a recycled sequence number;
+    - otherwise the batch is accepted (out-of-order within the window is
+      fine: `ingest_outcomes` keeps per-page *last-write* semantics, and a
+      slightly stale estimate update is still a valid observation).
+
+    The window is a set of accepted sequence numbers pruned to the last
+    `window` values below the high-water mark, so memory is O(window) no
+    matter how long the stream runs.
+    """
+
+    def __init__(self, window: int = 64):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self._seen: set = set()
+        self._high = -1
+        self.accepted = 0
+        self.dropped_dup = 0
+        self.dropped_stale = 0
+
+    def offer(self, seq: int, batch: Optional[T]) -> Optional[T]:
+        seq = int(seq)
+        if seq < 0:
+            raise ValueError("sequence numbers must be >= 0")
+        if seq <= self._high - self.window:
+            self.dropped_stale += 1
+            return None
+        if seq in self._seen:
+            self.dropped_dup += 1
+            return None
+        self._seen.add(seq)
+        if seq > self._high:
+            self._high = seq
+            floor = self._high - self.window
+            self._seen = {s for s in self._seen if s > floor}
+        self.accepted += 1
+        return batch
+
+    def state_dict(self) -> dict:
+        return {
+            "window": self.window,
+            "high": self._high,
+            "seen": sorted(self._seen),
+        }
+
+    @classmethod
+    def from_state_dict(cls, sd: dict) -> "OutcomeGate":
+        gate = cls(window=int(sd["window"]))
+        gate._high = int(sd["high"])
+        gate._seen = set(int(s) for s in sd["seen"])
+        return gate
+
+
+def retry_with_backoff(
+    fn: Callable[[], T],
+    *,
+    max_attempts: int = 4,
+    base_delay: float = 0.05,
+    max_delay: float = 2.0,
+    retry_on: tuple = (OSError, TimeoutError),
+    sleep: Callable[[float], None] = None,
+) -> T:
+    """Call `fn` with bounded exponential backoff on transient errors.
+
+    Retries only exceptions in `retry_on` (validation errors from
+    `sched.errors` are not transient and propagate immediately); the final
+    attempt's exception propagates. `sleep` is injectable so tests assert
+    the backoff sequence without wall-clock time.
+    """
+    if max_attempts < 1:
+        raise ValueError("max_attempts must be >= 1")
+    if sleep is None:
+        import time
+
+        sleep = time.sleep
+    delay = float(base_delay)
+    for attempt in range(max_attempts):
+        try:
+            return fn()
+        except retry_on:
+            if attempt == max_attempts - 1:
+                raise
+            sleep(delay)
+            delay = min(delay * 2.0, float(max_delay))
+    raise AssertionError("unreachable")

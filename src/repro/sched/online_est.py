@@ -85,7 +85,9 @@ def init_est(m_state: int) -> estimation.StreamStats:
 
 def ingest_outcomes(stats: estimation.StreamStats, oidx: jax.Array,
                     changed: jax.Array, tau: jax.Array,
-                    n_cis: jax.Array) -> estimation.StreamStats:
+                    n_cis: jax.Array,
+                    quarantine: jax.Array | None = None
+                    ) -> estimation.StreamStats:
     """Fold one round's outcome slice into the streaming statistics.
 
     oidx: (cap,) shard-LOCAL page indices with the out-of-bounds sentinel
@@ -93,10 +95,20 @@ def ingest_outcomes(stats: estimation.StreamStats, oidx: jax.Array,
     (cap,) the crawled window's covariates (tau < 0 = padding row). O(cap)
     gathers + scatters; a page id may appear at most once per call (COO
     cells are id-unique per round).
+
+    quarantine: optional (cap,) bool — rows flagged True are discarded
+    without touching the statistics. The degraded-mode watchdog
+    (`FusedBackend(degraded=True)`) flags outcomes of pages whose signal
+    channel is silent: their crawled window's n_cis is censored (signals
+    fired but never arrived), and folding it in would bias the streaming
+    gamma/alpha estimates toward zero. None skips the mask entirely, so
+    healthy callers trace no extra operation.
     """
     m_local = stats.n_obs.shape[0]
     tau = jnp.asarray(tau, jnp.float32)
     live = (oidx >= 0) & (oidx < m_local) & (tau >= 0.0)
+    if quarantine is not None:
+        live = live & ~quarantine
     idx = jnp.where(live, oidx, m_local)
     row = estimation.StreamStats(
         *(p.at[oidx].get(mode="clip") for p in stats))

@@ -59,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import estimation
 from repro.core.values import DerivedEnv, Env, derive
 from repro.sched import backends as be
+from repro.sched.degraded import OutcomeGate
 from repro.sched.distributed import (
     ShardedSchedState,
     host_local_array,
@@ -393,6 +394,25 @@ class CrawlScheduler:
         self.round = dataclasses.replace(
             self.round, backend=bst._replace(emit_res=res))
 
+    def _ensure_stale_plane(self) -> None:
+        """Attach the degraded-mode staleness plane (`FusedState.stale`,
+        one i32 rounds-since-last-CIS counter per block) to a scheduler
+        constructed without `degraded=True` — needed when restoring a
+        degraded-mode checkpoint into it. Same lazy-attach trick as
+        `_ensure_emit_residue`: `None` is an empty pytree, so schedulers
+        that never go near degraded mode keep byte-identical state trees
+        and jit signatures."""
+        bst = self.round.backend
+        if bst.stale is not None:
+            return
+        s0, s1 = host_shard_range(self.mesh)
+        nb_shard = bst.env_planes.shape[0] // self.n_shards
+        stale = host_local_array(
+            np.zeros((s1 - s0) * nb_shard, np.int32), self.mesh,
+            P(self.axes))
+        self.round = dataclasses.replace(
+            self.round, backend=bst._replace(stale=stale))
+
     def set_bandwidth(self, bandwidth: float) -> None:
         """App. D: adapting to a new budget is just a new k — no re-solve.
         Under the elastic paths (emission="smooth" or explicit budget
@@ -685,6 +705,19 @@ class CrawlScheduler:
         n_loc = s1 - s0
         rr, ww = np.nonzero((ids_np >= lo) & (ids_np < hi))
         gid = ids_np[rr, ww].astype(np.int64)
+        if gid.size:
+            # Keep-LAST dedupe per (round, page): `SparseOutcomes` cells
+            # must be id-unique — a page id repeated inside one round's
+            # outcome row would take two streaming-estimator steps off the
+            # same gathered statistics row and the second scatter would
+            # silently drop the first (double-count, then lose one). The
+            # echo path legitimately repeats ids under at-least-once
+            # delivery, so the latest entry wins (matching the estimator's
+            # last-write semantics) rather than raising.
+            key = rr.astype(np.int64) * np.int64(self.m) + gid
+            _, last_rev = np.unique(key[::-1], return_index=True)
+            keep = np.sort(key.size - 1 - last_rev)
+            rr, ww, gid = rr[keep], ww[keep], gid[keep]
         ss = (gid - lo) // ms
         cell = rr * n_loc + ss
         counts = np.bincount(cell, minlength=n_rounds * n_loc)
@@ -713,7 +746,8 @@ class CrawlScheduler:
             tau=host_local_array(out_t, self.mesh, spec),
             n_cis=host_local_array(out_n, self.mesh, spec))
 
-    def run_rounds(self, feeds, outcomes=None, budgets=None):
+    def run_rounds(self, feeds, outcomes=None, budgets=None,
+                   outcome_seq=None):
         """A macro-round: R = len(feeds) rounds under one jitted `lax.scan`
         (`backends.crawl_rounds`) — one dispatch, no mid-loop host sync, and
         for the fused backend O(active + k) instead of O(m) state work per
@@ -766,6 +800,22 @@ class CrawlScheduler:
         across macro-rounds), so realized crawls over any window of W
         rounds stay within +-1 of bandwidth * W * round_period and
         `set_bandwidth` is a pure data update."""
+        if outcome_seq is not None:
+            # Degraded-mode echo gating (`sched.degraded.OutcomeGate`):
+            # under a faulty delivery path the outcome echo arrives late,
+            # twice, or out of order, and a replayed batch would
+            # double-count every observation in the streaming estimator.
+            # Callers that stamp each batch with a monotone sequence number
+            # get host-side dedup against a sliding window — a gated-out
+            # batch degrades to the all-padding batch (signature-stable),
+            # it does not raise.
+            if outcomes is None:
+                raise FeedValidationError(
+                    "run_rounds(outcome_seq=...) requires an outcomes "
+                    "batch to gate")
+            if not hasattr(self, "outcome_gate"):
+                self.outcome_gate = OutcomeGate()
+            outcomes = self.outcome_gate.offer(int(outcome_seq), outcomes)
         est_on = (isinstance(self.backend, be.FusedBackend)
                   and self.backend.online_est)
         fused = isinstance(self.backend, be.FusedBackend)
@@ -1233,6 +1283,18 @@ class CrawlScheduler:
                     # Pre-smoothing snapshot: restore with a clean bucket.
                     snap = snap._replace(emit_res=np.zeros(
                         backend_state.emit_res.shape, np.float32))
+                # Same two-way alignment for the degraded-mode staleness
+                # plane (`FusedState.stale` — lazy like emit_res): restore
+                # a degraded checkpoint into a healthy scheduler by
+                # attaching the plane, and a pre-degraded checkpoint into
+                # a degraded scheduler with fresh (all-zero) counters.
+                snap_stale = getattr(snap, "stale", None)
+                if snap_stale is not None and backend_state.stale is None:
+                    self._ensure_stale_plane()
+                    backend_state = self.round.backend
+                elif snap_stale is None and backend_state.stale is not None:
+                    snap = snap._replace(stale=np.zeros(
+                        backend_state.stale.shape, np.int32))
             # Re-shard each restored leaf like the corresponding live leaf
             # (old checkpoints without backend state keep the cold init).
             backend_state = jax.tree.map(

@@ -5,15 +5,38 @@ from repro.sim.driver import (
     freshness_regret,
     run_closed_loop,
 )
+from repro.sim.faults import (
+    DEFAULT_CHANNELS,
+    ChannelSpec,
+    FaultPlan,
+    FeedFaultInjector,
+    OutageSchedule,
+    OutageWindow,
+    OutcomeFaultInjector,
+    assign_channels,
+    channel_rates,
+    flash_crowd_profile,
+    hawkes_change_counts,
+    random_fault_plan,
+    route_through_channels,
+)
 from repro.sim.instances import (
     TIER_NAMES,
+    MultiChannelInstance,
     TieredCISInstance,
     corrupt_precision_recall,
     env_from_precision_recall,
+    multichannel_instance,
     realworld_instance,
     tiered_cis_instance,
     uniform_instance,
 )
-from repro.sim.simulator import DelayConfig, SimConfig, SimResult, simulate
+from repro.sim.simulator import (
+    DelayConfig,
+    Modulation,
+    SimConfig,
+    SimResult,
+    simulate,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

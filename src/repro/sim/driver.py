@@ -38,6 +38,7 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.core.values import Env
+from repro.sched.errors import FeedValidationError
 
 
 class LoopConfig(NamedTuple):
@@ -57,22 +58,46 @@ class LoopConfig(NamedTuple):
     # >= ceil(max_rate * round_period)). None keeps the scheduler's own
     # fixed bandwidth.
     bandwidth_schedule: Optional[tuple] = None
+    # Hostile-ecosystem knobs (`sim.faults`), all optional:
+    #   fault_plan — a `faults.FaultPlan`: feed rows are dropped / delayed /
+    #     duplicated on their way into run_rounds (`FeedFaultInjector`) and
+    #     outcome-echo batches are dropped / held / duplicated
+    #     (`OutcomeFaultInjector`), with duplicates deduped through a
+    #     `sched.degraded.OutcomeGate` before ingestion.
+    #   cis_mask — (n_batches * R, m) bool: False = the CIS fired but was
+    #     never delivered (a channel outage; build it from
+    #     `faults.OutageSchedule.delivery_mask` + per-page channel ids).
+    #     Changes still happen — only the signal is lost.
+    #   rate_gain — (n_batches * R,) or (n_batches * R, m) float multiplier
+    #     on the per-round CHANGE rates (flash crowds /
+    #     `faults.flash_crowd_profile`, bursty Hawkes-style regimes via a
+    #     precomputed rate trace). False-signal rates are not scaled.
+    fault_plan: Optional[object] = None
+    cis_mask: Optional[object] = None
+    rate_gain: Optional[object] = None
 
 
 class LoopResult(NamedTuple):
     freshness: np.ndarray        # (n_batches * R,) per-tick weighted freshness
     crawls: np.ndarray           # (m,) crawls per page
     obs: tuple                   # flat (ids, tau, n_cis, fresh) crawl log
+    dropped_batches: int = 0     # outcome batches dropped as invalid/dup
+    group_freshness: Optional[np.ndarray] = None  # (ticks, n_groups)
 
 
 def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
-                    mu_t: Optional[np.ndarray] = None) -> LoopResult:
+                    mu_t: Optional[np.ndarray] = None,
+                    groups: Optional[np.ndarray] = None) -> LoopResult:
     """Drive `sched` (a live CrawlScheduler) against `env_true` events.
 
     The scheduler's *belief* is whatever it was constructed with (plus
     whatever its mode learns); events and the freshness integral always
     follow `env_true`. mu_t overrides the normalized importance weights of
-    the freshness integral (defaults to env_true.mu / sum(mu))."""
+    the freshness integral (defaults to env_true.mu / sum(mu)). groups is
+    an optional (m,) int page partition (e.g. signal-quality tiers): when
+    set, `LoopResult.group_freshness` additionally records each group's
+    share of the per-tick integral, so fairness-across-tiers metrics need
+    no extra replay."""
     rng = np.random.default_rng(cfg.seed)
     m = sched.m
     R = int(cfg.rounds_per_batch)
@@ -109,6 +134,47 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
                 "it with a larger k_max")
     bucket = 0.0  # token-bucket residue, carried across batches
 
+    n_total = cfg.n_batches * R
+    cis_mask = None
+    if cfg.cis_mask is not None:
+        cis_mask = np.asarray(cfg.cis_mask, bool)
+        if cis_mask.shape != (n_total, m):
+            raise ValueError(
+                f"cis_mask must be ({n_total}, {m}) (one bool per round per "
+                f"page), got shape {cis_mask.shape}")
+    rate_gain = None
+    if cfg.rate_gain is not None:
+        rate_gain = np.asarray(cfg.rate_gain, np.float64)
+        if rate_gain.ndim == 1:
+            rate_gain = rate_gain[:, None]
+        if rate_gain.shape not in ((n_total, 1), (n_total, m)):
+            raise ValueError(
+                f"rate_gain must be ({n_total},) or ({n_total}, {m}), got "
+                f"shape {cfg.rate_gain.shape if hasattr(cfg.rate_gain, 'shape') else np.shape(cfg.rate_gain)}")
+        if (rate_gain < 0).any():
+            raise ValueError("rate_gain must be >= 0")
+    feed_inj = out_inj = out_gate = None
+    if cfg.fault_plan is not None:
+        from repro.sched.degraded import OutcomeGate
+        from repro.sim import faults as _faults
+
+        feed_inj = _faults.FeedFaultInjector(cfg.fault_plan)
+        out_inj = _faults.OutcomeFaultInjector(cfg.fault_plan)
+        out_gate = OutcomeGate()
+    dropped_batches = 0
+    out_seq = 0
+
+    groups_np = None
+    group_trace = None
+    if groups is not None:
+        groups_np = np.asarray(groups, np.int64)
+        if groups_np.shape != (m,):
+            raise ValueError(
+                f"groups must be ({m},) page group ids, got shape "
+                f"{groups_np.shape}")
+        n_groups = int(groups_np.max()) + 1
+        group_trace = []
+
     stale = np.zeros((m,), bool)
     tau_sh = np.zeros((m,), np.float64)   # host shadow of scheduler state
     n_sh = np.zeros((m,), np.int64)
@@ -119,14 +185,26 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
     log_ids, log_tau, log_n, log_z = [], [], [], []
 
     for b in range(cfg.n_batches):
-        sig = rng.poisson(rate_sig, size=(R, m))
-        uns = rng.poisson(rate_uns, size=(R, m))
+        if rate_gain is None:
+            sig = rng.poisson(rate_sig, size=(R, m))
+            uns = rng.poisson(rate_uns, size=(R, m))
+        else:
+            g = rate_gain[b * R:(b + 1) * R]
+            sig = rng.poisson(np.broadcast_to(rate_sig * g, (R, m)))
+            uns = rng.poisson(np.broadcast_to(rate_uns * g, (R, m)))
         fls = rng.poisson(rate_fls, size=(R, m))
         gen_cis = sig + fls
+        if cis_mask is not None:
+            # Outage: the change happened (sig/uns already drawn) but the
+            # signal never reached the feed — exactly the censoring the
+            # degraded-mode watchdog exists to detect.
+            gen_cis = gen_cis * cis_mask[b * R:(b + 1) * R]
         feeds = np.empty((R, m), np.int32)
         feeds[0] = pending_cis
         feeds[1:] = gen_cis[:-1]
         pending_cis = gen_cis[-1]
+        if feed_inj is not None:
+            feeds = feed_inj.apply(feeds).astype(np.int32, copy=False)
 
         budgets = None
         if bw_sched is not None:
@@ -137,8 +215,37 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
                 budgets[r] = int(bucket)  # floor; <= k_cap by the check
                 bucket -= budgets[r]
 
-        ids = sched.run_rounds(
-            feeds, outcomes=prev_out if streaming else None, budgets=budgets)
+        outcomes_in = prev_out if streaming else None
+        if streaming and out_inj is not None:
+            # Faulty echo path: the injector may drop this batch, hold it
+            # for a later delivery, or deliver it twice; everything that
+            # does arrive is deduped by sequence number through the
+            # OutcomeGate, and the survivors (the current batch plus any
+            # released held batches — all (R, w) with one row per round)
+            # merge along the width axis into one ingest batch.
+            merged = []
+            if prev_out is not None:
+                for s, batch in out_inj.deliveries(out_seq, prev_out):
+                    got = out_gate.offer(s, batch)
+                    if got is not None:
+                        merged.append(got)
+                    else:
+                        dropped_batches += 1
+                out_seq += 1
+            outcomes_in = tuple(
+                np.concatenate([mb[i] for mb in merged], axis=1)
+                for i in range(4)) if merged else None
+        try:
+            ids = sched.run_rounds(feeds, outcomes=outcomes_in,
+                                   budgets=budgets)
+        except FeedValidationError:
+            # A malformed outcome batch must not take the scheduler down:
+            # outcomes are an optional enrichment of the round, the round
+            # itself is not. Drop the batch host-locally and run without.
+            if outcomes_in is None:
+                raise
+            dropped_batches += 1
+            ids = sched.run_rounds(feeds, outcomes=None, budgets=budgets)
         ids_np = np.asarray(ids[0])       # the one host read per batch
 
         changed = np.zeros_like(ids_np)
@@ -164,6 +271,9 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
             n_changes = sig[r] + uns[r]
             frac = np.where(~stale, 1.0 / (n_changes + 1.0), 0.0)
             fresh_trace.append(float(np.sum(mu_t * frac)))
+            if group_trace is not None:
+                group_trace.append(np.bincount(
+                    groups_np, weights=mu_t * frac, minlength=n_groups))
             stale |= n_changes > 0
             tau_sh[sel] = 0.0
             n_sh[sel] = 0
@@ -182,7 +292,9 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
 
     obs = tuple(np.concatenate(x) for x in (log_ids, log_tau, log_n, log_z))
     return LoopResult(freshness=np.asarray(fresh_trace), crawls=crawls,
-                      obs=obs)
+                      obs=obs, dropped_batches=dropped_batches,
+                      group_freshness=(np.asarray(group_trace)
+                                       if group_trace is not None else None))
 
 
 def _refit_mle(sched, log_ids, log_tau, log_n, log_z, window: int) -> None:

@@ -1,0 +1,354 @@
+"""Hostile signal ecosystems: fault generators for the simulator.
+
+The clean-Poisson simulator assumes one always-on CIS channel per page.
+Real change-indicating feeds are an ecosystem: sitemaps, CDN purge pings,
+webhook notifications — each with its own recall, false-positive rate, and
+delivery delay, each of which can go dark for hours. This module provides
+the host-side (numpy) machinery to model that:
+
+- `ChannelSpec` / `assign_channels` / `route_through_channels`: per-source
+  signal channels mixed across the page population, with per-channel
+  delivery delay and scheduled outages.
+- `OutageSchedule`: per-channel on/off windows. Signals generated while a
+  channel is out are *lost*, not queued — a dead sitemap never
+  retro-delivers, which is exactly why silence is ambiguous.
+- `hawkes_change_counts`: bursty self-exciting (discretized exponential
+  kernel Hawkes) change processes.
+- `flash_crowd_profile`: request-surge multipliers for mu / bandwidth.
+- `FaultPlan` + `FeedFaultInjector` / `OutcomeFaultInjector`: drop, delay,
+  duplicate, and reorder feed rows and outcome-echo batches on their way
+  into `run_rounds`.
+
+Everything here is deterministic given an explicit `numpy.random.Generator`
+or a declarative plan, so property tests and the scenario-grid benchmark
+replay identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Per-source signal channels
+# ---------------------------------------------------------------------------
+
+
+class ChannelSpec(NamedTuple):
+    """One signal source. Scales are multipliers on the page's base (lam, nu);
+    delay is delivery lag in scheduler rounds."""
+
+    name: str
+    lam_scale: float = 1.0
+    nu_scale: float = 1.0
+    delay_rounds: int = 0
+
+
+#: A representative three-source ecosystem: sitemaps are high-recall and
+#: clean but not instant to re-fetch; CDN purge events are prompt but
+#: noisier; third-party pings are weak recall and false-positive heavy.
+DEFAULT_CHANNELS: Tuple[ChannelSpec, ...] = (
+    ChannelSpec("sitemap", lam_scale=1.0, nu_scale=0.3, delay_rounds=0),
+    ChannelSpec("cdn", lam_scale=0.7, nu_scale=1.0, delay_rounds=1),
+    ChannelSpec("ping", lam_scale=0.4, nu_scale=1.6, delay_rounds=2),
+)
+
+
+def assign_channels(
+    m: int,
+    n_channels: int,
+    span: int = 1,
+    rng: Optional[np.random.Generator] = None,
+) -> np.ndarray:
+    """Assign each page a channel id in [0, n_channels).
+
+    With `span > 1`, channels are contiguous runs of `span` pages — sites
+    cluster on one feed technology, and aligning `span` to the selection
+    block size makes outages block-coherent (the granularity the on-device
+    watchdog detects). With `rng`, assignment is an i.i.d. shuffle instead.
+    """
+    if rng is not None:
+        return rng.integers(0, n_channels, size=m).astype(np.int32)
+    return ((np.arange(m) // max(span, 1)) % n_channels).astype(np.int32)
+
+
+def channel_rates(
+    lam: np.ndarray,
+    nu: np.ndarray,
+    channels: np.ndarray,
+    specs: Sequence[ChannelSpec] = DEFAULT_CHANNELS,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Effective per-page (lam, nu) after channel quality scaling."""
+    lam_s = np.asarray([s.lam_scale for s in specs], np.float64)
+    nu_s = np.asarray([s.nu_scale for s in specs], np.float64)
+    lam_eff = np.clip(np.asarray(lam, np.float64) * lam_s[channels], 0.0, 1.0)
+    nu_eff = np.asarray(nu, np.float64) * nu_s[channels]
+    return lam_eff, nu_eff
+
+
+# ---------------------------------------------------------------------------
+# Scheduled outages
+# ---------------------------------------------------------------------------
+
+
+class OutageWindow(NamedTuple):
+    """Channel `channel` delivers nothing for rounds [start, stop)."""
+
+    channel: int
+    start: int
+    stop: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageSchedule:
+    windows: Tuple[OutageWindow, ...] = ()
+    n_channels: int = len(DEFAULT_CHANNELS)
+
+    def delivery_mask(self, n_rounds: int) -> np.ndarray:
+        """(n_rounds, n_channels) bool; True = channel delivering."""
+        mask = np.ones((n_rounds, self.n_channels), dtype=bool)
+        for w in self.windows:
+            if not (0 <= w.channel < self.n_channels):
+                raise ValueError(f"outage window channel {w.channel} out of range")
+            lo = max(int(w.start), 0)
+            hi = min(int(w.stop), n_rounds)
+            if lo < hi:
+                mask[lo:hi, w.channel] = False
+        return mask
+
+    def out_rounds(self, channel: int, n_rounds: int) -> np.ndarray:
+        return np.nonzero(~self.delivery_mask(n_rounds)[:, channel])[0]
+
+
+def route_through_channels(
+    sig: np.ndarray,
+    channels: np.ndarray,
+    specs: Sequence[ChannelSpec] = DEFAULT_CHANNELS,
+    schedule: Optional[OutageSchedule] = None,
+) -> np.ndarray:
+    """Route per-page generated signal counts through channel delivery.
+
+    `sig` is (n_rounds, m) counts generated at the source. Each channel
+    applies its delivery delay (counts generated at round g land at
+    g + delay, truncated at the horizon) and its outage windows (counts
+    generated while the channel is out are lost). Returns delivered
+    (n_rounds, m) counts.
+    """
+    sig = np.asarray(sig)
+    R, m = sig.shape
+    out = np.zeros_like(sig)
+    mask = (
+        schedule.delivery_mask(R)
+        if schedule is not None
+        else np.ones((R, len(specs)), dtype=bool)
+    )
+    if mask.shape[1] != len(specs):
+        raise ValueError("outage schedule n_channels != len(specs)")
+    for c, spec in enumerate(specs):
+        sel = np.asarray(channels) == c
+        if not sel.any():
+            continue
+        rows = sig[:, sel] * mask[:, c : c + 1]
+        d = int(spec.delay_rounds)
+        if d == 0:
+            out[:, sel] += rows
+        elif d < R:
+            out[d:, sel] += rows[: R - d]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bursty (self-exciting) change processes and flash crowds
+# ---------------------------------------------------------------------------
+
+
+def hawkes_change_counts(
+    rng: np.random.Generator,
+    base_rate_dt: np.ndarray,
+    n_rounds: int,
+    excite: float = 0.3,
+    decay: float = 0.7,
+    max_rate_dt: float = 16.0,
+) -> np.ndarray:
+    """Self-exciting change counts, discretized exponential-kernel Hawkes.
+
+        intensity[t+1] = base + (intensity[t] - base) * exp(-decay)
+                              + excite * counts[t]
+        counts[t] ~ Poisson(intensity[t])
+
+    `base_rate_dt` is the per-page stationary rate already multiplied by dt;
+    `excite` is the intensity jump per observed change and `decay` the
+    per-round kernel decay. `excite / (exp(decay) - 1) < 1` keeps the
+    process subcritical; `max_rate_dt` hard-caps intensity so a property
+    test can never draw an unbounded burst. Returns (n_rounds, m) int64.
+    """
+    base = np.asarray(base_rate_dt, np.float64)
+    if excite / max(np.expm1(decay), 1e-9) >= 1.0:
+        raise ValueError("supercritical hawkes: excite/(e^decay - 1) >= 1")
+    lam_t = base.copy()
+    k = float(np.exp(-decay))
+    counts = np.zeros((n_rounds,) + base.shape, np.int64)
+    for t in range(n_rounds):
+        lam_t = np.minimum(lam_t, max_rate_dt)
+        counts[t] = rng.poisson(lam_t)
+        lam_t = base + (lam_t - base) * k + excite * counts[t]
+    return counts
+
+
+def flash_crowd_profile(
+    n_rounds: int,
+    surges: Sequence[Tuple[int, int, float]],
+    base: float = 1.0,
+) -> np.ndarray:
+    """(n_rounds,) request-intensity multiplier: `base` everywhere, `gain`
+    inside each (start, stop, gain) surge window. Multiply into mu for
+    importance surges or into a bandwidth schedule for crawl-budget dips."""
+    prof = np.full(n_rounds, float(base))
+    for start, stop, gain in surges:
+        lo, hi = max(int(start), 0), min(int(stop), n_rounds)
+        if lo < hi:
+            prof[lo:hi] = float(gain)
+    return prof
+
+
+# ---------------------------------------------------------------------------
+# Feed / outcome fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative per-round feed/outcome faults, keyed by the *global*
+    round index (feeds) or outcome-batch sequence number (outcomes).
+
+    - `drop`: feed rows lost entirely.
+    - `delay`: (round, lag) — the row lands `lag` rounds late instead.
+    - `duplicate`: (round, lag) — the row lands on time AND again lag later.
+    - `out_drop` / `out_dup`: outcome batches lost / delivered twice.
+    - `out_hold`: outcome batches held back one delivery slot, so they
+      arrive after the next batch (reordering).
+    """
+
+    drop: Tuple[int, ...] = ()
+    delay: Tuple[Tuple[int, int], ...] = ()
+    duplicate: Tuple[Tuple[int, int], ...] = ()
+    out_drop: Tuple[int, ...] = ()
+    out_dup: Tuple[int, ...] = ()
+    out_hold: Tuple[int, ...] = ()
+
+
+def random_fault_plan(
+    rng: np.random.Generator,
+    n_rounds: int,
+    p_drop: float = 0.05,
+    p_delay: float = 0.05,
+    p_dup: float = 0.05,
+    max_lag: int = 3,
+    n_batches: int = 0,
+    p_out_fault: float = 0.2,
+) -> FaultPlan:
+    """Sample a FaultPlan. Shared with `tests/strategies.py` so hypothesis
+    shrinks over (seed, rates) while the plan itself stays replayable."""
+    drop, delay, dup = [], [], []
+    for r in range(n_rounds):
+        u = rng.random()
+        if u < p_drop:
+            drop.append(r)
+        elif u < p_drop + p_delay:
+            delay.append((r, int(rng.integers(1, max_lag + 1))))
+        elif u < p_drop + p_delay + p_dup:
+            dup.append((r, int(rng.integers(1, max_lag + 1))))
+    out_drop, out_dup, out_hold = [], [], []
+    for b in range(n_batches):
+        if rng.random() < p_out_fault:
+            kind = int(rng.integers(0, 3))
+            (out_drop, out_dup, out_hold)[kind].append(b)
+    return FaultPlan(
+        drop=tuple(drop),
+        delay=tuple(delay),
+        duplicate=tuple(dup),
+        out_drop=tuple(out_drop),
+        out_dup=tuple(out_dup),
+        out_hold=tuple(out_hold),
+    )
+
+
+class FeedFaultInjector:
+    """Apply a FaultPlan to (R, m) per-round CIS count rows on their way
+    into `run_rounds`, carrying delayed rows across batch boundaries.
+
+    Counts are conserved except for `drop` rounds and rows delayed past the
+    final call: `pending_total()` reports the still-buffered remainder so
+    tests can assert conservation exactly.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self._drop = frozenset(int(r) for r in plan.drop)
+        self._delay = {int(r): int(lag) for r, lag in plan.delay}
+        self._dup = {int(r): int(lag) for r, lag in plan.duplicate}
+        self._pending: dict = {}  # absolute round -> (m,) counts to add
+        self._round0 = 0
+
+    def apply(self, feeds: np.ndarray) -> np.ndarray:
+        feeds = np.asarray(feeds)
+        R = feeds.shape[0]
+        out = np.zeros_like(feeds)
+        for r in range(R):
+            g = self._round0 + r
+            row = feeds[r]
+            if g in self._drop:
+                continue
+            lag = self._delay.get(g)
+            if lag is not None:
+                self._stash(g + lag, row)
+                continue
+            out[r] = out[r] + row
+            lag = self._dup.get(g)
+            if lag is not None:
+                self._stash(g + lag, row)
+        for g in sorted(self._pending):
+            r = g - self._round0
+            if 0 <= r < R:
+                out[r] = out[r] + self._pending.pop(g)
+        self._round0 += R
+        return out
+
+    def _stash(self, g: int, row: np.ndarray) -> None:
+        prev = self._pending.get(g)
+        self._pending[g] = row.copy() if prev is None else prev + row
+
+    def pending_total(self) -> int:
+        return int(sum(int(v.sum()) for v in self._pending.values()))
+
+
+class OutcomeFaultInjector:
+    """Turn a clean stream of (seq, batch) outcome echoes into a faulted
+    delivery stream: drops, duplicates, and holds (reordering). `batch` is
+    opaque — typically the `(ids, changed, tau, n_cis)` tuple."""
+
+    def __init__(self, plan: FaultPlan):
+        self._drop = frozenset(int(b) for b in plan.out_drop)
+        self._dup = frozenset(int(b) for b in plan.out_dup)
+        self._hold = frozenset(int(b) for b in plan.out_hold)
+        self._held: list = []
+
+    def deliveries(self, seq: int, batch):
+        out = []
+        if seq in self._drop:
+            pass
+        elif seq in self._hold:
+            self._held.append((seq, batch))
+        else:
+            out.append((seq, batch))
+            if seq in self._dup:
+                out.append((seq, batch))
+        if out and self._held:
+            out.extend(self._held)  # held batches land late = out of order
+            self._held = []
+        return out
+
+    def flush(self):
+        out, self._held = self._held, []
+        return out

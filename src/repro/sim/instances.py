@@ -85,6 +85,51 @@ def tiered_cis_instance(
     return TieredCISInstance(env=env, tier=tier.astype(jnp.int32))
 
 
+class MultiChannelInstance(NamedTuple):
+    env: Env                 # effective env after channel quality scaling
+    tier: jax.Array          # (m,) int32 tier id into TIER_NAMES
+    channels: jax.Array      # (m,) int32 channel id into specs
+    specs: tuple             # ChannelSpec per channel (sim.faults)
+
+
+def multichannel_instance(
+    key: jax.Array,
+    m: int,
+    specs=None,
+    span: int | None = None,
+    fracs=(0.3, 0.5, 0.2),
+) -> MultiChannelInstance:
+    """Tiered instance whose pages are additionally spread across per-source
+    signal channels (sitemap vs CDN vs ping — `sim.faults.ChannelSpec`), so
+    each page's effective (lam, nu) is its tier draw scaled by its channel's
+    quality, and its CIS delivery inherits the channel's delay and outage
+    windows. Channels are contiguous runs of `span` pages (sites cluster on
+    one feed technology); align `span` to the selection block size to make
+    outages block-coherent — the granularity the degraded-mode watchdog
+    detects."""
+    from repro.sim import faults
+
+    specs = tuple(specs) if specs is not None else faults.DEFAULT_CHANNELS
+    if span is None:
+        span = max(min(32768, m // len(specs)), 1)
+    base = tiered_cis_instance(key, m, fracs=fracs)
+    channels = faults.assign_channels(m, len(specs), span=span)
+    lam_eff, nu_eff = faults.channel_rates(
+        base.env.lam, base.env.nu, channels, specs)
+    env = Env(
+        delta=base.env.delta,
+        mu=base.env.mu,
+        lam=jnp.asarray(lam_eff, base.env.lam.dtype),
+        nu=jnp.asarray(nu_eff, base.env.nu.dtype),
+    )
+    return MultiChannelInstance(
+        env=env,
+        tier=base.tier,
+        channels=jnp.asarray(channels, jnp.int32),
+        specs=specs,
+    )
+
+
 def env_from_precision_recall(
     delta: jax.Array, mu: jax.Array, precision: jax.Array, recall: jax.Array
 ) -> Env:

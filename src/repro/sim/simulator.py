@@ -44,6 +44,25 @@ class DelayConfig(NamedTuple):
     max_ticks: int = 32
 
 
+class Modulation(NamedTuple):
+    """Per-tick hostile-environment modulation (built by `sim.faults`).
+
+    change_gain: (n_steps, m) multiplier on the page *change* rates (both
+        the signalled and unsignalled rows, not false CIS) — e.g. a Hawkes
+        burst intensity normalized by the base rate, or a flash-crowd
+        profile broadcast over pages.
+    cis_gain: (n_steps, m) multiplier applied to generated CIS counts
+        post-sampling; a 0/1 row encodes a per-tick channel outage —
+        changes still happen, the signals just never arrive.
+
+    Either field may be None. Passing `modulation=None` (the default)
+    leaves the clean path bit-identical: no extra operands are traced.
+    """
+
+    change_gain: Optional[jax.Array] = None
+    cis_gain: Optional[jax.Array] = None
+
+
 class SimConfig(NamedTuple):
     dt: float                    # tick length (= k_per_tick / bandwidth R)
     n_steps: int                 # number of ticks
@@ -90,6 +109,7 @@ def simulate(
     lds_rates: jax.Array | None = None,
     quality_mask: jax.Array | None = None,
     k_schedule: jax.Array | None = None,
+    modulation: Modulation | None = None,
 ) -> SimResult:
     """Run one simulation. `belief` is what the policy *thinks* the environment
     is (e.g. corrupted precision/recall estimates); events always follow `env`.
@@ -110,8 +130,10 @@ def simulate(
             raise ValueError(
                 f"k_schedule must have shape ({cfg.n_steps},), got "
                 f"{k_schedule.shape}")
+    modulation = _check_modulation(modulation, cfg, env)
     return _simulate_impl(key, env, d_true, d_bel, policy, cfg, mode,
-                          lds_rates, quality_mask, k_schedule, delay=None)
+                          lds_rates, quality_mask, k_schedule, modulation,
+                          delay=None)
 
 
 def simulate_delayed(
@@ -122,13 +144,39 @@ def simulate_delayed(
     delay: DelayConfig,
     belief: Env | None = None,
     quality_mask: jax.Array | None = None,
+    modulation: Modulation | None = None,
 ) -> SimResult:
     """Simulation with CIS delivery delays (paper App. C)."""
     d_true = derive(env)
     d_bel = derive(belief) if belief is not None else d_true
     mode = _resolve_count_mode(cfg, env)
+    modulation = _check_modulation(modulation, cfg, env)
     return _simulate_impl(key, env, d_true, d_bel, policy, cfg, mode,
-                          None, quality_mask, None, delay=delay)
+                          None, quality_mask, None, modulation, delay=delay)
+
+
+def _check_modulation(
+    modulation: Modulation | None, cfg: SimConfig, env: Env
+) -> Modulation | None:
+    if modulation is None:
+        return None
+    if modulation.change_gain is None and modulation.cis_gain is None:
+        return None
+    m = env.delta.shape[0]
+    out = {}
+    for name, arr in zip(
+        ("change_gain", "cis_gain"), (modulation.change_gain, modulation.cis_gain)
+    ):
+        if arr is None:
+            out[name] = None
+            continue
+        arr = jnp.asarray(arr, jnp.float32)
+        if arr.shape != (cfg.n_steps, m):
+            raise ValueError(
+                f"modulation.{name} must have shape ({cfg.n_steps}, {m}), "
+                f"got {arr.shape}")
+        out[name] = arr
+    return Modulation(**out)
 
 
 @functools.partial(
@@ -146,6 +194,7 @@ def _simulate_impl(
     lds_rates,
     quality_mask,
     k_schedule,
+    modulation,
     delay: DelayConfig | None,
 ) -> SimResult:
     m = env.delta.shape[0]
@@ -229,10 +278,20 @@ def _simulate_impl(
             deadlines = jnp.where(crawled, deadlines + period, deadlines)
 
         # --- 2. environment events during the tick ---
-        cnt = _sample_counts(k_ev, rates_dt, mode)
+        tick_rates = rates_dt
+        if modulation is not None and modulation.change_gain is not None:
+            g = modulation.change_gain[step_idx]
+            tick_rates = rates_dt * jnp.stack([g, g, jnp.ones_like(g)])
+        cnt = _sample_counts(k_ev, tick_rates, mode)
         sig_changes, unsig_changes, false_cis = cnt[0], cnt[1], cnt[2]
         n_changes = sig_changes + unsig_changes
         gen_cis = sig_changes + false_cis
+        if modulation is not None and modulation.cis_gain is not None:
+            # Outage / thinning at the source: the change happened, the
+            # signal never left the channel.
+            gen_cis = jnp.round(
+                gen_cis.astype(jnp.float32) * modulation.cis_gain[step_idx]
+            ).astype(jnp.int32)
 
         # --- CIS delivery (possibly delayed) ---
         if delay is not None:

@@ -27,6 +27,12 @@ needs (previously duplicated across test_adaptive.py / test_macro.py):
     `run_distributed` on the same tmpdir to prove kill-and-restore
     recovery from per-host shard checkpoints.
 
+All launchers run under the fleet watchdog (`reap_fleet`): one GLOBAL
+deadline per launch, reap-on-hang (the fleet is killed the moment any
+process overstays, and every process's captured output lands in the
+assertion), instead of per-process timeouts that could stack to
+n_procs * timeout on a wedged collective.
+
 Bodies are plain Python source (dedented automatically) run with
 `PYTHONPATH=src` from the repo root. They must print `token` on success —
 `run_distributed` requires the token from EVERY process. Distributed bodies
@@ -42,6 +48,7 @@ import subprocess
 import sys
 import tempfile
 import textwrap
+import time
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -79,6 +86,48 @@ def _env(extra_env=None):
     return env
 
 
+def _format_fleet(outs) -> str:
+    return "\n".join(f"--- proc {i} ---\n{o}" for i, o in enumerate(outs))
+
+
+def reap_fleet(procs, timeout: float, *, require_all: bool = True):
+    """THE fleet watchdog: collect every subprocess in `procs` under ONE
+    global deadline, killing the whole fleet the moment any process
+    overstays it — a peer blocked in a collective can never finish once one
+    process is gone, so a single hang must take the fleet down instead of
+    serializing per-process timeouts (the pre-watchdog launchers gave each
+    process the full timeout in turn, so a pathological fleet could burn
+    n_procs * timeout before failing).
+
+    require_all=True (the healthy-fleet contract) raises AssertionError
+    naming the hung processes, with every process's captured output
+    attached so the failure is diagnosable. require_all=False (the
+    fault-injection contract: survivors of a killed peer are EXPECTED to
+    hang in their collectives) kills and reaps the stragglers silently.
+
+    Returns the list of stdouts in process order."""
+    start = time.monotonic()
+    outs: list[str | None] = [None] * len(procs)
+    hung = []
+    for i, p in enumerate(procs):
+        left = timeout - (time.monotonic() - start)
+        try:
+            outs[i], _ = p.communicate(timeout=max(0.0, left))
+        except subprocess.TimeoutExpired:
+            hung.append(i)
+            for q in procs:
+                if q.poll() is None:
+                    q.kill()
+    for i, p in enumerate(procs):
+        if outs[i] is None:
+            outs[i], _ = p.communicate()
+    if require_all:
+        assert not hung, (
+            f"process(es) {hung} hung past the {timeout}s fleet deadline "
+            f"(killed):\n{_format_fleet(outs)}")
+    return outs
+
+
 def run_forced_shards(body: str, n_devices: int = 4, timeout: int = 900,
                       token: str = "OK", extra_env: dict | None = None,
                       tmpdir: str | None = None) -> str:
@@ -87,9 +136,18 @@ def run_forced_shards(body: str, n_devices: int = 4, timeout: int = 900,
     tmpdir = tmpdir or tempfile.mkdtemp(prefix="mesh_harness_")
     code = (_FORCED_PRELUDE.format(n=n_devices, tmpdir=tmpdir)
             + textwrap.dedent(body))
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, cwd=ROOT, env=_env(extra_env),
-                       timeout=timeout)
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, cwd=ROOT,
+                           env=_env(extra_env), timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        # Watchdog parity with `reap_fleet`: a hang becomes a diagnosable
+        # assertion carrying whatever the body printed, not a bare
+        # TimeoutExpired traceback.
+        raise AssertionError(
+            f"forced-shard body hung past {timeout}s (killed):\n"
+            f"--- stdout ---\n{e.stdout or ''}\n"
+            f"--- stderr ---\n{e.stderr or ''}") from None
     assert token in r.stdout, (
         f"forced-shard body did not print {token!r}:\n"
         f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr}")
@@ -121,27 +179,8 @@ def run_distributed(body: str, n_procs: int = 2, devices_per_proc: int = 2,
             [sys.executable, "-c", code], stdout=subprocess.PIPE,
             stderr=subprocess.STDOUT, text=True, cwd=ROOT,
             env=_env(extra_env)))
-    outs: list[str | None] = [None] * n_procs
-    hung = []
-    for i, p in enumerate(procs):
-        try:
-            outs[i], _ = p.communicate(timeout=timeout)
-        except subprocess.TimeoutExpired:
-            hung.append(i)
-            # Kill the whole fleet — a peer blocked in a collective will
-            # never finish once one process is gone — then collect
-            # whatever each process printed before the hang, so the
-            # failure is diagnosable.
-            for q in procs:
-                if q.poll() is None:
-                    q.kill()
-    for i, p in enumerate(procs):
-        if outs[i] is None:
-            outs[i], _ = p.communicate()
-    joined = "\n".join(
-        f"--- proc {i} ---\n{o}" for i, o in enumerate(outs))
-    assert not hung, (
-        f"process(es) {hung} hung past {timeout}s (killed):\n{joined}")
+    outs = reap_fleet(procs, timeout)
+    joined = _format_fleet(outs)
     for i, out in enumerate(outs):
         assert token in out, (
             f"process {i} did not print {token!r}:\n{joined}")
@@ -185,21 +224,21 @@ def run_distributed_kill(body: str, n_procs: int = 2,
             if q.poll() is None:
                 q.kill()
         outs[victim], _ = procs[victim].communicate()
-        rest = "\n".join(f"--- proc {i} ---\n{p.communicate()[0]}"
-                         for i, p in enumerate(procs) if i != victim)
+        rest = _format_fleet(
+            [p.communicate()[0] if i != victim else "(victim above)"
+             for i, p in enumerate(procs)])
         raise AssertionError(
             f"victim process {victim} did not die within {timeout}s "
             f"(killed the fleet):\n--- victim ---\n{outs[victim]}\n{rest}")
+    # Survivors lost their peer mid-collective and are EXPECTED to hang:
+    # reap-on-hang without asserting (the fault-injection watchdog
+    # contract), after `grace` seconds for a clean gloo-error exit.
+    survivors = [p for i, p in enumerate(procs) if i != victim]
+    surv_outs = reap_fleet(survivors, grace, require_all=False)
     for i, p in enumerate(procs):
-        if i == victim:
-            continue
-        try:
-            outs[i], _ = p.communicate(timeout=grace)
-        except subprocess.TimeoutExpired:
-            p.kill()
-            outs[i], _ = p.communicate()
-    joined = "\n".join(
-        f"--- proc {i} ---\n{o}" for i, o in enumerate(outs))
+        if i != victim:
+            outs[i] = surv_outs.pop(0)
+    joined = _format_fleet(outs)
     assert token in outs[victim], (
         f"victim process {victim} did not print {token!r} before dying:\n"
         f"{joined}")

@@ -28,6 +28,8 @@ FEED_DTYPES = (np.int32, np.int16, np.bool_)
 
 BUDGET_KINDS = ("constant", "mixed", "zero_runs", "ramp", "extremes")
 
+OUTAGE_KINDS = ("none", "single", "staggered", "blackout")
+
 
 def build_budget_vector(n_rounds: int, k_cap: int, kind: str,
                         seed: int) -> np.ndarray:
@@ -98,6 +100,52 @@ def build_feed_batch(m: int, n_rounds: int, kind: str, dtype, seed: int,
     return np.clip(feeds, 0, info.max).astype(dtype)
 
 
+def build_outage_windows(n_rounds: int, n_channels: int, kind: str,
+                         seed: int) -> list[tuple[int, int, int]]:
+    """Deterministically build one list of (channel, start, stop) outage
+    windows of the given kind — the hostile-ecosystem counterpart of
+    `build_feed_batch`, consumed by `sim.faults.OutageSchedule`:
+
+      * none      — a healthy schedule (the degraded-mode no-op case)
+      * single    — one channel dark for one contiguous window
+      * staggered — every channel dark once, windows overlapping at random
+      * blackout  — ALL channels dark over one shared window (total CIS
+                    loss; the watchdog must flag every block)
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "none":
+        return []
+    def window():
+        start = int(rng.integers(0, max(1, n_rounds - 1)))
+        stop = int(rng.integers(start + 1, n_rounds + 1))
+        return start, stop
+    if kind == "single":
+        ch = int(rng.integers(0, n_channels))
+        return [(ch, *window())]
+    if kind == "staggered":
+        return [(ch, *window()) for ch in range(n_channels)]
+    if kind == "blackout":
+        start, stop = window()
+        return [(ch, start, stop) for ch in range(n_channels)]
+    raise ValueError(f"unknown outage kind {kind!r}")
+
+
+def build_fault_plan(n_rounds: int, seed: int, n_batches: int = 0,
+                     p_drop: float = 0.1, p_delay: float = 0.1,
+                     p_dup: float = 0.1, max_lag: int = 3,
+                     p_out_fault: float = 0.25):
+    """Deterministically build one `sim.faults.FaultPlan` (feed-row drops /
+    delays / duplicates plus outcome-batch drop / dup / hold patterns) from
+    a seed — shared by the hypothesis strategies and by deterministic
+    degraded-mode tests."""
+    from repro.sim.faults import random_fault_plan
+
+    return random_fault_plan(
+        np.random.default_rng(seed), n_rounds, p_drop=p_drop,
+        p_delay=p_delay, p_dup=p_dup, max_lag=max_lag,
+        n_batches=n_batches, p_out_fault=p_out_fault)
+
+
 if HAVE_HYPOTHESIS:
     from hypothesis import strategies as st
 
@@ -126,6 +174,31 @@ if HAVE_HYPOTHESIS:
         kind = draw(st.sampled_from(list(kinds)))
         seed = draw(st.integers(0, 2**16))
         return build_budget_vector(n_rounds, k_cap, kind, seed)
+
+    @st.composite
+    def outage_schedules(draw, n_rounds: int, n_channels: int = 3,
+                         kinds=OUTAGE_KINDS):
+        """A `sim.faults.OutageSchedule` over n_channels channels."""
+        from repro.sim.faults import OutageSchedule, OutageWindow
+
+        kind = draw(st.sampled_from(list(kinds)))
+        seed = draw(st.integers(0, 2**16))
+        wins = build_outage_windows(n_rounds, n_channels, kind, seed)
+        return OutageSchedule(
+            windows=tuple(OutageWindow(c, a, b) for c, a, b in wins),
+            n_channels=n_channels)
+
+    @st.composite
+    def fault_plans(draw, n_rounds: int, n_batches: int = 0):
+        """A `sim.faults.FaultPlan` (feed drop/delay/duplicate patterns +
+        outcome-batch faults when n_batches > 0)."""
+        seed = draw(st.integers(0, 2**16))
+        p_drop = draw(st.sampled_from([0.0, 0.05, 0.2]))
+        p_delay = draw(st.sampled_from([0.0, 0.05, 0.2]))
+        p_dup = draw(st.sampled_from([0.0, 0.05, 0.2]))
+        return build_fault_plan(n_rounds, seed, n_batches=n_batches,
+                                p_drop=p_drop, p_delay=p_delay,
+                                p_dup=p_dup)
 else:  # pragma: no cover - exercised in minimal environments
     def feed_batches(*_a, **_k):
         return None
@@ -134,4 +207,10 @@ else:  # pragma: no cover - exercised in minimal environments
         return None
 
     def budget_vectors(*_a, **_k):
+        return None
+
+    def outage_schedules(*_a, **_k):
+        return None
+
+    def fault_plans(*_a, **_k):
         return None

@@ -1,0 +1,320 @@
+"""Degraded-mode scheduling (`FusedBackend(degraded=True)`): healthy-path
+bit-identity, the per-block staleness watchdog, outage compensation,
+estimator quarantine, checkpoint compatibility, and the host-side
+outcome-echo gate (`sched.degraded`)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sched import backends as be
+from repro.sched import online_est
+from repro.sched.degraded import OutcomeGate, retry_with_backoff
+from repro.sched.errors import FeedValidationError
+from repro.sched.service import CrawlScheduler
+from repro.sim import tiered_cis_instance
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+M = 1024
+K = 8
+DT = 0.5
+BP = 2 * 128  # block_rows=2 -> pages per block
+
+
+def _mk(env, degraded, stale_limit=3, **kw):
+    backend = be.FusedBackend(block_rows=2, adaptive_bounds=True,
+                              degraded=degraded, stale_limit=stale_limit,
+                              **kw)
+    return CrawlScheduler(env, _mesh1(), bandwidth=K / DT, round_period=DT,
+                          backend=backend)
+
+
+def _env():
+    return tiered_cis_instance(jax.random.PRNGKey(1), M).env
+
+
+def _healthy_feeds(rng, n_rounds):
+    """Every block sees CIS every round — no block ever goes silent."""
+    feeds = rng.poisson(0.05, (n_rounds, M)).astype(np.int32)
+    feeds[:, ::BP] += 1
+    return feeds
+
+
+def _outage_feeds(rng, n_rounds):
+    """Blocks 0-1 dark for the whole batch; blocks 2-3 healthy."""
+    feeds = _healthy_feeds(rng, n_rounds)
+    feeds[:, :2 * BP] = 0
+    return feeds
+
+
+# -- healthy-path bit-identity ----------------------------------------------
+
+def test_healthy_bit_identity_sequential():
+    env = _env()
+    rng = np.random.default_rng(0)
+    feeds = _healthy_feeds(rng, 12)
+    s_off, s_on = _mk(env, False), _mk(env, True)
+    for r in range(12):
+        ids0, vals0 = s_off.ingest_and_schedule(feeds[r])
+        ids1, vals1 = s_on.ingest_and_schedule(feeds[r])
+        np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(vals0), np.asarray(vals1))
+    np.testing.assert_array_equal(np.asarray(s_off.round.tau_elap),
+                                  np.asarray(s_on.round.tau_elap))
+    # Watchdog saw CIS every round on every block.
+    assert int(np.asarray(s_on.round.backend.stale).max()) == 0
+
+
+def test_healthy_bit_identity_macro():
+    env = _env()
+    feeds = _healthy_feeds(np.random.default_rng(1), 10)
+    s_off, s_on = _mk(env, False), _mk(env, True)
+    ids0, vals0 = s_off.run_rounds(feeds)
+    ids1, vals1 = s_on.run_rounds(feeds)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_array_equal(np.asarray(vals0), np.asarray(vals1))
+    np.testing.assert_array_equal(np.asarray(s_off.round.tau_elap),
+                                  np.asarray(s_on.round.tau_elap))
+
+
+# -- the watchdog + compensation under outage --------------------------------
+
+def test_stale_counts_and_resets():
+    env = _env()
+    s = _mk(env, True, stale_limit=100)
+    feeds = _outage_feeds(np.random.default_rng(2), 6)
+    s.run_rounds(feeds)
+    stale = np.asarray(s.round.backend.stale)
+    np.testing.assert_array_equal(stale, [6, 6, 0, 0])
+    # One healthy round resets the dark blocks' counters.
+    s.ingest_and_schedule(_healthy_feeds(np.random.default_rng(3), 1)[0])
+    np.testing.assert_array_equal(np.asarray(s.round.backend.stale),
+                                  [0, 0, 0, 0])
+
+
+def test_outage_compensation_changes_selection():
+    env = _env()
+    rng = np.random.default_rng(4)
+    feeds = _outage_feeds(rng, 16)
+    s_off, s_on = _mk(env, False), _mk(env, True)
+    ids0, vals0 = s_off.run_rounds(feeds)
+    ids1, vals1 = s_on.run_rounds(feeds)
+    assert not np.array_equal(np.asarray(ids0), np.asarray(ids1)), (
+        "degraded mode must re-evaluate silent blocks under an outage")
+    assert np.isfinite(np.asarray(vals1)[np.asarray(ids1) >= 0]).all()
+
+
+def test_outage_macro_matches_sequential_bitwise():
+    env = _env()
+    feeds = _outage_feeds(np.random.default_rng(5), 10)
+    s_seq, s_mac = _mk(env, True), _mk(env, True)
+    seq_ids, seq_vals = [], []
+    for r in range(10):
+        i, v = s_seq.ingest_and_schedule(feeds[r])
+        seq_ids.append(np.asarray(i))
+        seq_vals.append(np.asarray(v))
+    mac_ids, mac_vals = s_mac.run_rounds(feeds)
+    np.testing.assert_array_equal(np.stack(seq_ids), np.asarray(mac_ids))
+    np.testing.assert_array_equal(np.stack(seq_vals), np.asarray(mac_vals))
+    np.testing.assert_array_equal(np.asarray(s_seq.round.backend.stale),
+                                  np.asarray(s_mac.round.backend.stale))
+
+
+def test_no_host_sync_in_degraded_macro_scan():
+    env = _env()
+    s = _mk(env, True, online_est=True)
+    feeds = _outage_feeds(np.random.default_rng(6), 6)
+    s.run_rounds(feeds)  # compile outside the poisoned window
+    real = jax.device_get
+
+    def die(*a, **k):  # pragma: no cover - only on regression
+        raise AssertionError("host sync inside the degraded macro-round")
+
+    jax.device_get = die
+    try:
+        s.run_rounds(_outage_feeds(np.random.default_rng(7), 6))
+    finally:
+        jax.device_get = real
+
+
+# -- checkpointing -----------------------------------------------------------
+
+def test_stale_plane_checkpoint_roundtrip():
+    env = _env()
+    s = _mk(env, True)
+    s.run_rounds(_outage_feeds(np.random.default_rng(8), 5))
+    sd = jax.device_get(s.state_dict())
+    assert int(np.asarray(sd["backend"].stale).max()) == 5
+    s2 = _mk(env, True)
+    s2.load_state_dict(sd)
+    np.testing.assert_array_equal(np.asarray(s2.round.backend.stale),
+                                  np.asarray(sd["backend"].stale))
+    # The restored scheduler keeps counting from the snapshot.
+    s2.run_rounds(_outage_feeds(np.random.default_rng(9), 2))
+    assert int(np.asarray(s2.round.backend.stale).max()) == 7
+
+
+def test_pre_degraded_snapshot_restores_into_degraded():
+    env = _env()
+    sd = jax.device_get(_mk(env, False).state_dict())
+    assert sd["backend"].stale is None
+    s = _mk(env, True)
+    s.load_state_dict(sd)
+    st = s.round.backend.stale
+    assert st is not None
+    assert int(np.asarray(st).sum()) == 0
+
+
+def test_degraded_snapshot_restores_into_healthy():
+    env = _env()
+    s = _mk(env, True)
+    s.run_rounds(_outage_feeds(np.random.default_rng(10), 3))
+    sd = jax.device_get(s.state_dict())
+    s2 = _mk(env, False)
+    s2.load_state_dict(sd)
+    np.testing.assert_array_equal(np.asarray(s2.round.backend.stale),
+                                  np.asarray(sd["backend"].stale))
+
+
+# -- estimator quarantine ----------------------------------------------------
+
+def test_quarantine_freezes_stream_stats():
+    stats = online_est.init_est(64)
+    oidx = jnp.array([3, 9], jnp.int32)
+    chg = jnp.array([1, 1], jnp.int32)
+    tau = jnp.array([1.0, 1.0], jnp.float32)
+    ncis = jnp.array([2, 2], jnp.int32)
+    quar = jnp.array([False, True])
+    out = online_est.ingest_outcomes(stats, oidx, chg, tau, ncis,
+                                     quarantine=quar)
+    assert float(out.n_obs[3]) == 1.0
+    assert float(out.n_obs[9]) == 0.0          # quarantined: untouched
+    # quarantine=None is the exact legacy path.
+    out2 = online_est.ingest_outcomes(stats, oidx, chg, tau, ncis)
+    assert float(out2.n_obs[9]) == 1.0
+
+
+def test_quarantine_protects_outage_page_estimates():
+    """Outcomes of pages in silent blocks must not drag the streaming
+    estimates: with degraded=True the macro round discards them, so the
+    (alpha, b, gamma)-bearing statistics of outage pages stay at their
+    pre-outage values."""
+    env = _env()
+    s = _mk(env, True, stale_limit=2, online_est=True)
+    feeds = _outage_feeds(np.random.default_rng(11), 8)
+    ids, _ = s.run_rounds(feeds)
+    before = jax.device_get(s.round.backend.est)
+    # Echo every crawl as an outcome while blocks 0-1 are still dark.
+    ids_np = np.asarray(ids)
+    out = (ids_np, np.zeros_like(ids_np),
+           np.full(ids_np.shape, 1.0, np.float32),
+           np.zeros(ids_np.shape, np.int32))
+    s.run_rounds(_outage_feeds(np.random.default_rng(12), 8), outcomes=out)
+    after = jax.device_get(s.round.backend.est)
+    dark = slice(0, 2 * BP)
+    np.testing.assert_array_equal(before.n_obs[dark], after.n_obs[dark])
+
+
+# -- outcome-batch dedupe (the scatter double-count bugfix) ------------------
+
+def test_outcome_batch_duplicate_ids_keep_last():
+    env = _env()
+    s = _mk(env, False, online_est=True)
+    ids = np.full((2, 5), -1, np.int32)
+    ids[0, :3] = [7, 7, 9]
+    chg = np.zeros_like(ids)
+    chg[0, 0] = 1                       # the stale early duplicate
+    tau = np.full(ids.shape, -1.0, np.float32)
+    tau[0, :3] = [1.0, 2.0, 3.0]
+    ncis = np.zeros_like(ids)
+    so = s._sparse_outcome_batch(ids, chg, tau, ncis, 2)
+    cell = np.asarray(so.ids)[0, 0]
+    live = cell[cell >= 0]
+    assert sorted(live.tolist()) == [7, 9]            # id-unique
+    got_tau = np.asarray(so.tau)[0, 0][cell == 7]
+    assert got_tau.tolist() == [2.0]                  # the LAST entry won
+    assert np.asarray(so.changed)[0, 0][cell == 7].tolist() == [0]
+
+
+def test_outcome_batch_duplicate_ids_single_count():
+    env = _env()
+    s = _mk(env, False, online_est=True)
+    feeds = np.zeros((2, M), np.int32)
+    ids = np.full((2, 4), -1, np.int32)
+    ids[0, :2] = [5, 5]                 # same page twice in one round
+    chg = np.zeros_like(ids)
+    tau = np.full(ids.shape, -1.0, np.float32)
+    tau[0, :2] = [1.0, 1.0]
+    ncis = np.zeros_like(ids)
+    s.run_rounds(feeds, outcomes=(ids, chg, tau, ncis))
+    assert float(np.asarray(s.round.backend.est.n_obs)[5]) == 1.0
+
+
+# -- host-side echo gate + retry --------------------------------------------
+
+def test_outcome_gate_dedupes_and_ages_out():
+    g = OutcomeGate(window=4)
+    assert g.offer(0, "a") == "a"
+    assert g.offer(0, "a") is None                    # duplicate
+    assert g.offer(2, "b") == "b"
+    assert g.offer(1, "c") == "c"                     # out of order: fine
+    assert g.offer(10, "d") == "d"
+    assert g.offer(5, "e") is None                    # below the window
+    assert (g.accepted, g.dropped_dup, g.dropped_stale) == (4, 1, 1)
+    with pytest.raises(ValueError):
+        g.offer(-1, "x")
+    g2 = OutcomeGate.from_state_dict(g.state_dict())
+    assert g2.offer(10, "a") is None                  # memory survived
+
+
+def test_retry_with_backoff_sequence():
+    delays = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise OSError("transient")
+        return "ok"
+
+    out = retry_with_backoff(flaky, max_attempts=5, base_delay=0.1,
+                             max_delay=0.25, sleep=delays.append)
+    assert out == "ok"
+    assert delays == [0.1, 0.2, 0.25]
+
+    def always():
+        raise TimeoutError("down")
+
+    with pytest.raises(TimeoutError):
+        retry_with_backoff(always, max_attempts=2, sleep=delays.append)
+
+    def fatal():
+        raise FeedValidationError("not transient")
+
+    with pytest.raises(FeedValidationError):
+        retry_with_backoff(fatal, sleep=delays.append)  # no retry
+
+
+def test_run_rounds_outcome_seq_gates_duplicates():
+    env = _env()
+    s = _mk(env, False, online_est=True)
+    feeds = np.zeros((2, M), np.int32)
+    ids = np.full((2, 4), -1, np.int32)
+    ids[0, 0] = 11
+    chg = np.zeros_like(ids)
+    tau = np.full(ids.shape, -1.0, np.float32)
+    tau[0, 0] = 1.0
+    ncis = np.zeros_like(ids)
+    out = (ids, chg, tau, ncis)
+    s.run_rounds(feeds, outcomes=out, outcome_seq=0)
+    s.run_rounds(feeds, outcomes=out, outcome_seq=0)  # replayed batch
+    assert float(np.asarray(s.round.backend.est.n_obs)[11]) == 1.0
+    assert s.outcome_gate.dropped_dup == 1
+    with pytest.raises(FeedValidationError):
+        s.run_rounds(feeds, outcome_seq=2)            # seq without batch

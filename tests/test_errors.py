@@ -1,0 +1,111 @@
+"""Typed scheduler errors (`sched.errors`): the fleet_fatal contract, legacy
+builtin subclassing, and the closed-loop driver's host-local drop of invalid
+outcome batches."""
+import jax
+import numpy as np
+import pytest
+
+from repro.sched import backends as be
+from repro.sched.errors import (
+    CapacityExceeded,
+    FeedDtypeError,
+    FeedValidationError,
+    SchedulerError,
+)
+from repro.sched.service import CrawlScheduler
+from repro.sim import LoopConfig, run_closed_loop, tiered_cis_instance
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _sched(m=512, **kw):
+    env = tiered_cis_instance(jax.random.PRNGKey(0), m).env
+    return CrawlScheduler(env, _mesh1(), bandwidth=8.0,
+                          backend=be.FusedBackend(block_rows=2, **kw))
+
+
+# -- hierarchy + flags -------------------------------------------------------
+
+def test_fleet_fatal_flags():
+    assert SchedulerError.fleet_fatal is False
+    assert FeedValidationError.fleet_fatal is False
+    assert FeedDtypeError.fleet_fatal is False
+    assert CapacityExceeded.fleet_fatal is True
+
+
+def test_legacy_builtin_subclassing():
+    assert issubclass(FeedValidationError, SchedulerError)
+    assert issubclass(FeedValidationError, ValueError)
+    assert issubclass(FeedDtypeError, FeedValidationError)
+    assert issubclass(FeedDtypeError, TypeError)
+    assert issubclass(CapacityExceeded, SchedulerError)
+    assert issubclass(CapacityExceeded, ValueError)
+    # Instances carry the class flag.
+    assert FeedValidationError("x").fleet_fatal is False
+    assert CapacityExceeded("x").fleet_fatal is True
+
+
+def test_legacy_handlers_still_catch():
+    s = _sched()
+    with pytest.raises(ValueError):          # pre-hierarchy handler style
+        s.ingest_and_schedule(np.zeros(7, np.int32))
+    with pytest.raises(TypeError):
+        s.ingest_and_schedule(np.zeros(s.m, np.float32))
+    # And the typed forms are what actually flies.
+    with pytest.raises(FeedValidationError):
+        s.ingest_and_schedule(np.zeros(7, np.int32))
+    with pytest.raises(FeedDtypeError):
+        s.ingest_and_schedule(np.zeros(s.m, np.float32))
+
+
+def test_capacity_exceeded_is_fleet_fatal():
+    s = _sched(m=512)
+    s.feed_cap = 1
+    feeds = np.ones((2, 512), np.int32)
+    with pytest.raises(CapacityExceeded) as ei:
+        s.run_rounds(feeds)
+    assert ei.value.fleet_fatal is True
+
+
+# -- the driver's host-local drop path ---------------------------------------
+
+def test_driver_drops_invalid_outcome_batches():
+    """A malformed outcome batch is a host-local FeedValidationError: the
+    closed-loop driver must drop the batch and keep the loop running, not
+    crash — outcomes are optional enrichment, the round is not."""
+    m = 256
+    inst = tiered_cis_instance(jax.random.PRNGKey(1), m)
+    s = CrawlScheduler(inst.env, _mesh1(), bandwidth=8.0,
+                       backend=be.FusedBackend(block_rows=2,
+                                               online_est=True))
+    orig = s.run_rounds
+    state = {"poisoned": 0}
+
+    def flaky(feeds, outcomes=None, budgets=None, outcome_seq=None):
+        if outcomes is not None and state["poisoned"] == 0:
+            state["poisoned"] += 1
+            raise FeedValidationError("corrupted echo batch")
+        return orig(feeds, outcomes=outcomes, budgets=budgets,
+                    outcome_seq=outcome_seq)
+
+    s.run_rounds = flaky
+    cfg = LoopConfig(n_batches=3, rounds_per_batch=4, mode="streaming",
+                     seed=0)
+    res = run_closed_loop(s, inst.env, cfg)
+    assert state["poisoned"] == 1
+    assert res.dropped_batches == 1
+    assert len(res.freshness) == 12          # the loop ran to completion
+
+
+def test_driver_does_not_swallow_fleet_fatal():
+    """CapacityExceeded is fleet-fatal by contract — the driver must let it
+    propagate, never retry around it."""
+    m = 256
+    inst = tiered_cis_instance(jax.random.PRNGKey(2), m)
+    s = CrawlScheduler(inst.env, _mesh1(), bandwidth=8.0,
+                       backend=be.FusedBackend(block_rows=2), feed_cap=1)
+    cfg = LoopConfig(n_batches=2, rounds_per_batch=4, seed=0)
+    with pytest.raises(CapacityExceeded):
+        run_closed_loop(s, inst.env, cfg)

@@ -1,0 +1,183 @@
+"""Hostile signal ecosystems (`sim.faults`): channel routing, outage
+schedules, bursty/flash-crowd processes, feed/outcome fault injectors, and
+their closed-loop driver integration (`sim.driver` fault knobs)."""
+import numpy as np
+import pytest
+
+import strategies
+from _hypothesis_compat import given, settings, st
+from repro.sim import faults
+
+
+# -- channels & routing ------------------------------------------------------
+
+def test_assign_channels_contiguous_runs():
+    ch = faults.assign_channels(12, 3, span=2)
+    assert ch.dtype == np.int32
+    np.testing.assert_array_equal(
+        ch, [0, 0, 1, 1, 2, 2, 0, 0, 1, 1, 2, 2])
+
+
+def test_channel_rates_scale_and_clip():
+    lam = np.array([0.9, 0.9, 0.5])
+    nu = np.array([0.2, 0.2, 0.5])
+    specs = (faults.ChannelSpec("a", 1.5, 2.0, 0),
+             faults.ChannelSpec("b", 0.5, 0.5, 1))
+    le, ne = faults.channel_rates(lam, nu, np.array([0, 1, 0]), specs)
+    assert le[0] == 1.0                     # 0.9 * 1.5 clipped to [0, 1]
+    assert le[1] == pytest.approx(0.45)
+    assert ne[0] == pytest.approx(0.4)
+    assert ne[1] == pytest.approx(0.1)
+
+
+def test_route_conserves_counts_without_outage():
+    rng = np.random.default_rng(0)
+    R, m = 10, 30
+    sig = rng.poisson(1.0, (R, m))
+    ch = faults.assign_channels(m, 3, span=10)
+    # Zero-delay specs: routing is the identity.
+    specs = tuple(faults.ChannelSpec(s.name, 1.0, 1.0, 0)
+                  for s in faults.DEFAULT_CHANNELS)
+    np.testing.assert_array_equal(
+        faults.route_through_channels(sig, ch, specs), sig)
+    # With delays, counts are conserved modulo horizon truncation.
+    out = faults.route_through_channels(sig, ch, faults.DEFAULT_CHANNELS)
+    for c, spec in enumerate(faults.DEFAULT_CHANNELS):
+        sel = ch == c
+        d = spec.delay_rounds
+        kept = sig[:R - d, sel].sum() if d < R else 0
+        assert out[:, sel].sum() == kept
+
+
+def test_outage_windows_lose_counts():
+    R, m = 8, 9
+    sig = np.ones((R, m), np.int64)
+    ch = faults.assign_channels(m, 3, span=3)
+    specs = tuple(faults.ChannelSpec(s.name, 1.0, 1.0, 0)
+                  for s in faults.DEFAULT_CHANNELS)
+    sched = faults.OutageSchedule(
+        windows=(faults.OutageWindow(channel=1, start=2, stop=5),))
+    out = faults.route_through_channels(sig, ch, specs, schedule=sched)
+    assert out[:, ch == 1][2:5].sum() == 0          # dark window
+    assert out[:, ch == 1][:2].sum() == 2 * 3       # delivering before
+    np.testing.assert_array_equal(out[:, ch != 1], sig[:, ch != 1])
+    np.testing.assert_array_equal(sched.out_rounds(1, R), [2, 3, 4])
+
+
+def test_outage_bad_channel_raises():
+    sched = faults.OutageSchedule(
+        windows=(faults.OutageWindow(channel=7, start=0, stop=1),))
+    with pytest.raises(ValueError):
+        sched.delivery_mask(4)
+
+
+# -- bursty / flash crowd ----------------------------------------------------
+
+def test_hawkes_supercritical_guard():
+    with pytest.raises(ValueError):
+        faults.hawkes_change_counts(np.random.default_rng(0),
+                                    np.full(4, 0.1), 8,
+                                    excite=5.0, decay=0.1)
+
+
+def test_hawkes_bursts_exceed_poisson_variance():
+    rng = np.random.default_rng(1)
+    base = np.full(256, 0.5)
+    counts = faults.hawkes_change_counts(rng, base, 200, excite=0.5,
+                                         decay=0.6)
+    assert counts.shape == (200, 256)
+    # Self-excitation makes the count process overdispersed vs its mean.
+    per_round = counts.sum(axis=1).astype(np.float64)
+    assert per_round.var() > 1.5 * per_round.mean()
+
+
+def test_flash_crowd_profile():
+    prof = faults.flash_crowd_profile(10, [(2, 4, 3.0), (8, 99, 0.5)])
+    np.testing.assert_array_equal(
+        prof, [1, 1, 3, 3, 1, 1, 1, 1, 0.5, 0.5])
+
+
+# -- feed fault injector -----------------------------------------------------
+
+def test_feed_injector_semantics():
+    m = 4
+    feeds = np.tile(np.arange(1, 6, dtype=np.int64)[:, None], (1, m))
+    plan = faults.FaultPlan(drop=(0,), delay=((1, 2),), duplicate=((2, 1),))
+    out = feeds.copy()
+    inj = faults.FeedFaultInjector(plan)
+    out = inj.apply(feeds)
+    np.testing.assert_array_equal(out[0], 0)            # dropped
+    np.testing.assert_array_equal(out[1], 0)            # delayed away
+    np.testing.assert_array_equal(out[2], feeds[2])     # dup lands on time
+    np.testing.assert_array_equal(out[3], feeds[1] + feeds[2] + feeds[3])
+    np.testing.assert_array_equal(out[4], feeds[4])
+    assert inj.pending_total() == 0
+
+
+def test_feed_injector_carries_pending_across_batches():
+    m = 3
+    feeds = np.ones((2, m), np.int64)
+    plan = faults.FaultPlan(delay=((1, 2),))
+    inj = faults.FeedFaultInjector(plan)
+    out1 = inj.apply(feeds)
+    assert out1.sum() == m                   # row 1 delayed past the batch
+    assert inj.pending_total() == m
+    out2 = inj.apply(np.zeros((2, m), np.int64))
+    np.testing.assert_array_equal(out2[1], 1)  # lands at global round 3
+    assert inj.pending_total() == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_feed_injector_conserves_counts(data):
+    """Drop-free plans conserve every count (delays/dups only move/add)."""
+    plan = data.draw(strategies.fault_plans(n_rounds=8))
+    plan = faults.FaultPlan(drop=(), delay=plan.delay,
+                            duplicate=plan.duplicate)
+    rng = np.random.default_rng(0)
+    feeds = rng.poisson(1.0, (8, 5)).astype(np.int64)
+    inj = faults.FeedFaultInjector(plan)
+    out = inj.apply(feeds)
+    dup_extra = sum(feeds[r].sum() for r, lag in plan.duplicate
+                    if r + lag < 8)
+    assert out.sum() + inj.pending_total() == feeds.sum() + dup_extra
+
+
+# -- outcome fault injector --------------------------------------------------
+
+def test_outcome_injector_drop_dup_hold():
+    inj = faults.OutcomeFaultInjector(
+        faults.FaultPlan(out_drop=(0,), out_dup=(1,), out_hold=(2,)))
+    assert inj.deliveries(0, "b0") == []
+    assert inj.deliveries(1, "b1") == [(1, "b1"), (1, "b1")]
+    assert inj.deliveries(2, "b2") == []            # held
+    # Held batch is released AFTER the next delivery — true reordering.
+    assert inj.deliveries(3, "b3") == [(3, "b3"), (2, "b2")]
+    assert inj.flush() == []
+
+
+def test_outcome_injector_flush_releases_held():
+    inj = faults.OutcomeFaultInjector(faults.FaultPlan(out_hold=(0,)))
+    assert inj.deliveries(0, "b0") == []
+    assert inj.flush() == [(0, "b0")]
+
+
+# -- deterministic plan builders (shared with hypothesis) --------------------
+
+def test_random_fault_plan_deterministic():
+    p1 = strategies.build_fault_plan(16, seed=7, n_batches=4)
+    p2 = strategies.build_fault_plan(16, seed=7, n_batches=4)
+    assert p1 == p2
+    rounds = set(p1.drop) | {r for r, _ in p1.delay} | {
+        r for r, _ in p1.duplicate}
+    assert all(0 <= r < 16 for r in rounds)
+
+
+def test_build_outage_windows_kinds():
+    assert strategies.build_outage_windows(10, 3, "none", 0) == []
+    wins = strategies.build_outage_windows(10, 3, "blackout", 3)
+    assert len(wins) == 3
+    assert len({(a, b) for _, a, b in wins}) == 1    # one shared window
+    chans = {c for c, _, _ in strategies.build_outage_windows(
+        10, 3, "staggered", 5)}
+    assert chans == {0, 1, 2}

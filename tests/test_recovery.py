@@ -367,6 +367,8 @@ def make_sched():
 def state_slabs(s):
     out = {}
     for name, v in zip(be.FusedState._fields, s.round.backend):
+        if v is None:   # lazy planes (est/emit_res/stale) absent here;
+            continue    # np.asarray(None) is an unloadable object array
         out["st_" + name] = ckpt._local_slab(v)[0]
     out["tau"] = ckpt._local_slab(s.round.tau_elap)[0]
     out["ncis"] = ckpt._local_slab(s.round.n_cis)[0]
