@@ -260,6 +260,26 @@ def repack_pages(
     return env.at[blk, :, row, lane].set(cols, mode="drop")
 
 
+def refold_mu(env: jax.Array, mu_t: jax.Array, delta: jax.Array) -> jax.Array:
+    """Rewrite the mu-derived planes for EVERY page of a packed shard — the
+    request-importance refold (`sched.importance.fold_into_planes`). A new
+    importance vector re-anchors the global normalizer, so unlike the
+    per-page `repack_pages` scatter this touches the whole MU_T plane; but
+    mu enters only two planes (MU_T itself and the V_INF asymptote), so the
+    refold writes 2 of n_planes columns instead of re-deriving everything
+    `pack_shard` does.
+
+    mu_t/delta: flat (m_pad_local,) f32 — the new normalized importance and
+    the raw change-rate column (stashed at attach time,
+    `sched.importance.ReqState.delta`, padding fill 1.0). V_INF uses the
+    exact `_page_planes` expression, so a refold is bit-identical to
+    packing from scratch with the new mu."""
+    nb, _, block_rows, lanes = env.shape
+    vinf = mu_t / jnp.maximum(delta, _EPS)
+    env = env.at[:, MU_T].set(mu_t.reshape(nb, block_rows, lanes))
+    return env.at[:, V_INF].set(vinf.reshape(nb, block_rows, lanes))
+
+
 def gather_plane(env: jax.Array, page_ids: jax.Array, plane: int) -> jax.Array:
     """Gather one packed plane's value per flat (padded) page id — the
     read-side companion of `repack_pages`' flat-id addressing (page p lives

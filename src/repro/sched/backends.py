@@ -205,6 +205,18 @@ class FusedState(NamedTuple):
     #                         pages' outcome ingestion is quarantined. None
     #                         when degraded is off (same empty-pytree trick
     #                         as `est`/`emit_res`)
+    # --- request-driven importance plane (appended; sched.importance) -----
+    req: Any = None         # `sched.importance.ReqState` of (m_state,) f32
+    #                         planes when the request-importance layer is
+    #                         attached: the per-page decayed request-count
+    #                         EWMA plus the raw-delta / link-prior columns
+    #                         the periodic MU_T refold needs
+    #                         (`importance.fold_into_planes`). The macro
+    #                         round never reads it — it rides the donated
+    #                         state so serve-front logging, checkpointing,
+    #                         and the fold share one state tree. None when
+    #                         the layer is off (same empty-pytree trick as
+    #                         `est`/`emit_res`/`stale`)
 
 
 def _pspec(mesh: Mesh) -> P:
@@ -925,6 +937,26 @@ def init_round(backend: SelectionBackend, env: Env, mesh: Mesh):
         crawl_clock=jnp.int32(0),
         backend=binit.state,
     ), binit
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def commit_state(state):
+    """Donation-normalize a freshly built (or freshly restored) round state.
+
+    Host-built states don't match what the compiled rounds hand back: the
+    scalar `crawl_clock` is an uncommitted single-device array, and leaves
+    that pass through a donated jit untouched (e.g. `env_planes` off the
+    estimation path) come back with the GSPMD-canonicalized form of their
+    PartitionSpec. Either mismatch flips the C++ jit cache key, so the
+    2nd-ever `crawl_rounds` call used to recompile once against the
+    "donated" signature. Pushing the state through this donated barrier at
+    construction produces exactly the committed, canonical shardings the
+    round outputs carry — the first call's compilation is the only one.
+
+    `optimization_barrier` is a bitwise identity (unlike `x + 0`, which
+    rewrites -0.0), so committed state is byte-for-byte the built state.
+    """
+    return jax.lax.optimization_barrier(state)
 
 
 def _round_body(backend, state, new_cis, mesh, k, dt):

@@ -1,0 +1,275 @@
+"""Request-driven importance: the on-device layer behind the serving front.
+
+The paper's objective is freshness *at request time*, so at production scale
+the importance vector `mu` is not a config input — it is estimated from the
+live stream of user requests. This module owns that estimate as device
+state riding `FusedState` (the `req` field, None when the layer is off so
+off-path jit signatures and old checkpoints stay byte-identical — the same
+lazy-optional pattern as `est`/`emit_res`/`stale`):
+
+  * `ReqState.ewma` — the per-page decayed request count. Every logged
+    batch applies one decay step `ewma <- decay * ewma + counts`, so after
+    T batches the plane holds the closed form
+    sum_t decay^(T-1-t) * counts_t (property-tested): recent traffic
+    dominates, dead pages decay toward zero.
+  * `ReqState.delta` — the page's raw change rate, captured at attach time.
+    The packed planes store only mu-products (MU_T, V_INF = mu_t / delta);
+    re-deriving V_INF after a mu refold needs delta back, and stashing the
+    raw column here keeps the refold bit-identical to a from-scratch
+    `layout.pack_shard` (`V_INF = mu_t / max(delta, eps)`, the exact
+    `_page_planes` expression) without growing the packed tensor.
+  * `ReqState.prior` — a static per-page link-score prior (PageRank-ish),
+    1.0 when not supplied. One of the pluggable importance sources below.
+
+Importance sources are linear blends (SNIPPETS.md snippet 1 / Scrapy's
+multi-signal queue strategies, ported as data): an `ImportanceSource`
+weights {request EWMA, link prior, uniform} plus an additive floor that
+keeps never-requested pages crawlable. `REQUEST_EWMA`, `LINK_PRIOR`, and
+`UNIFORM` are the preset ablation points (`sim.driver.
+run_importance_ablation` replays all of them over one realized trace).
+
+`fold_into_planes` is the periodic MU_T refold — the point where drifting
+request mass re-anchors the frozen normalizer. The contract: greedy
+selection is scale-invariant in mu_total, so the fold may pick ANY positive
+normalizer without changing selections *at a fixed mu vector*; what it must
+guarantee is (a) every shard normalizes by the SAME total (else cross-shard
+ranking breaks) and (b) every host computes that total bitwise-identically
+(else multi-host selection diverges). Both hold by construction: each shard
+reduces its own mu column in a fixed order and a single psum combines the
+per-shard partials — the same one-collective shape as
+`CrawlScheduler.from_local_env`'s mu sum. The new replicated total is
+returned so the scheduler can re-anchor its host-side `mu_total` (consumed
+by later `update_pages` derivations) without a device readback.
+
+Everything here is jitted with donated state and runs shard-locally (the
+fold's psum is the only collective; logging and serving are collective-free
+like the sparse feed path), so the serve front never syncs the host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.values import BIG
+from repro.core.values import _EPS as _MU_EPS
+from repro.kernels import layout
+from repro.sched.distributed import _shard_linear_index, _shard_map
+
+
+class ReqState(NamedTuple):
+    """Per-page request-importance planes, sharded like tau_elap."""
+
+    ewma: jax.Array    # (m_state,) f32 decayed request counts
+    delta: jax.Array   # (m_state,) f32 raw change rate (pad fill 1.0,
+    #                    matching `layout.pack_shard`)
+    prior: jax.Array   # (m_state,) f32 link-score prior (pad fill 0.0)
+    valid: jax.Array   # (m_state,) f32 1.0 real page / 0.0 padding. NOT
+    #                    the packed VALID plane: the fused init packs a
+    #                    pre-padded env, so that plane is 1.0 everywhere
+    #                    and padding is excluded via mu = 0 — which is
+    #                    exactly what the fold must reproduce (an additive
+    #                    floor would otherwise make padding crawlable).
+
+
+class ImportanceSource(NamedTuple):
+    """A pluggable mu source: mu = valid * (w_request * ewma
+    + w_prior * prior + w_uniform + floor). Static per fold call —
+    weights are blend *strategies*, not per-round data."""
+
+    w_request: float = 0.0
+    w_prior: float = 0.0
+    w_uniform: float = 0.0
+    floor: float = 0.0
+
+
+# The ablation presets. REQUEST_EWMA keeps a small uniform floor so pages
+# nobody has asked for yet still get crawled (explore term).
+REQUEST_EWMA = ImportanceSource(w_request=1.0, floor=1e-3)
+LINK_PRIOR = ImportanceSource(w_prior=1.0, floor=1e-3)
+UNIFORM = ImportanceSource(w_uniform=1.0)
+
+
+def init_req(delta, prior, m_state: int) -> ReqState:
+    """Host-side build of the request planes (pad like `pack_shard`: delta
+    1.0 so derived planes stay finite, prior 0.0 so padding mass is zero).
+    `delta`/`prior` cover the raw pages of the caller's range; prior=None
+    means the uniform 1.0 prior."""
+    delta = jnp.asarray(delta, jnp.float32)
+    if prior is None:
+        prior = jnp.ones(delta.shape, jnp.float32)
+    return ReqState(
+        ewma=jnp.zeros((m_state,), jnp.float32),
+        delta=layout.pad_to(delta, m_state, 1.0),
+        prior=layout.pad_to(jnp.asarray(prior, jnp.float32), m_state, 0.0),
+        valid=layout.pad_to(jnp.ones(delta.shape, jnp.float32),
+                            m_state, 0.0),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "decay"),
+    donate_argnames=("req",),
+)
+def log_batch(req: ReqState, ids: jax.Array, counts: jax.Array, *,
+              mesh: Mesh, decay: float) -> ReqState:
+    """One logged request batch: decay every page once, scatter-add the
+    batch's counts. `ids`/`counts` are the per-shard routed COO rows
+    (n_shards, cap) — global page ids with the -1 padding sentinel, built
+    host-locally by `CrawlScheduler._route_requests` exactly like the
+    sparse feed batches. Collective-free: each shard touches only its own
+    rows, so hosts may log at independent cadences (their traffic is
+    theirs; the fold is where totals meet)."""
+    axes = tuple(mesh.axis_names)
+
+    def shard_fn(ewma, ids_s, cnt_s):
+        m_local = ewma.shape[0]
+        ids_s = ids_s.reshape(-1)
+        cnt_s = cnt_s.reshape(-1)
+        local_start = _shard_linear_index(axes) * m_local
+        rel = ids_s - local_start
+        idx = jnp.where((rel >= 0) & (rel < m_local), rel, m_local)
+        return (ewma * jnp.float32(decay)).at[idx].add(
+            cnt_s.astype(jnp.float32), mode="drop")
+
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(P(axes), P(axes, None), P(axes, None)),
+                    out_specs=P(axes))
+    return req._replace(ewma=fn(req.ewma, ids, counts))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "decay", "log"),
+    donate_argnames=("req",),
+)
+def serve_batch(req: ReqState, tau_elap: jax.Array, n_cis: jax.Array,
+                env_planes: jax.Array, ids: jax.Array, counts: jax.Array, *,
+                mesh: Mesh, decay: float, log: bool = True):
+    """Answer one routed serve batch: per requested page, the model-posterior
+    probability the cached copy is still fresh,
+
+        p_fresh = P(no change since last crawl | tau, n CIS)
+                = exp(-alpha * (tau + beta * n)) = exp(-alpha * tau_eff)
+
+    (each observed CIS is false with probability nu/gamma = e^{-b}, and
+    beta = b / alpha — the same tau_eff the value kernel scores with, so
+    serving reads the exact belief the scheduler crawls by). Rows a shard
+    does not own answer -1.0; the front reassembles per-request answers
+    from its host's shard rows (no collective — a host answers for its own
+    pages, remote ids are the router's job).
+
+    With `log` (the production default) the serve IS a request: the same
+    call applies one EWMA decay+add step, so serving and logging stay one
+    device dispatch. Returns (req, p_fresh (n_shards, cap))."""
+    axes = tuple(mesh.axis_names)
+
+    def shard_fn(ewma, tau, n, env_shard, ids_s, cnt_s):
+        m_local = ewma.shape[0]
+        ids_s = ids_s.reshape(-1)
+        cnt_s = cnt_s.reshape(-1)
+        local_start = _shard_linear_index(axes) * m_local
+        rel = ids_s - local_start
+        here = (rel >= 0) & (rel < m_local)
+        safe = jnp.clip(rel, 0, m_local - 1)
+        alpha = layout.gather_plane(env_shard, safe, layout.ALPHA)
+        beta = layout.gather_plane(env_shard, safe, layout.BETA)
+        t_eff = jnp.minimum(
+            tau[safe] + jnp.minimum(beta * n[safe].astype(jnp.float32), BIG),
+            BIG)
+        p = jnp.where(here, jnp.exp(-alpha * t_eff), -1.0)
+        if log:
+            idx = jnp.where(here, rel, m_local)
+            ewma = (ewma * jnp.float32(decay)).at[idx].add(
+                cnt_s.astype(jnp.float32), mode="drop")
+        return ewma, p.reshape(1, -1)
+
+    fn = _shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(axes, None, None, None),
+                  P(axes, None), P(axes, None)),
+        out_specs=(P(axes), P(axes, None)))
+    ewma, p = fn(req.ewma, tau_elap, n_cis, env_planes, ids, counts)
+    return req._replace(ewma=ewma), p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "source"),
+    donate_argnames=("bstate",),
+)
+def fold_into_planes(bstate, *, mesh: Mesh, source: ImportanceSource):
+    """The periodic MU_T refold: blend the request planes into a new mu
+    vector, re-anchor the normalizer, and rewrite every mu-derived row of
+    the packed state — the device-side analogue of rebuilding the scheduler
+    with `Env(mu=blend)`.
+
+    Per shard: mu = req.valid * (blend + floor) (padding stays exactly
+    zero — `ReqState.valid`, not the packed VALID plane, which is 1.0
+    even on padding),
+    one psum re-anchors mu_total, MU_T and V_INF are rewritten via
+    `layout.refold_mu` (bit-identical to `_page_planes` at the new mu_t),
+    and the block-bound rows are re-anchored exactly as a fresh
+    `tiered.init_block_bounds` would build them — asym/slope recomputed,
+    blk_max dropped to 0, last_eval to the never-evaluated sentinel,
+    beta_max recomputed (unchanged in value: beta is mu-free), CIS mass
+    reset — so every block re-evaluates under the new importance next
+    round. A fold therefore equals a from-scratch construction at the
+    blended mu for every env-derived row (property-tested), while the
+    selection-loop rows (thresh/hyst/col_winners/depth_hot) and the page
+    clocks ride through untouched.
+
+    Returns (bstate, mu_total) with mu_total fully replicated — assign it
+    to the host-side normalizer without a device readback. All hosts must
+    call folds together (the psum is a collective), like `run_rounds`."""
+    from repro.sched import tiered
+
+    if bstate.req is None:
+        raise ValueError(
+            "fold_into_planes needs the request-importance planes "
+            "(FusedState.req) — construct the scheduler with "
+            "importance=True (or restore a request-plane checkpoint)")
+    axes = tuple(mesh.axis_names)
+    pspec = P(axes)
+
+    def shard_fn(env_shard, ewma, delta, prior, valid):
+        nb_local = env_shard.shape[0]
+        blend = (jnp.float32(source.w_request) * ewma
+                 + jnp.float32(source.w_prior) * prior
+                 + jnp.float32(source.w_uniform)
+                 + jnp.float32(source.floor))
+        mu = valid * blend
+        total = jax.lax.psum(jnp.sum(mu), axes)
+        # The exact `derive` normalization expression, at the new anchor.
+        # The barrier stops XLA from fusing the two divisions (mu / total
+        # / delta) into a reassociated form: materializing mu_t first
+        # keeps the fold bit-identical to the eager
+        # `derive` + `pack_shard` sequence of a fresh construction.
+        mu_t = jax.lax.optimization_barrier(
+            mu / jnp.maximum(total, _MU_EPS))
+        env2 = layout.refold_mu(env_shard, mu_t, delta)
+        return (env2,
+                layout.asym_block_bounds(env2),
+                tiered._block_slope(layout.block_mu_max(env2)),
+                jnp.zeros((nb_local,), jnp.float32),
+                jnp.full((nb_local,), -1, jnp.int32),
+                layout.block_beta_max(env2),
+                jnp.zeros((nb_local,), jnp.float32),
+                total)
+
+    fn = _shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axes, None, None, None), pspec, pspec, pspec, pspec),
+        out_specs=(P(axes, None, None, None), pspec, pspec, pspec, pspec,
+                   pspec, pspec, P()))
+    (env2, asym, slope, blk_max, last_eval, beta_max, cis_mass,
+     mu_total) = fn(bstate.env_planes, bstate.req.ewma, bstate.req.delta,
+                    bstate.req.prior, bstate.req.valid)
+    return bstate._replace(
+        env_planes=env2, bounds=asym, slope=slope, blk_max=blk_max,
+        last_eval=last_eval, beta_max=beta_max, cis_mass=cis_mass,
+    ), mu_total

@@ -105,6 +105,10 @@ class CrawlScheduler:
         outcome_cap: int | None = None,
         k_max: int | None = None,
         emission: str = "fixed",
+        importance: bool = False,
+        importance_prior=None,
+        importance_decay: float = 0.9,
+        request_cap: int | None = None,
     ):
         if backend is None:
             if use_kernel or use_fused:
@@ -150,11 +154,20 @@ class CrawlScheduler:
         self.rounds_completed = 0
         self.round, binit = be.init_round(backend, env, mesh)
         self.m_state = binit.m_state
+        # Request-driven importance (sched.importance): the serve front's
+        # EWMA plane + raw-delta/prior columns ride FusedState.req.
+        # request_cap is the serve/log batches' capacity contract (same
+        # role as feed_cap). Attached BEFORE the donation-commit below so
+        # the first run_rounds signature is already the request-carrying
+        # one.
+        self._init_request_axis(importance, importance_decay, request_cap)
         # Process-local shard/page range (the `host_slice` view): on a
         # multi-process mesh this process's devices own the contiguous
         # shard range [s0, s1) and therefore pages
         # [s0 * m_shard, s1 * m_shard) of the flat padded page space.
         self._host_shards = host_shard_range(mesh)
+        if importance:
+            self._attach_request_plane(env.delta, importance_prior)
         # Host-side conveniences: the derived (padded) env oracle and the
         # frozen importance normalizer (see backends module docstring). For
         # dense/table backends `d`/`table` read through to the live backend
@@ -163,6 +176,10 @@ class CrawlScheduler:
         self._d_oracle = binit.d if isinstance(self.round.backend,
                                                be.FusedState) else None
         self._d_pending = []  # (ids, d_new) updates not yet folded into it
+        # Donation-normalize the freshly built state (commit the clock,
+        # canonicalize every leaf's sharding) so the first run_rounds
+        # call's compilation is the only one — see `backends.commit_state`.
+        self.round = be.commit_state(self.round)
 
     @classmethod
     def from_local_env(
@@ -179,6 +196,10 @@ class CrawlScheduler:
         outcome_cap: int | None = None,
         k_max: int | None = None,
         emission: str = "fixed",
+        importance: bool = False,
+        importance_prior=None,
+        importance_decay: float = 0.9,
+        request_cap: int | None = None,
     ) -> "CrawlScheduler":
         """Host-local construction (the elastic-lifecycle cold start): each
         process supplies ONLY its `host_slice` of the raw env — the raw
@@ -216,6 +237,7 @@ class CrawlScheduler:
         self.update_cap = update_cap
         self.outcome_cap = outcome_cap
         self._init_bandwidth_axis(k_max, emission)
+        self._init_request_axis(importance, importance_decay, request_cap)
         self.rounds_completed = 0
         self._host_shards = host_shard_range(mesh)
         block_rows = backend.block_rows or layout.DEFAULT_BLOCK_ROWS
@@ -251,9 +273,16 @@ class CrawlScheduler:
             crawl_clock=jnp.int32(0),
             backend=bstate,
         )
+        if importance:
+            # Host-local attach: env_local's columns ARE this host's range.
+            self._attach_request_plane(
+                env_local.delta, importance_prior, local=True)
         # No dense oracle under host-local construction (`.d` raises).
         self._d_oracle = None
         self._d_pending = []
+        # Same donation-commit as `__init__`: the first run_rounds call's
+        # compilation must be the only one.
+        self.round = be.commit_state(self.round)
         return self
 
     # -- legacy views ------------------------------------------------------
@@ -269,8 +298,9 @@ class CrawlScheduler:
         if self._d_oracle is None:
             raise RuntimeError(
                 "the dense derived-env oracle is unavailable under "
-                "host-local construction (from_local_env): no host ever "
-                "holds the global env. Read the packed planes instead"
+                "host-local construction (from_local_env) and after an "
+                "importance fold (fold_importance rewrites the device mu): "
+                "read the packed planes instead"
             )
         for ids, d_new in self._d_pending:
             self._d_oracle = DerivedEnv(
@@ -412,6 +442,241 @@ class CrawlScheduler:
             P(self.axes))
         self.round = dataclasses.replace(
             self.round, backend=bst._replace(stale=stale))
+
+    # -- request-driven importance (sched.importance) ----------------------
+    def _init_request_axis(self, importance: bool, decay: float,
+                           request_cap: int | None) -> None:
+        if not (0.0 < decay <= 1.0):
+            raise ValueError(
+                f"importance_decay must be in (0, 1], got {decay}")
+        if request_cap is not None and request_cap < 1:
+            raise ValueError(
+                f"request_cap must be >= 1, got {request_cap}")
+        if importance and not isinstance(self.backend, be.FusedBackend):
+            raise ValueError(
+                "importance=True requires FusedBackend: the request plane "
+                "rides the packed-plane state (FusedState.req)"
+            )
+        self.importance_decay = float(decay)
+        self.request_cap = request_cap
+
+    def _attach_request_plane(self, delta, prior, *, local=False) -> None:
+        """Attach the request-importance planes (`FusedState.req`) at
+        construction: the EWMA column zeroed, the raw per-page change rate
+        and link prior stashed host-locally (pad fills matching
+        `importance.init_req`: delta 1.0, prior 0.0; prior=None is the
+        uniform 1.0 prior). `local=True` takes `delta`/`prior` as this
+        host's raw range (the `from_local_env` contract); otherwise they
+        are the global raw columns and each host slices its own range —
+        either way no env bytes cross hosts."""
+        from repro.sched import importance as imp
+
+        bst = self.round.backend
+        lo, hi = self.host_slice.start, self.host_slice.stop
+        delta = np.asarray(delta, np.float32).reshape(-1)
+        if prior is not None:
+            prior = np.asarray(prior, np.float32).reshape(-1)
+        if not local:
+            delta = delta[lo:min(hi, self.m)]
+            prior = None if prior is None else prior[lo:min(hi, self.m)]
+        if prior is None:
+            prior = np.ones(delta.shape, np.float32)
+        width = hi - lo
+
+        def col(raw, fill):
+            out = np.full((width,), fill, np.float32)
+            out[:raw.shape[0]] = raw
+            return host_local_array(out, self.mesh, P(self.axes))
+
+        req = imp.ReqState(
+            ewma=col(np.zeros(0, np.float32), 0.0),
+            delta=col(delta, 1.0),
+            prior=col(prior, 0.0),
+            valid=col(np.ones(delta.shape, np.float32), 0.0),
+        )
+        self.round = dataclasses.replace(
+            self.round, backend=bst._replace(req=req))
+
+    def _ensure_request_plane(self) -> None:
+        """Attach an all-default request plane (zero EWMA, unit delta, zero
+        prior) to a scheduler constructed without `importance=True` — the
+        restore-alignment hook for request-plane checkpoints, same lazy
+        trick as `_ensure_emit_residue`/`_ensure_stale_plane`. The leaf
+        VALUES only matter for their shape/dtype/sharding here: the restore
+        path overwrites them from the snapshot."""
+        bst = self.round.backend
+        if bst.req is not None:
+            return
+        from repro.sched import importance as imp
+
+        s0, s1 = host_shard_range(self.mesh)
+        width = (s1 - s0) * self.m_shard
+
+        def col(fill):
+            return host_local_array(
+                np.full((width,), fill, np.float32), self.mesh,
+                P(self.axes))
+
+        req = imp.ReqState(ewma=col(0.0), delta=col(1.0), prior=col(0.0),
+                           valid=col(0.0))
+        self.round = dataclasses.replace(
+            self.round, backend=bst._replace(req=req))
+
+    def _req_state(self):
+        bst = self.round.backend
+        if not isinstance(bst, be.FusedState) or bst.req is None:
+            raise RuntimeError(
+                "the request-importance plane is absent — construct the "
+                "scheduler with importance=True (FusedBackend) or restore "
+                "a request-plane checkpoint"
+            )
+        return bst
+
+    def _route_requests(self, page_ids, counts):
+        """Route a host's raw request batch to per-shard COO rows — the
+        request-path twin of `_sparse_feed_batch`: occurrence-wise (NO
+        dedup: duplicate ids are legitimate repeat traffic, and the
+        scatter-add in `importance.log_batch` accumulates them; keeping the
+        row order also preserves the permutation the serve path needs to
+        reassemble per-request answers). Returns device (n_shards, cap)
+        global-id/count arrays with the -1 padding sentinel, plus the
+        (local_mask, local_shard, pos) routing map. Rows for pages outside
+        this host's range are dropped from the device arrays (their
+        `local_mask` is False): a host logs and answers for its own pages;
+        cross-host requests are the upstream router's job (see README).
+        Capacity: `request_cap` pins the static batch width per shard
+        (same contract as feed_cap)."""
+        ids = np.asarray(page_ids).reshape(-1)
+        if not np.issubdtype(ids.dtype, np.integer):
+            raise FeedValidationError(
+                f"page ids must be integers, got dtype {ids.dtype}")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.m):
+            raise FeedValidationError(
+                f"request ids must lie in [0, {self.m}); got range "
+                f"[{ids.min()}, {ids.max()}]")
+        if counts is None:
+            cnt = np.ones(ids.shape, np.float32)
+        else:
+            cnt = np.asarray(counts, np.float32).reshape(-1)
+            if cnt.shape != ids.shape:
+                raise FeedValidationError(
+                    f"counts shape {cnt.shape} != ids shape {ids.shape}")
+        s0, s1 = self._host_shards
+        n_loc = s1 - s0
+        shard = ids // self.m_shard
+        local_mask = (shard >= s0) & (shard < s1)
+        ids_l = ids[local_mask]
+        cnt_l = cnt[local_mask]
+        shard_l = (shard[local_mask] - s0).astype(np.int64)
+        per_shard = np.bincount(shard_l, minlength=n_loc)
+        need = int(per_shard.max()) if ids_l.size else 0
+        cap = self._resolve_cap(
+            max(1, need), self.request_cap, "request_cap",
+            "a request batch routes {need} rows to one shard")
+        # Occurrence index of each row within its shard bucket (stable, so
+        # a page's repeat requests keep their arrival order).
+        order = np.argsort(shard_l, kind="stable")
+        offsets = np.concatenate(
+            [[0], np.cumsum(per_shard)[:-1]]).astype(np.int64)
+        pos = np.empty(ids_l.shape, np.int64)
+        pos[order] = np.arange(ids_l.size, dtype=np.int64) \
+            - offsets[shard_l[order]]
+        ids_arr = np.full((n_loc, cap), -1, np.int32)
+        cnt_arr = np.zeros((n_loc, cap), np.float32)
+        ids_arr[shard_l, pos] = ids_l.astype(np.int32)
+        cnt_arr[shard_l, pos] = cnt_l
+        return (
+            host_local_array(ids_arr, self.mesh, P(self.axes, None)),
+            host_local_array(cnt_arr, self.mesh, P(self.axes, None)),
+            (local_mask, shard_l, pos),
+        )
+
+    def log_requests(self, page_ids, counts=None) -> None:
+        """Log one batch of user requests into the EWMA importance plane:
+        route host-locally, then one collective-free donated dispatch
+        (`importance.log_batch` — every page decays once, requested pages
+        gain their counts). Hosts log at independent cadences; totals only
+        meet at `fold_importance`. No host sync, no device readback."""
+        from repro.sched import importance as imp
+
+        bst = self._req_state()
+        ids_dev, cnt_dev, _ = self._route_requests(page_ids, counts)
+        req = imp.log_batch(bst.req, ids_dev, cnt_dev,
+                            mesh=self.mesh, decay=self.importance_decay)
+        # Re-commit: the shard_map output shardings differ from the
+        # canonical post-round objects as Python objects, and the jit cache
+        # keys on objects — without this, the next run_rounds would compile
+        # a second (bit-identical) signature. See `backends.commit_state`.
+        self.round = be.commit_state(dataclasses.replace(
+            self.round, backend=bst._replace(req=req)))
+
+    def serve_requests(self, page_ids, counts=None, *, log=True,
+                       sync=True):
+        """Answer a request batch with the model-posterior freshness
+        probability per page, P(no change since last crawl | tau, n CIS)
+        = exp(-alpha * tau_eff) — the exact belief the value kernel crawls
+        by. With `log` (the default) the serve IS a request: the same
+        device dispatch applies the EWMA step, so serving and logging stay
+        one program. `sync=True` returns a host float32 array aligned with
+        `page_ids` (NaN for pages outside this host's range — the router's
+        job); `sync=False` returns the raw device (n_shards, cap) answers
+        plus the routing map, deferring any transfer (the bench's
+        zero-host-sync mode, and what `serve.requests.RequestFront`
+        batches on)."""
+        from repro.sched import importance as imp
+
+        bst = self._req_state()
+        ids_dev, cnt_dev, route = self._route_requests(page_ids, counts)
+        req, p = imp.serve_batch(
+            bst.req, self.round.tau_elap, self.round.n_cis,
+            bst.env_planes, ids_dev, cnt_dev,
+            mesh=self.mesh, decay=self.importance_decay, log=log)
+        # Re-commit so the next round reuses its compiled signature (see
+        # log_requests).
+        self.round = be.commit_state(dataclasses.replace(
+            self.round, backend=bst._replace(req=req)))
+        if not sync:
+            return p, route
+        local_mask, shard_l, pos = route
+        out = np.full(local_mask.shape, np.nan, np.float32)
+        s0, _ = self._host_shards
+        if not self.is_multiprocess:
+            out[local_mask] = np.asarray(p)[shard_l, pos]
+            return out
+        # Multi-process: read only this host's addressable shard rows.
+        p_loc = np.concatenate(
+            [np.asarray(sh.data) for sh in sorted(
+                p.addressable_shards,
+                key=lambda sh: sh.index[0].start or 0)], axis=0)
+        out[local_mask] = p_loc[shard_l, pos]
+        return out
+
+    def fold_importance(self, source=None):
+        """Fold the live request planes into the packed `MU_T` plane and
+        re-anchor the frozen normalizer (`importance.fold_into_planes`):
+        after this, selection crawls by the blended request-driven mu. The
+        new mu_total arrives as a fully replicated device scalar and is
+        assigned WITHOUT a readback (later `update_pages` derivations
+        consume it as a traced operand). All hosts must fold together —
+        the fold's psum is its one collective, like `run_rounds`. The
+        dense `.d` oracle (when it exists) is dropped: it describes the
+        construction-time mu, not the blend. Returns the new mu_total."""
+        from repro.sched import importance as imp
+
+        if source is None:
+            source = imp.REQUEST_EWMA
+        bst = self._req_state()
+        bst2, mu_total = imp.fold_into_planes(
+            bst, mesh=self.mesh, source=source)
+        # Re-commit so the next round reuses its compiled signature (see
+        # log_requests): without it a fold would cost one (bit-identical)
+        # recompile of the macro round.
+        self.round = be.commit_state(
+            dataclasses.replace(self.round, backend=bst2))
+        self.mu_total = mu_total
+        self._d_oracle = None
+        self._d_pending = []
+        return mu_total
 
     def set_bandwidth(self, bandwidth: float) -> None:
         """App. D: adapting to a new budget is just a new k — no re-solve.
@@ -1295,6 +1560,22 @@ class CrawlScheduler:
                 elif snap_stale is None and backend_state.stale is not None:
                     snap = snap._replace(stale=np.zeros(
                         backend_state.stale.shape, np.int32))
+                # And for the request-importance planes (`FusedState.req`):
+                # a request-plane checkpoint restores into a plain
+                # scheduler by attaching the plane (shape/sharding
+                # template; values come from the snapshot), and a
+                # pre-plane snapshot into an importance scheduler keeps
+                # the live delta/prior columns with a zeroed EWMA (the
+                # snapshot predates request logging; strict=False
+                # checkpoint loads hand exactly this shape through).
+                snap_req = getattr(snap, "req", None)
+                if snap_req is not None and backend_state.req is None:
+                    self._ensure_request_plane()
+                    backend_state = self.round.backend
+                elif snap_req is None and backend_state.req is not None:
+                    live = backend_state.req
+                    snap = snap._replace(req=live._replace(
+                        ewma=np.zeros(live.ewma.shape, np.float32)))
             # Re-shard each restored leaf like the corresponding live leaf
             # (old checkpoints without backend state keep the cold init).
             backend_state = jax.tree.map(
@@ -1322,3 +1603,8 @@ class CrawlScheduler:
             backend=backend_state,
         )
         self.rounds_completed = int(np.asarray(sd["crawl_clock"]))
+        # Donation-normalize the restored state (commit the clock, map the
+        # device_put shardings onto the canonical post-round objects) so
+        # the first post-restore round reuses the warm jit cache instead of
+        # recompiling once — see `backends.commit_state`.
+        self.round = be.commit_state(self.round)

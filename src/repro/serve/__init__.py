@@ -1,3 +1,4 @@
 from repro.serve.engine import GenerationResult, generate, sample_token
+from repro.serve.requests import RequestFront, ServeStats
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,118 @@
+"""The request front: live traffic in, freshness answers out, `mu` learned.
+
+This is the serving-side half of request-driven importance
+(`sched.importance`). A `RequestFront` wraps a `CrawlScheduler`
+constructed with `importance=True` and exposes the two-call production
+API:
+
+  * `serve_pages(ids) -> p_fresh` — per requested page, the model
+    posterior P(cached copy still fresh | tau, observed CIS)
+    = exp(-alpha * tau_eff), the exact belief the value kernel crawls by
+    (`fresh(ids) -> bool` thresholds it). Serving *is* logging: the same
+    device dispatch applies the request-EWMA step, so the importance
+    estimate is a free by-product of answering traffic.
+  * `log_requests(ids)` — traffic that needs no answer (e.g. a replicated
+    access log) still teaches the scheduler what matters.
+
+Design mirrors `serve.engine`'s decode loop: one compiled program reused
+for every batch (the per-shard `request_cap` pins the static batch shape,
+same capacity contract as the scheduler's `feed_cap`), state donated so
+serving is allocation-free after warmup, and nothing in the hot path reads
+a device value back — `serve_pages(sync=False)` leaves the answers on
+device (the bench's zero-host-sync mode), `sync=True` pays one transfer to
+reassemble per-request answers host-side. Scheduling rounds interleave
+freely between batches: the front holds no copy of the scheduler state, it
+drives the live donated pytree.
+
+Periodically (`fold_every` served/logged batches, or an explicit
+`fold()`), the accumulated EWMA folds into the packed `MU_T` plane and the
+crawler starts optimizing freshness *weighted by what users actually
+ask for*. On a multi-process mesh every host must fold at the same batch
+count (the fold has one psum; `fold_every` makes that cadence implicit as
+long as hosts serve the same number of batches — otherwise call `fold()`
+explicitly at a barrier of your choosing) while logging/serving between
+folds stays collective-free and per-host independent.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.sched import importance as imp
+
+
+class ServeStats(NamedTuple):
+    """Host-side counters of the front (plain ints, never device reads)."""
+
+    batches: int        # serve/log batches dispatched
+    requests: int       # raw request rows routed (incl. remote drops)
+    folds: int          # MU_T refolds performed
+
+
+class RequestFront:
+    """Batched serve/log front over a request-importance scheduler.
+
+    `source` picks the importance blend used at fold time
+    (`importance.REQUEST_EWMA` by default; `LINK_PRIOR` / `UNIFORM` are
+    the ablation arms). `fold_every=0` disables automatic folds (call
+    `fold()` yourself). `fresh_threshold` is the posterior cut for the
+    boolean `fresh` view."""
+
+    def __init__(self, sched, *, source: imp.ImportanceSource | None = None,
+                 fold_every: int = 0, fresh_threshold: float = 0.5):
+        # Validates the plane exists up front (fail at build, not first
+        # request).
+        sched._req_state()
+        self.sched = sched
+        self.source = source if source is not None else imp.REQUEST_EWMA
+        self.fold_every = int(fold_every)
+        self.fresh_threshold = float(fresh_threshold)
+        self._batches = 0
+        self._requests = 0
+        self._folds = 0
+
+    # -- the serving API ---------------------------------------------------
+    def serve_pages(self, page_ids, counts=None, *, sync: bool = True):
+        """Answer a request batch with per-page freshness posteriors.
+
+        sync=True: float32 array aligned with `page_ids` (NaN for pages
+        this host does not own — the upstream router's rows). sync=False:
+        the raw device (n_shards, cap) answers + routing map, no host
+        transfer (zero-sync mode). Either way the batch's request counts
+        are logged into the EWMA plane in the same dispatch."""
+        out = self.sched.serve_requests(page_ids, counts, log=True,
+                                        sync=sync)
+        self._after_batch(page_ids)
+        return out
+
+    def fresh(self, page_ids, *, sync: bool = True):
+        """`serve_pages` thresholded to the boolean "is it fresh?" view."""
+        p = self.serve_pages(page_ids, sync=sync)
+        if not sync:
+            return p
+        return p >= self.fresh_threshold
+
+    def log_requests(self, page_ids, counts=None) -> None:
+        """Log traffic that needs no freshness answer."""
+        self.sched.log_requests(page_ids, counts)
+        self._after_batch(page_ids)
+
+    def fold(self):
+        """Fold the EWMA plane into `MU_T` now (see
+        `CrawlScheduler.fold_importance`). Returns the re-anchored
+        mu_total (replicated device scalar)."""
+        self._folds += 1
+        return self.sched.fold_importance(self.source)
+
+    # -- bookkeeping -------------------------------------------------------
+    def _after_batch(self, page_ids) -> None:
+        self._batches += 1
+        self._requests += int(np.asarray(page_ids).size)
+        if self.fold_every and self._batches % self.fold_every == 0:
+            self.fold()
+
+    @property
+    def stats(self) -> ServeStats:
+        return ServeStats(batches=self._batches, requests=self._requests,
+                          folds=self._folds)

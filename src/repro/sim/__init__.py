@@ -3,7 +3,9 @@ from repro.sim.driver import (
     LoopConfig,
     LoopResult,
     freshness_regret,
+    route_cis_batch,
     run_closed_loop,
+    run_importance_ablation,
 )
 from repro.sim.faults import (
     DEFAULT_CHANNELS,

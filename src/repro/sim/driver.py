@@ -75,6 +75,33 @@ class LoopConfig(NamedTuple):
     fault_plan: Optional[object] = None
     cis_mask: Optional[object] = None
     rate_gain: Optional[object] = None
+    #   cis_delay — per-page CIS delivery latency in rounds: scalar or (m,)
+    #     int. When set, the loop routes signals through a delay line (a
+    #     signal generated at round g lands at round g + delay[page] —
+    #     `faults.route_through_channels` semantics, here at closed-loop
+    #     granularity), and it CHANGES cis_mask semantics from drop to
+    #     re-bucket: signals landing on a masked (outage) round are held
+    #     and delivered at the page's first later unmasked round, instead
+    #     of lost. Total delivered CIS counts are conserved modulo horizon
+    #     truncation (signals still in flight when the loop ends). Pass
+    #     cis_delay=0 for pure outage re-bucketing with no added latency;
+    #     leave it None to keep the legacy lossy-mask behavior.
+    cis_delay: Optional[object] = None
+    # Request-driven importance (sched.importance / serve.requests):
+    #   request_trace — (n_batches, m) per-batch user-request counts. The
+    #     loop records `LoopResult.request_freshness`, the per-tick
+    #     freshness integral weighted by the CURRENT batch's realized
+    #     traffic distribution (the paper's freshness-at-request-time
+    #     objective) — always, learning or not, so static-mu baselines are
+    #     comparable arm-for-arm.
+    #   importance_source — an `importance.ImportanceSource`: after each
+    #     batch the trace row is logged into the scheduler's request-EWMA
+    #     plane, and every `fold_every` batches it folds into MU_T (the
+    #     scheduler must be constructed with importance=True). None = no
+    #     learning (static mu), the ablation baseline.
+    request_trace: Optional[object] = None
+    importance_source: Optional[object] = None
+    fold_every: int = 4
 
 
 class LoopResult(NamedTuple):
@@ -83,6 +110,51 @@ class LoopResult(NamedTuple):
     obs: tuple                   # flat (ids, tau, n_cis, fresh) crawl log
     dropped_batches: int = 0     # outcome batches dropped as invalid/dup
     group_freshness: Optional[np.ndarray] = None  # (ticks, n_groups)
+    request_freshness: Optional[np.ndarray] = None  # (ticks,) traffic-weighted
+
+
+def route_cis_batch(gen_cis: np.ndarray, mask_rows, delay_buf: np.ndarray,
+                    mask_carry: np.ndarray, delay_cols: dict):
+    """One batch of the delayed-CIS routing (`LoopConfig.cis_delay`).
+
+    Two stages, both count-conserving:
+      1. channel latency — a signal generated at (local) round g lands at
+         g + delay[page]; `delay_buf` ((maxd, m), row i = signals generated
+         maxd - i rounds before this batch, still in flight) carries the
+         tail across batches;
+      2. outage re-bucketing — with `mask_rows` ((R, m) bool, False =
+         channel down), signals landing on a masked round queue in
+         `mask_carry` and deliver at the page's first later unmasked round
+         (the closed-loop analogue of `faults.route_through_channels`'s
+         delay semantics — late, never lost).
+
+    Returns (delivered (R, m), delay_buf, mask_carry). Invariant
+    (property-tested): sum(gen_cis) + sum(in-flight before) ==
+    sum(delivered) + sum(in-flight after) — nothing is dropped, only
+    shifted; the horizon truncates whatever is still in flight when the
+    loop ends."""
+    R, m = gen_cis.shape
+    maxd = delay_buf.shape[0]
+    ext = np.concatenate([delay_buf, gen_cis], axis=0)
+    delivered = np.zeros((R, m), np.int64)
+    for d, cols in delay_cols.items():
+        if cols.size:
+            delivered[:, cols] = ext[maxd + np.arange(R) - d][:, cols]
+    delay_buf = ext[R:].copy()
+    # The carried tail still holds rows already delivered for pages with
+    # small delays (tail row i = signals generated R - maxd + i rounds
+    # into this batch; a page with delay d consumed it iff i < maxd - d).
+    # Zero those so the buffer holds in-flight signals ONLY — next batch
+    # reads past them anyway, and the conservation invariant stays exact.
+    for d, cols in delay_cols.items():
+        if cols.size and maxd - d > 0:
+            delay_buf[:maxd - d][:, cols] = 0
+    if mask_rows is not None:
+        for r in range(R):
+            avail = delivered[r] + mask_carry
+            delivered[r] = np.where(mask_rows[r], avail, 0)
+            mask_carry = np.where(mask_rows[r], 0, avail)
+    return delivered, delay_buf, mask_carry
 
 
 def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
@@ -153,6 +225,40 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
                 f"shape {cfg.rate_gain.shape if hasattr(cfg.rate_gain, 'shape') else np.shape(cfg.rate_gain)}")
         if (rate_gain < 0).any():
             raise ValueError("rate_gain must be >= 0")
+    cis_delay = None
+    delay_buf = None
+    delay_cols = None
+    mask_carry = None
+    if cfg.cis_delay is not None:
+        cis_delay = np.broadcast_to(
+            np.asarray(cfg.cis_delay, np.int64), (m,))
+        if (cis_delay < 0).any():
+            raise ValueError("cis_delay must be >= 0 rounds")
+        maxd = int(cis_delay.max())
+        # Delay line across batches: row i holds the signals generated at
+        # global round (b * R) - maxd + i, still in flight.
+        delay_buf = np.zeros((maxd, m), np.int64)
+        delay_cols = {int(d): np.nonzero(cis_delay == d)[0]
+                      for d in np.unique(cis_delay)}
+        # Signals that landed on a masked (outage) round, awaiting the
+        # page's channel to come back up.
+        mask_carry = np.zeros((m,), np.int64)
+
+    request_trace = None
+    req_fresh_trace = None
+    if cfg.request_trace is not None:
+        request_trace = np.asarray(cfg.request_trace, np.float64)
+        if request_trace.shape != (cfg.n_batches, m):
+            raise ValueError(
+                f"request_trace must be ({cfg.n_batches}, {m}) (one count "
+                f"per batch per page), got shape {request_trace.shape}")
+        if (request_trace < 0).any():
+            raise ValueError("request_trace counts must be >= 0")
+        req_fresh_trace = []
+    if cfg.importance_source is not None and request_trace is None:
+        raise ValueError(
+            "importance_source needs a request_trace to learn from")
+
     feed_inj = out_inj = out_gate = None
     if cfg.fault_plan is not None:
         from repro.sched.degraded import OutcomeGate
@@ -194,15 +300,23 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
             uns = rng.poisson(np.broadcast_to(rate_uns * g, (R, m)))
         fls = rng.poisson(rate_fls, size=(R, m))
         gen_cis = sig + fls
-        if cis_mask is not None:
-            # Outage: the change happened (sig/uns already drawn) but the
-            # signal never reached the feed — exactly the censoring the
-            # degraded-mode watchdog exists to detect.
-            gen_cis = gen_cis * cis_mask[b * R:(b + 1) * R]
+        rows = (cis_mask[b * R:(b + 1) * R]
+                if cis_mask is not None else None)
+        if cis_delay is not None:
+            delivered, delay_buf, mask_carry = route_cis_batch(
+                gen_cis, rows, delay_buf, mask_carry, delay_cols)
+        elif rows is not None:
+            # Legacy lossy outage (no cis_delay): the change happened
+            # (sig/uns already drawn) but the signal never reached the
+            # feed — exactly the censoring the degraded-mode watchdog
+            # exists to detect.
+            delivered = gen_cis * rows
+        else:
+            delivered = gen_cis
         feeds = np.empty((R, m), np.int32)
         feeds[0] = pending_cis
-        feeds[1:] = gen_cis[:-1]
-        pending_cis = gen_cis[-1]
+        feeds[1:] = delivered[:-1]
+        pending_cis = delivered[-1]
         if feed_inj is not None:
             feeds = feed_inj.apply(feeds).astype(np.int32, copy=False)
 
@@ -271,6 +385,14 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
             n_changes = sig[r] + uns[r]
             frac = np.where(~stale, 1.0 / (n_changes + 1.0), 0.0)
             fresh_trace.append(float(np.sum(mu_t * frac)))
+            if req_fresh_trace is not None:
+                # Freshness at request time: the same per-tick integral,
+                # weighted by the batch's realized traffic distribution
+                # (zero-traffic batches contribute zero — nobody asked).
+                row = request_trace[b]
+                tot = row.sum()
+                req_fresh_trace.append(
+                    float(np.sum(row * frac) / tot) if tot > 0 else 0.0)
             if group_trace is not None:
                 group_trace.append(np.bincount(
                     groups_np, weights=mu_t * frac, minlength=n_groups))
@@ -284,6 +406,18 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
         # a self-contained observation (`online_est.SparseOutcomes`).
         prev_out = (ids_np, changed, out_tau, out_n)
 
+        if cfg.importance_source is not None:
+            # The batch's traffic teaches the scheduler what matters: log
+            # the realized request counts into the EWMA plane, and fold
+            # them into MU_T every fold_every batches — from batch b+1 the
+            # crawler optimizes freshness weighted by observed demand.
+            row = request_trace[b]
+            req_ids = np.nonzero(row)[0]
+            if req_ids.size:
+                sched.log_requests(req_ids, row[req_ids])
+            if cfg.fold_every and (b + 1) % cfg.fold_every == 0:
+                sched.fold_importance(cfg.importance_source)
+
         if mle:
             done = len(fresh_trace) // R
             if done % cfg.mle_every == 0:
@@ -294,7 +428,10 @@ def run_closed_loop(sched, env_true: Env, cfg: LoopConfig,
     return LoopResult(freshness=np.asarray(fresh_trace), crawls=crawls,
                       obs=obs, dropped_batches=dropped_batches,
                       group_freshness=(np.asarray(group_trace)
-                                       if group_trace is not None else None))
+                                       if group_trace is not None else None),
+                      request_freshness=(np.asarray(req_fresh_trace)
+                                         if req_fresh_trace is not None
+                                         else None))
 
 
 def _refit_mle(sched, log_ids, log_tau, log_n, log_z, window: int) -> None:
@@ -321,6 +458,34 @@ def _refit_mle(sched, log_ids, log_tau, log_n, log_z, window: int) -> None:
     n_m[inv[order], col] = n[order]
     z_m[inv[order], col] = z[order]
     sched.ingest_crawl_results(uniq, tau_m, n_m, z_m)
+
+
+def run_importance_ablation(sched_factory, env_true: Env, cfg: LoopConfig,
+                            sources: dict | None = None,
+                            mu_t: Optional[np.ndarray] = None) -> dict:
+    """A/B the importance sources over ONE realized trace.
+
+    Every arm replays the identical event/traffic realization (the loop's
+    rng is seeded from cfg.seed and the request trace is part of cfg), so
+    per-arm `request_freshness` traces differ only by what the scheduler
+    learned to crawl — the paper's freshness-at-request-time objective,
+    compared like-for-like. `sched_factory()` must build a FRESH scheduler
+    per arm (state is donated; arms cannot share one). `sources` maps arm
+    name -> `importance.ImportanceSource`, or None for the static-mu
+    baseline (no logging, no folds); default arms: static uniform vs
+    learned request-EWMA. Returns {name: LoopResult}."""
+    from repro.sched import importance as imp
+
+    if sources is None:
+        sources = {"static": None, "request_ewma": imp.REQUEST_EWMA}
+    if cfg.request_trace is None:
+        raise ValueError("run_importance_ablation needs cfg.request_trace")
+    out = {}
+    for name, src in sources.items():
+        out[name] = run_closed_loop(
+            sched_factory(), env_true,
+            cfg._replace(importance_source=src), mu_t=mu_t)
+    return out
 
 
 def freshness_regret(result: LoopResult, oracle: LoopResult,
